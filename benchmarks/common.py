@@ -1,0 +1,127 @@
+"""Shared benchmark harness: trained reduced models + cached artifacts.
+
+Tables reuse one briefly-trained model per arch (cached as a framework
+checkpoint under benchmarks/results/models/<arch>) and the FastEWQ dataset
+built from EWQ analyses of all 10 assigned archs (cached as JSON).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs.base import RunConfig
+from repro.configs.registry import get_config
+from repro.core.dataset import BlockRow, build_dataset
+from repro.data.synthetic import DataLoader
+from repro.models.model import build
+from repro.train.loop import evaluate, train
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+BENCH_ARCHS = ("llama3.2-3b", "yi-9b", "mamba2-780m")
+TRAIN_STEPS = 150
+# Held-out eval = SAME seed (same synthetic language), disjoint step range.
+EVAL_STEP_OFFSET = 100_000
+
+
+def bench_config(arch: str):
+    cfg = get_config(arch, smoke=True)
+    # 6 layers so mixed plans have room to differentiate
+    return dataclasses.replace(cfg, num_layers=6)
+
+
+def get_trained(arch: str):
+    """(cfg, model, params) — trained once, checkpoint-cached."""
+    cfg = bench_config(arch)
+    model = build(cfg)
+    cdir = RESULTS / "models" / arch.replace("/", "_")
+    params_like = jax.tree.map(np.zeros_like, model.init(jax.random.PRNGKey(0)))
+    if ckpt.latest_step(cdir) is not None:
+        params, _ = ckpt.restore(cdir, params_like)
+        params = jax.tree.map(jnp.asarray, params)
+        return cfg, model, params
+    run = RunConfig(steps=TRAIN_STEPS, learning_rate=2e-3, warmup_steps=10,
+                    remat=False)
+    res = train(cfg, run, batch=16, seq=64, log_fn=lambda s: None)
+    ckpt.save(cdir, TRAIN_STEPS, res["params"], extra={})
+    return cfg, model, res["params"]
+
+
+def eval_metrics(model, params, *, steps: int = 6, batch: int = 16,
+                 seq: int = 64):
+    """(top-1 accuracy, perplexity, us_per_eval_call) on held-out stream."""
+    from repro.train.step import make_loss_fn
+    loss_fn = jax.jit(make_loss_fn(model, remat=False))
+    loader = DataLoader(model.cfg, global_batch=batch, seq=seq, seed=0,
+                        start_step=EVAL_STEP_OFFSET)
+
+    @jax.jit
+    def acc_fn(params, batch):
+        logits, _ = model.apply(params, batch, remat=False)
+        pred = jnp.argmax(logits[..., :model.cfg.vocab_size], -1)
+        return jnp.mean((pred == batch["labels"]).astype(jnp.float32))
+
+    losses, accs = [], []
+    t0 = None
+    for i in range(steps):
+        b = next(loader)
+        if i == 1:
+            t0 = time.perf_counter()  # skip compile step
+        losses.append(float(loss_fn(params, b)[0]))
+        accs.append(float(acc_fn(params, b)))
+    dt_us = (time.perf_counter() - t0) / max(steps - 1, 1) * 1e6
+    mean_loss = float(np.mean(losses))
+    return {"accuracy": float(np.mean(accs)),
+            "perplexity": float(np.exp(mean_loss)),
+            "loss": mean_loss, "us_per_call": dt_us}
+
+
+def quantized_metrics(model, params, plan, **kw):
+    from repro.serving.quantized import apply_plan_to_params
+    pq = apply_plan_to_params(model, params, plan)
+    return eval_metrics(model, pq, **kw)
+
+
+def plan_sizes_mib(model, params, plan) -> float:
+    """Effective transformer-block bytes under a plan (MiB)."""
+    from repro.quant.apply import SegmentedParams, tree_nbytes
+    from repro.serving.quantized import apply_plan_to_params
+    pq = apply_plan_to_params(model, params, plan)
+    total = 0.0
+    for key in ("layers", "enc_layers", "dec_layers", "shared", "embed"):
+        if key in pq:
+            v = pq[key]
+            total += (v.nbytes_effective() if isinstance(v, SegmentedParams)
+                      else tree_nbytes(v))
+    return total / 2**20
+
+
+def fastewq_rows(force: bool = False) -> list[BlockRow]:
+    """EWQ-labelled dataset over all 10 archs (cached)."""
+    path = RESULTS / "fastewq_dataset.json"
+    if path.exists() and not force:
+        rows = [BlockRow(**r) for r in json.load(open(path))]
+        return rows
+    rows = build_dataset(steps=30, seeds=(0, 1))
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    json.dump([dataclasses.asdict(r) for r in rows], open(path, "w"))
+    return rows
+
+
+def save_json(name: str, obj):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS / name, "w") as f:
+        json.dump(obj, f, indent=2, default=float)
+
+
+def emit(rows: list[tuple]):
+    """Print ``name,us_per_call,derived`` CSV rows (run.py contract)."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

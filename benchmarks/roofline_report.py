@@ -1,0 +1,52 @@
+"""§Roofline report: render the dry-run JSONL into the per-cell table."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from benchmarks import common
+
+DRYRUN = common.RESULTS / "dryrun.jsonl"
+
+
+def load(tag: str = "baseline", mesh: str = "16x16"):
+    if not DRYRUN.exists():
+        return []
+    recs = [json.loads(l) for l in open(DRYRUN)]
+    # last record wins per (arch, shape, mesh, tag, quant)
+    best = {}
+    for r in recs:
+        key = (r["arch"], r["shape"], r["mesh"], r["tag"], r.get("quant"))
+        best[key] = r
+    return [r for (a, s, m, t, q), r in best.items()
+            if t == tag and m == mesh]
+
+
+def run():
+    rows = []
+    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"])):
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            rows.append((name, 0.0, "SKIP:" + r["reason"][:40]))
+            continue
+        if r["status"] != "ok":
+            rows.append((name, 0.0, "ERROR:" + r["error"][:60]))
+            continue
+        dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append((name, dom * 1e6,
+                     f"bound={r['bound']};"
+                     f"tc={r['t_compute_s']:.4f};tm={r['t_memory_s']:.4f};"
+                     f"tx={r['t_collective_s']:.4f};"
+                     f"useful={r['useful_flop_frac']:.2f};"
+                     f"peakGiB={r.get('peak_bytes_per_dev', 0)/2**30:.1f}"))
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper §6.3.1 + Table 13: composite scores (log ppl - acc) and paired
+statistics (t-test, Cohen's d) between fast / fast-train variants."""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+
+import numpy as np
+
+from repro.core.classifiers.metrics import (cohens_d, effect_size_label,
+                                            paired_t_test,
+                                            significance_label)
+
+from benchmarks import common
+
+
+def _composite(entries):
+    # Composite Score = w1*log(ppl) - w2*acc  (w1 = w2 = 1)
+    return [math.log(e["perplexity"]) - e["accuracy"] for e in entries]
+
+
+def run():
+    path = common.RESULTS / "table7_fastewq.json"
+    if not path.exists():
+        from benchmarks import table7_fastewq
+        table7_fastewq.run()
+    table7 = json.load(open(path))
+
+    by_variant = {}
+    for e in table7:
+        by_variant.setdefault(e["variant"], []).append(e)
+    for v in by_variant:
+        by_variant[v].sort(key=lambda e: e["model"])
+
+    pairs = [
+        ("fast 8bit mixed", "fast 4bit/8bit mixed"),
+        ("fast train 8bit mixed", "fast train 4bit/8bit mixed"),
+        ("fast 8bit mixed", "fast train 8bit mixed"),
+        ("fast 4bit/8bit mixed", "fast train 4bit/8bit mixed"),
+    ]
+    rows, table = [], []
+    for a, b in pairs:
+        t0 = time.perf_counter()
+        ca = _composite(by_variant[a])
+        cb = _composite(by_variant[b])
+        tt = paired_t_test(ca, cb)
+        d = cohens_d(np.array(ca), np.array(cb))
+        us = (time.perf_counter() - t0) * 1e6
+        entry = {
+            "comparison": f"{a} vs {b}",
+            "abs_diff": round(float(np.mean(np.abs(np.array(ca)
+                                                   - np.array(cb)))), 5),
+            "t": round(tt["t"], 4), "p": round(tt["p"], 4),
+            "significance": significance_label(tt["p"]),
+            "cohens_d": round(d, 5), "effect": effect_size_label(d),
+        }
+        table.append(entry)
+        rows.append((f"table13/{a.replace(' ', '_')}_vs_{b.replace(' ', '_')}",
+                     us, f"p={tt['p']:.3f};d={d:.4f};{entry['significance']}"))
+    common.save_json("table13_stats.json", table)
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Table 14: relative accuracy / perplexity / size deltas vs raw."""
+
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks import common
+
+
+def run():
+    for f, mod in [("table6_ewq.json", "benchmarks.table6_ewq"),
+                   ("table7_fastewq.json", "benchmarks.table7_fastewq")]:
+        if not (common.RESULTS / f).exists():
+            import importlib
+            importlib.import_module(mod).run()
+    t6 = json.load(open(common.RESULTS / "table6_ewq.json"))
+    t7 = json.load(open(common.RESULTS / "table7_fastewq.json"))
+    raw = {e["model"]: e for e in t6 if e["variant"] == "raw"}
+    rows, table = [], []
+    t0 = time.perf_counter()
+    for e in t6 + t7:
+        if e["variant"] == "raw":
+            continue
+        r = raw[e["model"]]
+        entry = {
+            "model": e["model"], "variant": e["variant"],
+            "acc_delta_pct": round(100 * (e["accuracy"] - r["accuracy"])
+                                   / max(r["accuracy"], 1e-9), 2),
+            "ppl_delta_pct": round(100 * (e["perplexity"] - r["perplexity"])
+                                   / r["perplexity"], 2),
+            "size_delta_pct": round(100 * (e["blocks_mib"] - r["blocks_mib"])
+                                    / r["blocks_mib"], 2),
+            "complexity": "O(1)" if "fast" in e["variant"] or
+                          e["variant"] in ("4bit", "8bit") else "O(n)",
+        }
+        table.append(entry)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(table), 1)
+    common.save_json("table14_summary.json", table)
+    for e in table:
+        rows.append((f"table14/{e['model']}/{e['variant'].replace(' ', '_')}",
+                     us, f"acc{e['acc_delta_pct']:+.2f}%;"
+                     f"ppl{e['ppl_delta_pct']:+.2f}%;"
+                     f"size{e['size_delta_pct']:+.2f}%;{e['complexity']}"))
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Tables 3/5 + Fig 6: classification report, confusion matrices and
+ROC-AUC for all six from-scratch classifiers, plus the §4.3 feature
+importance and ablation."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.fastewq import evaluate_all_classifiers, feature_ablation
+
+from benchmarks import common
+
+
+def run():
+    ds = common.fastewq_rows()
+    t0 = time.perf_counter()
+    reports = evaluate_all_classifiers(ds)
+    us = (time.perf_counter() - t0) * 1e6 / len(reports)
+    ablation = feature_ablation(ds)
+    common.save_json("table3_classifiers.json",
+                     {"reports": reports, "ablation": ablation,
+                      "dataset_rows": len(ds)})
+    rows = []
+    for name, rep in reports.items():
+        c = rep["confusion"]
+        rows.append((f"table3/{name.replace(' ', '_')}", us,
+                     f"acc={rep['accuracy']:.3f};auc={rep['auc']:.3f};"
+                     f"tn={c['tn']};fn={c['fn']};fp={c['fp']};tp={c['tp']}"))
+    imp = reports["random forest"].get("feature_importances", {})
+    rows.append(("table3/rf_feature_importance", us,
+                 ";".join(f"{k}={v:.3f}" for k, v in imp.items())))
+    rows.append(("table3/ablation", us,
+                 ";".join(f"{k}={v:.3f}" for k, v in ablation.items())))
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

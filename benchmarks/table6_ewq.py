@@ -1,0 +1,49 @@
+"""Paper Table 6: EWQ variants — accuracy / perplexity / size per variant.
+
+Reduced-scale analogue: accuracy = next-token top-1 on a held-out synthetic
+stream (the MMLU proxy available without external data), perplexity =
+exp(mean token loss), size = effective transformer-block + embedding bytes.
+"""
+
+from __future__ import annotations
+
+from repro.core.planner import plan_model
+
+from benchmarks import common
+
+VARIANTS = ["raw", "4bit", "8bit", "8bit-mixed", "4bit/8bit"]
+
+
+def run():
+    rows = []
+    table = []
+    for arch in common.BENCH_ARCHS:
+        cfg, model, params = common.get_trained(arch)
+        for variant in VARIANTS:
+            plan = plan_model(model, params, variant=variant)
+            if variant == "raw":
+                m = common.eval_metrics(model, params)
+            else:
+                m = common.quantized_metrics(model, params, plan)
+            size = common.plan_sizes_mib(model, params, plan)
+            c = plan.counts()
+            table.append({
+                "model": cfg.name, "variant": variant,
+                "accuracy": round(m["accuracy"], 4),
+                "perplexity": round(m["perplexity"], 4),
+                "blocks_mib": round(size, 3),
+                "raw/8bit/4bit": f"{c['raw']}/{c['int8']}/{c['int4']}",
+            })
+            rows.append((f"table6/{cfg.name}/{variant}", m["us_per_call"],
+                         f"acc={m['accuracy']:.4f};ppl={m['perplexity']:.3f};"
+                         f"mib={size:.2f}"))
+    common.save_json("table6_ewq.json", table)
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

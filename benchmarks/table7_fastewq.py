@@ -1,0 +1,63 @@
+"""Paper Table 7: FastEWQ variants (fast = full-dataset classifier,
+fast-train = 70% split) vs the EWQ plans, same metrics as Table 6."""
+
+from __future__ import annotations
+
+from repro.core.fastewq import train_fastewq
+from repro.core.planner import plan_model
+from repro.models.model import build
+
+from benchmarks import common
+
+
+def _block_sizes(model, params):
+    import jax
+    import numpy as np
+    return [int(sum(np.prod(x.shape) for x in jax.tree.leaves(b)))
+            for b in model.block_params(params)]
+
+
+def run():
+    rows_ds = common.fastewq_rows()
+    fast = train_fastewq(rows_ds, full_dataset=True)      # paper "fast"
+    fast_train = train_fastewq(rows_ds, full_dataset=False)  # "fast train"
+    out_rows, table = [], []
+    for arch in common.BENCH_ARCHS:
+        cfg, model, params = common.get_trained(arch)
+        sizes = _block_sizes(model, params)
+        plans = {
+            "8bit mixed": plan_model(model, params, variant="8bit-mixed"),
+            "4bit/8bit mixed": plan_model(model, params, variant="4bit/8bit"),
+            "fast 8bit mixed": fast.plan(sizes, variant="8bit-mixed"),
+            "fast 4bit/8bit mixed": fast.plan(sizes, variant="4bit/8bit"),
+            "fast train 8bit mixed": fast_train.plan(sizes,
+                                                     variant="8bit-mixed"),
+            "fast train 4bit/8bit mixed": fast_train.plan(
+                sizes, variant="4bit/8bit"),
+        }
+        for name, plan in plans.items():
+            m = common.quantized_metrics(model, params, plan)
+            size = common.plan_sizes_mib(model, params, plan)
+            c = plan.counts()
+            table.append({
+                "model": cfg.name, "variant": name,
+                "accuracy": round(m["accuracy"], 4),
+                "perplexity": round(m["perplexity"], 4),
+                "blocks_mib": round(size, 3),
+                "raw/8bit/4bit": f"{c['raw']}/{c['int8']}/{c['int4']}",
+            })
+            out_rows.append(
+                (f"table7/{cfg.name}/{name.replace(' ', '_')}",
+                 m["us_per_call"],
+                 f"acc={m['accuracy']:.4f};ppl={m['perplexity']:.3f};"
+                 f"mib={size:.2f}"))
+    common.save_json("table7_fastewq.json", table)
+    return out_rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table 8: blocks selected for quantization, by exec_index,
+EWQ vs fast vs fast-train."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.fastewq import train_fastewq
+from repro.core.planner import plan_model
+
+from benchmarks import common
+from benchmarks.table7_fastewq import _block_sizes
+
+
+def _selection(plan):
+    sel = [d for d in plan.by_priority() if d.quantized]
+    return {
+        "by_exec_index": [d.exec_index for d in sel],
+        "4bit": [d.exec_index for d in sel if d.precision == "int4"],
+        "total": len(sel),
+    }
+
+
+def run():
+    ds = common.fastewq_rows()
+    fast = train_fastewq(ds, full_dataset=True)
+    fast_train = train_fastewq(ds, full_dataset=False)
+    rows, table = [], []
+    for arch in common.BENCH_ARCHS:
+        cfg, model, params = common.get_trained(arch)
+        sizes = _block_sizes(model, params)
+        t0 = time.perf_counter()
+        plans = {
+            "ewq": plan_model(model, params, variant="4bit/8bit"),
+            "fast": fast.plan(sizes, variant="4bit/8bit"),
+            "fast_train": fast_train.plan(sizes, variant="4bit/8bit"),
+        }
+        us = (time.perf_counter() - t0) * 1e6 / 3
+        ewq_set = {d.exec_index for d in plans["ewq"].decisions if d.quantized}
+        for name, plan in plans.items():
+            s = _selection(plan)
+            sel_set = set(s["by_exec_index"])
+            overlap = (len(sel_set & ewq_set) / max(len(ewq_set), 1))
+            table.append({"model": cfg.name, "variant": name, **s,
+                          "overlap_with_ewq": round(overlap, 3)})
+            rows.append((f"table8/{cfg.name}/{name}", us,
+                         f"selected={s['total']};overlap={overlap:.2f}"))
+    common.save_json("table8_selection.json", table)
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

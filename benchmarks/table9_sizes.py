@@ -1,0 +1,43 @@
+"""Paper Table 9: average transformer-block size (GB) per precision —
+computed analytically for the FULL assigned configs (no allocation)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.registry import ARCHS, get_config
+from repro.core.policy import bytes_per_param
+
+from benchmarks import common
+
+
+def run():
+    rows, table = [], []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        t0 = time.perf_counter()
+        total_layers = cfg.num_layers + (cfg.num_encoder_layers or 0)
+        layer_params = (cfg.param_count()
+                        - cfg.padded_vocab * cfg.d_model
+                        * (1 if cfg.tie_embeddings or cfg.family in
+                           ("encdec", "hybrid", "ssm") else 2)) / total_layers
+        sizes = {p: layer_params * bytes_per_param(p) / 2**30
+                 for p in ("raw", "int8", "int4")}
+        us = (time.perf_counter() - t0) * 1e6
+        table.append({"model": cfg.name, "blocks": total_layers,
+                      "raw_gb": round(sizes["raw"], 4),
+                      "8bit_gb": round(sizes["int8"], 4),
+                      "4bit_gb": round(sizes["int4"], 4)})
+        rows.append((f"table9/{cfg.name}", us,
+                     f"raw={sizes['raw']:.3f}GB;int8={sizes['int8']:.3f}GB;"
+                     f"int4={sizes['int4']:.3f}GB"))
+    common.save_json("table9_sizes.json", table)
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Figure 1: entropy distribution across transformer blocks."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.planner import analyze
+
+from benchmarks import common
+
+
+def run():
+    rows, table = [], []
+    for arch in common.BENCH_ARCHS:
+        cfg, model, params = common.get_trained(arch)
+        t0 = time.perf_counter()
+        ents = analyze(model.block_params(params))
+        us = (time.perf_counter() - t0) / max(len(ents), 1) * 1e6
+        hs = [round(b.entropy, 4) for b in ents]
+        table.append({"model": cfg.name, "entropies": hs,
+                      "min": min(hs), "max": max(hs)})
+        spread = max(hs) - min(hs)
+        rows.append((f"fig1/{cfg.name}", us,
+                     f"blocks={len(hs)};spread={spread:.4f}"))
+    common.save_json("fig1_entropy.json", table)
+    return rows
+
+
+def main():
+    common.emit(run())
+
+
+if __name__ == "__main__":
+    main()

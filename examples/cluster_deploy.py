@@ -1,0 +1,44 @@
+"""Algorithm 1/2 walk-through: resource-constrained block distribution.
+
+Plans the paper's deployment decision for llama3.2-3b (full config,
+analytic sizes — no weights needed) across a heterogeneous cluster, at
+three budget levels, then shows the TPU-native per-device HBM fitting.
+
+  PYTHONPATH=src python examples/cluster_deploy.py
+"""
+
+from repro.configs.registry import get_config
+from repro.core.cluster import Machine, fit_plan_to_hbm, optimize_distribution
+from repro.core.entropy import BlockEntropy
+from repro.core.policy import decide
+from repro.serving.quantized import fastewq_metadata_plan
+
+cfg = get_config("llama3.2-3b")
+# analytic per-block sizes + a synthetic entropy profile (FastEWQ-style
+# deployment: no weights downloaded)
+layer_params = (cfg.param_count() - cfg.padded_vocab * cfg.d_model) \
+    // cfg.num_layers
+blocks = [BlockEntropy(block_index=i, exec_index=i + 1,
+                       entropy=5.0 + 0.05 * abs(i - cfg.num_layers // 3),
+                       num_parameters=layer_params, per_matrix={})
+          for i in range(cfg.num_layers)]
+plan = decide(blocks, x_factor=1.0)
+raw_gb = plan.raw_bytes() / 2**30
+print(f"{cfg.name}: {cfg.num_layers} blocks, raw {raw_gb:.2f} GB\n")
+
+for budget_gb in [raw_gb * 1.2, raw_gb * 0.75, raw_gb * 0.35]:
+    machines = [Machine(f"m{i}", budget_gb / 4 * 2**30, budget_gb / 4 * 2**30)
+                for i in range(4)]
+    res = optimize_distribution(plan, machines)
+    c = res["plan"].counts()
+    print(f"cluster budget {budget_gb:6.2f} GB -> fits={res['fits']} "
+          f"size={res['total_bytes']/2**30:6.2f} GB  "
+          f"mix raw/int8/int4/ternary = "
+          f"{c['raw']}/{c['int8']}/{c['int4']}/{c['ternary']}")
+    loads = {m: len(b) for m, b in res["placement"].items()}
+    print(f"  placement (blocks per machine): {loads}")
+
+fitted = fit_plan_to_hbm(plan, hbm_bytes_per_device=16 * 2**30, devices=1,
+                         reserved_fraction=0.5)
+print(f"\nTPU-native: fit to one v5e HBM (16GB, 50% reserved): "
+      f"{fitted.counts()} -> {fitted.total_bytes()/2**30:.2f} GB")

@@ -1,0 +1,44 @@
+"""Quickstart: the EWQ pipeline in ~40 lines.
+
+Train a small LM on synthetic data, analyze per-block entropy, build the
+paper's 4bit/8bit mixed plan, quantize, and compare quality + size.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs.base import RunConfig
+from repro.configs.registry import get_config
+from repro.core.planner import analyze, plan_model
+from repro.quant.apply import tree_nbytes
+from repro.serving.quantized import apply_plan_to_params
+from repro.train.loop import evaluate, train
+
+# 1. Train a reduced llama3.2-style model on the synthetic LM stream.
+cfg = get_config("llama3.2-3b", smoke=True)
+run = RunConfig(steps=80, learning_rate=2e-3, warmup_steps=8, remat=False)
+result = train(cfg, run, batch=16, seq=64)
+model, params = result["model"], result["params"]
+
+# 2. EWQ entropy analysis (paper §3.1-3.2): one entropy per block.
+entropies = analyze(model.block_params(params))
+print("\nblock entropies (exec_index: H):")
+for b in entropies:
+    print(f"  {b.exec_index:3d}: {b.entropy:.4f}  ({b.num_parameters:,} params)")
+
+# 3. Selection criterion T = mu - sigma (paper §3.3) -> mixed-precision plan.
+plan = plan_model(model, params, variant="4bit/8bit")
+print(f"\nmu={plan.mu:.4f} sigma={plan.sigma:.4f} T={plan.threshold:.4f}")
+print("plan:", {d.exec_index: d.precision for d in plan.decisions})
+
+# 4. Apply the plan and compare quality + bytes.
+params_q = apply_plan_to_params(model, params, plan)
+ev_raw = evaluate(model, params, batch=8, seq=64)
+ev_q = evaluate(model, params_q, batch=8, seq=64)
+raw_b = tree_nbytes(params)
+q_b = (tree_nbytes(params_q["embed"]) + params_q["layers"].nbytes_effective()
+       + tree_nbytes(params_q["final"]))
+print(f"\nraw   : ppl {ev_raw['perplexity']:8.3f}  {raw_b/2**20:6.2f} MiB")
+print(f"EWQ   : ppl {ev_q['perplexity']:8.3f}  {q_b/2**20:6.2f} MiB "
+      f"(-{(1-q_b/raw_b)*100:.1f}%)")

@@ -1,0 +1,48 @@
+"""End-to-end training driver: a ~100M-param model for a few hundred steps
+with checkpointing, auto-resume and fault-tolerant runtime.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+This is the deliverable (b) end-to-end driver. The ~100M config is a scaled
+llama3.2 (12 layers, d_model 768) that trains on CPU in minutes; the same
+code path drives the production mesh under multi-host JAX.
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.train.loop import evaluate, train
+
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+    d_ff=2048, vocab_size=32000, rope_theta=500000.0, tie_embeddings=True,
+    max_seq_len=1024,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt_100m")
+    args = ap.parse_args()
+
+    print(f"params: {CFG_100M.param_count()/1e6:.1f}M")
+    run = RunConfig(steps=args.steps, learning_rate=3e-4, warmup_steps=30,
+                    schedule="cosine", checkpoint_dir=args.checkpoint_dir,
+                    checkpoint_every=100, remat=False)
+    result = train(CFG_100M, run, batch=args.batch, seq=args.seq,
+                   log_every=20)
+    ev = evaluate(result["model"], result["params"], batch=args.batch,
+                  seq=args.seq)
+    print(f"\nfinal eval: loss {ev['loss']:.4f}, ppl {ev['perplexity']:.2f}")
+    print(f"stragglers observed: {len(result['stragglers'])}")
+    print(f"resume anytime: same command (checkpoints in "
+          f"{args.checkpoint_dir})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# The paper's primary contribution: EWQ entropy analysis, selection policy,
+# planner, FastEWQ classifier and cluster-distribution algorithms.
+from repro.core import entropy, planner, policy  # noqa: F401

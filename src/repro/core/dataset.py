@@ -1,0 +1,103 @@
+"""FastEWQ training dataset builder (paper §4.1).
+
+Each row describes one transformer block:
+  (model_name, num_blocks, exec_index, num_parameters,
+   quantization_type, quantized)
+
+Rows are produced by running the FULL EWQ weight analysis on reduced-config
+instantiations of the assigned architecture families (briefly trained so the
+weight distributions differentiate — random init gives near-degenerate
+entropy spread), exactly mirroring how the paper built its 700-row dataset
+from public checkpoints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+FEATURES = ("num_parameters", "exec_index", "num_blocks")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRow:
+    model_name: str
+    num_blocks: int
+    exec_index: int
+    num_parameters: int
+    quantization_type: str  # "raw" | "8-bit" | "4-bit"
+    quantized: int          # 0 | 1
+
+
+def rows_from_plan(model_name: str, plan) -> list[BlockRow]:
+    n = len(plan.decisions)
+    out = []
+    for d in plan.decisions:
+        qt = {"raw": "raw", "int8": "8-bit", "int4": "4-bit",
+              "int3": "4-bit", "ternary": "4-bit"}[d.precision]
+        out.append(BlockRow(model_name=model_name, num_blocks=n,
+                            exec_index=d.exec_index,
+                            num_parameters=d.num_parameters,
+                            quantization_type=qt,
+                            quantized=int(d.precision != "raw")))
+    return out
+
+
+def to_xy(rows: Sequence[BlockRow]):
+    x = np.array([[r.num_parameters, r.exec_index, r.num_blocks]
+                  for r in rows], np.float64)
+    y = np.array([r.quantized for r in rows], np.int64)
+    return x, y
+
+
+def train_test_split(x, y, test_frac: float = 0.3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    idx = rng.permutation(n)
+    n_test = int(round(n * test_frac))
+    te, tr = idx[:n_test], idx[n_test:]
+    return x[tr], y[tr], x[te], y[te]
+
+
+def build_dataset(*, steps: int = 60, seeds: Sequence[int] = (0,),
+                  archs: Sequence[str] | None = None,
+                  scale_overrides: dict | None = None) -> list[BlockRow]:
+    """Train each reduced arch briefly on synthetic data, run EWQ, collect
+    block rows. CPU-sized; used by tests and benchmarks (cached results in
+    benchmarks/results/fastewq_dataset.json for reuse)."""
+    import jax
+    from repro.configs.registry import ARCHS, get_config
+    from repro.core.planner import plan_model
+    from repro.data.synthetic import synthetic_batch
+    from repro.models.model import build
+    from repro.configs.base import RunConfig
+    from repro.launch.steps import make_optimizer
+    from repro.train.step import make_train_step
+
+    rows: list[BlockRow] = []
+    for arch in (archs or ARCHS):
+        for seed in seeds:
+            cfg = get_config(arch, smoke=True)
+            # deepen the reduced configs so each model contributes a
+            # realistic number of block rows (paper: 700 rows)
+            depth = {"hybrid": 8, "encdec": 6}.get(
+                get_config(arch, smoke=True).family, 9)
+            cfg = dataclasses.replace(cfg, num_layers=depth)
+            if scale_overrides:
+                cfg = dataclasses.replace(cfg, **scale_overrides)
+            model = build(cfg)
+            params = model.init(jax.random.PRNGKey(seed))
+            run = RunConfig(steps=steps, learning_rate=1e-3, warmup_steps=5,
+                            remat=False)
+            opt = make_optimizer(run)
+            opt_state = opt.init(params)
+            step = jax.jit(make_train_step(model, opt, run))
+            for i in range(steps):
+                batch = synthetic_batch(cfg, batch=8, seq=64, step=i,
+                                        seed=seed)
+                params, opt_state, _ = step(params, opt_state, batch)
+            plan = plan_model(model, params, variant="4bit/8bit")
+            rows.extend(rows_from_plan(f"{cfg.name}-s{seed}", plan))
+    return rows

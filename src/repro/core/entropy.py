@@ -1,0 +1,154 @@
+"""Entropy analysis of weight matrices and transformer blocks (paper §3.1-3.2).
+
+The paper defines, for a weight matrix W with n parameters:
+
+    p_i = softmax(flatten(W))_i
+    H(W) = -sum_i p_i * log(p_i + eps)          (eps ~ 1e-2 for stability)
+
+and for a block containing matrices {W_i}:
+
+    H_block = sum_i |W_i| * H(W_i) / sum_i |W_i|
+
+Two numerically-equivalent implementations are provided:
+
+* ``mode="paper"``  — literal formula (materializes softmax), bit-faithful to
+  the paper including the eps inside the log.
+* ``mode="stream"`` — closed form H = lse(w) - E_p[w] computed with online
+  (chunked) logsumexp / weighted sums; never materializes p. This is the
+  form the Pallas kernel (repro/kernels/entropy) implements for TPU; eps=0.
+
+For eps -> 0 both agree; tests assert closeness for small eps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_EPS = 0.01
+
+
+def matrix_entropy_paper(w: jax.Array, eps: float = DEFAULT_EPS) -> jax.Array:
+    """Literal paper formula: H = -sum p log(p + eps), p = softmax(flat(w))."""
+    flat = w.reshape(-1).astype(jnp.float32)
+    p = jax.nn.softmax(flat)
+    return -jnp.sum(p * jnp.log(p + eps))
+
+
+def matrix_entropy_stream(w: jax.Array, chunk: int = 1 << 20) -> jax.Array:
+    """Closed form H = logsumexp(w) - sum(w * e^w)/sum(e^w), streamed in chunks.
+
+    Online update keeps (running max m, running Z = sum e^{w-m},
+    running S = sum w * e^{w-m}) and merges chunks the usual
+    online-logsumexp way.  Equivalent to the paper formula at eps=0.
+    """
+    flat = w.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % chunk
+    flat = jnp.pad(flat, (0, pad), constant_values=-jnp.inf)
+    chunks = flat.reshape(-1, chunk)
+
+    def body(carry, x):
+        m, z, s = carry
+        cm = jnp.max(x)
+        new_m = jnp.maximum(m, cm)
+        # Rescale old accumulators to the new max.
+        scale = jnp.exp(m - new_m)
+        e = jnp.exp(x - new_m)
+        # w * e^w terms: -inf pad contributes exp(-inf)=0; 0 * inf -> nan, so
+        # mask the weighted term explicitly.
+        we = jnp.where(jnp.isfinite(x), x * e, 0.0)
+        return (new_m, z * scale + jnp.sum(e), s * scale + jnp.sum(we)), None
+
+    init = (jnp.float32(-jnp.inf), jnp.float32(0.0), jnp.float32(0.0))
+    (m, z, s), _ = jax.lax.scan(body, init, chunks)
+    lse = m + jnp.log(z)
+    mean_w = s / z
+    return lse - mean_w
+
+
+def matrix_entropy(w: jax.Array, *, mode: str = "paper",
+                   eps: float = DEFAULT_EPS) -> jax.Array:
+    if mode == "paper":
+        return matrix_entropy_paper(w, eps=eps)
+    if mode == "stream":
+        return matrix_entropy_stream(w)
+    if mode == "kernel":  # Pallas path; imported lazily to avoid cycles.
+        from repro.kernels.entropy.ops import matrix_entropy as kernel_entropy
+        return kernel_entropy(w)
+    raise ValueError(f"unknown entropy mode: {mode}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEntropy:
+    """Entropy record for one transformer block."""
+    block_index: int          # 0-based model-definition index
+    exec_index: int           # paper-style execution index (embedding block=1, first transformer block=2)
+    entropy: float            # weighted H_block
+    num_parameters: int       # sum of |W_i|
+    per_matrix: dict[str, tuple[float, int]]  # name -> (H, size)
+
+
+def block_entropy_from_matrices(
+    mats: Mapping[str, jax.Array], *, mode: str = "paper",
+    eps: float = DEFAULT_EPS,
+) -> tuple[float, int, dict[str, tuple[float, int]]]:
+    """Weighted block entropy over named weight matrices.
+
+    Only >=2D arrays (Linear / Embedding weights) participate, matching the
+    paper ("quantization applied to the Linear and Embedding layers");
+    vectors (biases, norm scales) are excluded.
+    """
+    per: dict[str, tuple[float, int]] = {}
+    total = 0
+    acc = 0.0
+    for name, w in sorted(mats.items()):
+        if w.ndim < 2:
+            continue
+        size = int(np.prod(w.shape))
+        h = float(matrix_entropy(w, mode=mode, eps=eps))
+        per[name] = (h, size)
+        total += size
+        acc += h * size
+    if total == 0:
+        return 0.0, 0, per
+    return acc / total, total, per
+
+
+def flatten_block_params(tree: Any, prefix: str = "") -> dict[str, jax.Array]:
+    """Flatten a (nested) param dict into {dotted_name: array}."""
+    out: dict[str, jax.Array] = {}
+    if isinstance(tree, Mapping):
+        for k, v in tree.items():
+            out.update(flatten_block_params(v, f"{prefix}{k}." if prefix or True else k))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def analyze_blocks(
+    blocks: Sequence[Mapping[str, jax.Array]], *, mode: str = "paper",
+    eps: float = DEFAULT_EPS, first_exec_index: int = 2,
+) -> list[BlockEntropy]:
+    """Per-block entropy for a sequence of block param dicts.
+
+    ``first_exec_index=2`` matches the paper's convention that exec_index 1
+    is the token-embedding block and transformer blocks start at 2.
+    """
+    out = []
+    for i, blk in enumerate(blocks):
+        mats = flatten_block_params(blk)
+        h, n, per = block_entropy_from_matrices(mats, mode=mode, eps=eps)
+        out.append(BlockEntropy(block_index=i, exec_index=first_exec_index + i,
+                                entropy=h, num_parameters=n, per_matrix=per))
+    return out
+
+
+def entropy_stats(entropies: Sequence[float]) -> tuple[float, float]:
+    """(mu, sigma) over block entropies — population std per paper §3.3.2."""
+    arr = np.asarray(entropies, dtype=np.float64)
+    return float(arr.mean()), float(arr.std())

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the streaming entropy kernel with CPU fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.entropy.kernel import entropy_pallas
+from repro.kernels.entropy.ref import entropy_ref
+
+
+def matrix_entropy(w: jax.Array) -> jax.Array:
+    """Streaming softmax-entropy (eps=0 closed form). Pallas on TPU,
+    interpret-mode kernel is exercised in tests; jnp oracle elsewhere."""
+    if jax.default_backend() == "tpu":
+        return entropy_pallas(w)
+    return entropy_ref(w)

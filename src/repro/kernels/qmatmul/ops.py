@@ -1,0 +1,76 @@
+"""jit'd public wrapper for the fused dequant matmul.
+
+``qdot(x, w)`` is the single entry point the model stack uses for every
+weight matmul. ``w`` may be:
+
+* a plain jax.Array (raw / bf16 path)          -> einsum
+* a QTensor (int8 / int4 / ternary)            -> fused dequant matmul
+
+Backend selection: on TPU the Pallas kernel runs natively; elsewhere
+(CPU dry-run/tests) we use the jnp fallback, which XLA fuses reasonably,
+keeping HLO byte counts faithful to weight-only quantization (int8/int4
+weights are read at their quantized width; dequant is a flop-cheap
+broadcast-multiply). The Pallas kernel itself is validated against ref.py
+in interpret mode (tests/test_kernels_qmatmul.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor
+from repro.quant.quantize import unpack_int4
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _dequant_fused(x2d: jax.Array, w: QTensor) -> jax.Array:
+    """jnp fallback with the same math as the kernel: scale the per-group
+    partial sums rather than materializing a full dequantized weight when
+    the contraction is grouped."""
+    data = w.data
+    if w.precision == "int4":
+        data = unpack_int4(data)
+    n, k = data.shape
+    g = w.group
+    # (M, K) x (N, K) grouped: einsum over (group-blocks, in-group).
+    xg = x2d.reshape(x2d.shape[0], k // g, g).astype(jnp.float32)
+    wg = data.reshape(n, k // g, g).astype(jnp.float32)
+    partial = jnp.einsum("mgk,ngk->mng", xg, wg,
+                         preferred_element_type=jnp.float32)
+    return jnp.einsum("mng,ng->mn", partial, w.scale.astype(jnp.float32))
+
+
+def _dequant_simple(x2d: jax.Array, w: QTensor) -> jax.Array:
+    """Dequantize-then-dot fallback (lets XLA fuse convert into the dot)."""
+    from repro.quant.quantize import dequantize
+    wd = dequantize(w, jnp.bfloat16)
+    return jax.lax.dot_general(x2d, wd, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def qdot(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """y[..., n] = sum_k x[..., k] * W[n, k] with W possibly quantized."""
+    if out_dtype is None:
+        out_dtype = x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2d = x.reshape(-1, k)
+    if isinstance(w, QTensor):
+        m, n = x2d.shape[0], w.data.shape[0]
+        if (_use_pallas() and m % 128 == 0 and n % 128 == 0
+                and k % 512 == 0):
+            y = qmatmul_pallas(x2d, w.data, w.scale, group=w.group,
+                               precision=w.precision)
+        else:
+            y = _dequant_simple(x2d, w)
+        n_out = n
+    else:
+        y = jax.lax.dot_general(x2d, w, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        n_out = w.shape[0]
+    return y.reshape(*lead, n_out).astype(out_dtype)

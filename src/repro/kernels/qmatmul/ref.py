@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused dequant matmul.
+
+Computes  y = x @ dequant(w).T  for x:(M, K) and w a QTensor with logical
+shape (N, K) quantized group-wise along K.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor
+from repro.quant.quantize import dequantize
+
+
+def qmatmul_ref(x: jax.Array, w: QTensor, out_dtype=jnp.float32) -> jax.Array:
+    wd = dequantize(w, jnp.float32)
+    return jnp.einsum("mk,nk->mn", x.astype(jnp.float32), wd,
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    return jnp.einsum("mk,nk->mn", x.astype(jnp.float32),
+                      w.astype(jnp.float32),
+                      preferred_element_type=jnp.float32).astype(out_dtype)

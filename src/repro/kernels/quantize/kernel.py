@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused group-wise absmax int8 quantization.
+
+Used at EWQ-apply time: one HBM read of the bf16 weights, one write of the
+int8 payload + scales — no intermediate f32 materialization in HBM. The
+grid tiles (N, K) into (BN, BK) VMEM blocks with BK a multiple of the
+quantization group so each block owns whole groups; absmax reduction and
+rounding happen entirely in VMEM registers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _quantize_kernel(w_ref, q_ref, s_ref, *, group: int):
+    w = w_ref[...].astype(jnp.float32)            # (BN, BK)
+    bn, bk = w.shape
+    g = w.reshape(bn, bk // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=-1)         # (BN, BK/G)
+    scale = absmax / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(g / safe[..., None]), -127, 127)
+    q_ref[...] = q.reshape(bn, bk).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bn", "bk", "interpret"))
+def quantize_int8_pallas(w: jax.Array, *, group: int = 128,
+                         bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                         interpret: bool = False):
+    n, k = w.shape
+    bn, bk = min(bn, n), min(bk, k)
+    assert n % bn == 0 and k % bk == 0 and bk % group == 0
+    kernel = functools.partial(_quantize_kernel, group=group)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn, k // bk),
+        in_specs=[pl.BlockSpec((bn, bk), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk // group), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.int8),
+            jax.ShapeDtypeStruct((n, k // group), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,14 @@
+"""jit'd wrapper for the fused quantization kernel with CPU fallback."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quantize.kernel import quantize_int8_pallas
+from repro.kernels.quantize.ref import quantize_int8_ref
+
+
+def quantize_int8(w: jax.Array, group: int = 128):
+    if jax.default_backend() == "tpu" and w.ndim == 2:
+        return quantize_int8_pallas(w, group=group)
+    return quantize_int8_ref(w, group=group)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused group-wise int8 quantization kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(w: jax.Array, group: int = 128):
+    """w: (N, K) -> (q int8 (N, K), scale f32 (N, K//group))."""
+    n, k = w.shape
+    g = w.astype(jnp.float32).reshape(n, k // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=-1)
+    scale = absmax / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(g / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n, k), scale

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Per cell, two kinds of artifacts are produced:
+
+1. PROOF + MEMORY — the full-depth step (layers under lax.scan) is lowered
+   and compiled on the production mesh; ``memory_analysis()`` gives
+   per-device argument/output/temp bytes (proves HBM fit) and the compile
+   itself proves the sharding config is coherent.
+
+2. COST — XLA's HloCostAnalysis counts a while-loop body ONCE regardless of
+   trip count, so the scan hides depth. The dry-run therefore lowers
+   reduced-depth variants with every scan fully unrolled (ctx.cost_mode)
+   and solves the affine model  cost = base + sum_i depth_i * per_layer_i
+   (one term per independent layer stack) to extrapolate per-device FLOPs /
+   HBM bytes / collective bytes to full depth. Those feed the §Roofline
+   terms (launch/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod|--both-meshes]
+  python -m repro.launch.dryrun --arch yi-9b --shape decode_32k \
+      --quant 8bit-mixed --tag quant_decode
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, RunConfig
+from repro.configs.registry import ARCHS, get_config, shape_runnable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (collective_bytes_from_hlo, model_flops,
+                                   roofline_terms)
+from repro.launch.steps import step_for_shape
+from repro.models.model import build
+from repro.sharding.ctx import activation_sharding, cost_mode
+from repro.sharding.specs import (batch_specs, cache_specs, opt_state_specs,
+                                  param_specs, to_shardings)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun.jsonl"
+
+
+def _serving_tp_only(model, mesh) -> bool:
+    """Serving keeps weights TP-sharded (no per-step FSDP gathers) when the
+    per-device TP shard fits comfortably in HBM."""
+    tp = mesh.shape["model"]
+    return model.cfg.param_count() * 2 / tp <= 8e9
+
+
+def input_shardings_for(model, shape, inputs, mesh):
+    if shape.kind == "train":
+        params, opt_state, batch = inputs
+        pspecs = param_specs(params, mesh)
+        return (pspecs, opt_state_specs(opt_state, pspecs, mesh),
+                batch_specs(batch, mesh))
+    serving = _serving_tp_only(model, mesh)
+    if shape.kind == "prefill":
+        params, batch = inputs
+        return (param_specs(params, mesh, serving=serving),
+                batch_specs(batch, mesh))
+    params, cache, tokens = inputs
+    return (param_specs(params, mesh, serving=serving),
+            cache_specs(cache, mesh),
+            batch_specs({"t": tokens}, mesh)["t"])
+
+
+def _build_step(cfg, shape, run_cfg, quant, plan=None):
+    model = build(cfg)
+    if quant and shape.kind == "decode":
+        from repro.serving.quantized import quantize_decode_inputs
+        fn, inputs = quantize_decode_inputs(model, shape, quant, plan=plan)
+    else:
+        fn, inputs = step_for_shape(model, shape, run_cfg)
+    return model, fn, inputs
+
+
+def _lower_compile(cfg, shape, mesh, run_cfg, quant, *, cost: bool,
+                   plan=None):
+    import contextlib
+    model, fn, inputs = _build_step(cfg, shape, run_cfg, quant, plan)
+    shardings = to_shardings(
+        input_shardings_for(model, shape, inputs, mesh), mesh)
+    # Buffer donation: train donates (params, opt_state); decode donates the
+    # cache — without aliasing, XLA materializes a full copy of the updated
+    # state per step (a 2x bytes tax the baseline sweep paid).
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    cm = cost_mode() if cost else contextlib.nullcontext()
+    with mesh, activation_sharding(mesh), cm:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*inputs)
+        compiled = lowered.compile()
+    return compiled
+
+
+def depth_variants(cfg, quant: str | None):
+    """[(cfg_variant, depths_dict, plan)], full_depths — affine stacks."""
+    r = dataclasses.replace
+    if quant:  # two stacks: raw layers vs quantized layers (dense/ssm)
+        from repro.serving.quantized import explicit_plan
+        fulls = _quant_counts(cfg, quant)
+        return ([
+            (r(cfg, num_layers=2), {"raw": 1, "quant": 1},
+             explicit_plan(r(cfg, num_layers=2), ["raw", "int8"], quant)),
+            (r(cfg, num_layers=3), {"raw": 1, "quant": 2},
+             explicit_plan(r(cfg, num_layers=3), ["raw", "int8", "int8"],
+                           quant)),
+            (r(cfg, num_layers=3), {"raw": 2, "quant": 1},
+             explicit_plan(r(cfg, num_layers=3), ["raw", "raw", "int8"],
+                           quant)),
+        ], fulls)
+    if cfg.family == "encdec":
+        return ([
+            (r(cfg, num_encoder_layers=1, num_layers=1),
+             {"enc": 1, "dec": 1}, None),
+            (r(cfg, num_encoder_layers=2, num_layers=1),
+             {"enc": 2, "dec": 1}, None),
+            (r(cfg, num_encoder_layers=1, num_layers=2),
+             {"enc": 1, "dec": 2}, None),
+        ], {"enc": cfg.num_encoder_layers, "dec": cfg.num_layers})
+    if cfg.family == "hybrid":
+        p = cfg.shared_attn_period
+        return ([
+            (r(cfg, num_layers=p), {"units": 1}, None),
+            (r(cfg, num_layers=2 * p), {"units": 2}, None),
+        ], {"units": cfg.num_layers // p})
+    return ([
+        (r(cfg, num_layers=1), {"layers": 1}, None),
+        (r(cfg, num_layers=2), {"layers": 2}, None),
+    ], {"layers": cfg.num_layers})
+
+
+def _quant_counts(cfg, quant):
+    from repro.serving.quantized import fastewq_metadata_plan
+    plan = fastewq_metadata_plan(cfg, quant)
+    qs = sum(1 for d in plan.decisions[1:1 + cfg.num_layers] if d.quantized)
+    return {"raw": cfg.num_layers - qs, "quant": qs}
+
+
+def solve_affine(measurements, full_depths):
+    """measurements: [(depths_dict, value_dict)]; returns extrapolated dict."""
+    stacks = sorted(full_depths)
+    a = np.array([[1.0] + [float(d.get(s, 0)) for s in stacks]
+                  for d, _ in measurements])
+    keys = measurements[0][1].keys()
+    out = {}
+    full_vec = np.array([1.0] + [float(full_depths[s]) for s in stacks])
+    for k in keys:
+        y = np.array([float(v[k]) for _, v in measurements])
+        coef, *_ = np.linalg.lstsq(a, y, rcond=None)
+        out[k] = float(max(full_vec @ coef, 0.0))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str | None = None, run_cfg: RunConfig | None = None,
+             tag: str = "baseline", skip_full: bool = False, extra=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
+           "quant": quant}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    run_cfg = run_cfg or RunConfig(
+        moment_dtype="bfloat16" if cfg.param_count() > 1e11 else "float32")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        # ---- 1) full-depth proof + memory --------------------------------
+        t0 = time.time()
+        if not skip_full:
+            compiled = _lower_compile(cfg, shape, mesh, run_cfg, quant,
+                                      cost=False)
+            mem = compiled.memory_analysis()
+            rec.update(
+                compile_s=round(time.time() - t0, 1),
+                arg_bytes_per_dev=mem.argument_size_in_bytes,
+                out_bytes_per_dev=mem.output_size_in_bytes,
+                temp_bytes_per_dev=mem.temp_size_in_bytes,
+                peak_bytes_per_dev=(mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes))
+            del compiled
+
+        # ---- 2) reduced-depth unrolled cost variants ----------------------
+        variants, full_depths = depth_variants(cfg, quant)
+        meas = []
+        for cfg_v, depths, plan in variants:
+            cv = _lower_compile(cfg_v, shape, mesh, run_cfg, quant,
+                                cost=True, plan=plan)
+            cost = cv.cost_analysis()
+            coll = collective_bytes_from_hlo(cv.as_text())
+            vals = {"flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                    "coll": coll["total"]}
+            for op, b in coll["by_op"].items():
+                vals[f"coll_{op}"] = b
+            meas.append((depths, vals))
+            del cv
+        # union of keys (ops may differ across variants)
+        all_keys = set().union(*[v.keys() for _, v in meas])
+        meas = [(d, {k: v.get(k, 0.0) for k in all_keys}) for d, v in meas]
+        solved = solve_affine(meas, full_depths)
+
+        terms = roofline_terms(flops_dev=solved["flops"],
+                               bytes_dev=solved["bytes"],
+                               coll_dev=solved["coll"])
+        mf = model_flops(cfg, shape)
+        rec.update(
+            status="ok", devices=mesh.size,
+            cost_s=round(time.time() - t0, 1),
+            hlo_flops_dev=solved["flops"], hlo_bytes_dev=solved["bytes"],
+            collective_bytes_dev=solved["coll"],
+            collectives={k[5:]: v for k, v in solved.items()
+                         if k.startswith("coll_")},
+            model_flops=mf,
+            model_flops_dev=mf / mesh.size,
+            useful_flop_frac=(mf / mesh.size / solved["flops"]
+                              if solved["flops"] else 0.0),
+            **terms)
+        if extra:
+            rec.update(extra)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def append_result(rec):
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    with open(RESULTS, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-full", action="store_true",
+                    help="cost variants only (fast perf iteration)")
+    ap.add_argument("--quant", default=None,
+                    help="EWQ variant for decode cells (e.g. 8bit-mixed)")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    cells = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    if not args.all:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for a, s in cells:
+        for mp in meshes:
+            rec = run_cell(a, s, multi_pod=mp, quant=args.quant, tag=args.tag,
+                           skip_full=args.skip_full)
+            append_result(rec)
+            status = rec["status"]
+            if status == "ok":
+                peak = rec.get("peak_bytes_per_dev", 0) / 2 ** 30
+                print(f"[{rec['mesh']}] {a} x {s}: OK "
+                      f"compute={rec['t_compute_s']:.4f}s "
+                      f"memory={rec['t_memory_s']:.4f}s "
+                      f"collective={rec['t_collective_s']:.4f}s "
+                      f"bound={rec['bound']} peak/dev={peak:.2f}GiB "
+                      f"(full compile {rec.get('compile_s', '-')}s, "
+                      f"cost {rec['cost_s']}s)", flush=True)
+            elif status == "skipped":
+                print(f"[{rec['mesh']}] {a} x {s}: SKIP "
+                      f"({rec['reason'][:60]})", flush=True)
+            else:
+                failures += 1
+                print(f"[{rec['mesh']}] {a} x {s}: ERROR {rec['error']}",
+                      flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s per ICI link.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+``collective_bytes_from_hlo`` parses the post-SPMD optimized HLO and sums
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. HLO_FLOPs and HLO_bytes from
+``compiled.cost_analysis()`` are whole-program (all devices); dividing by
+the chip count gives per-chip seconds under perfect balance — the sharded
+layouts make this a good approximation, and imbalances (e.g. padded uneven
+head shards) show up as a documented caveat per cell.
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum payload bytes of collective ops in post-SPMD optimized HLO.
+
+    Shapes are per-participant shard shapes, so totals are per-device
+    payload bytes (one SPMD program = one device's schedule). The RESULT
+    type between '=' and the op name is the payload:
+      all-gather result already spans the group; all-reduce payload = buffer
+      size; reduce-scatter result is the post-scatter shard, so it is scaled
+      by the group size to count the pre-reduce wire traffic.
+    '-done' halves of async pairs are skipped.
+    """
+    by_op: dict[str, float] = {}
+    for line in hlo.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, op, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        b = _shape_bytes(type_str)
+        if op == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                b *= int(g.group(2))
+        by_op[op] = by_op.get(op, 0.0) + b
+    return {"total": sum(by_op.values()), "by_op": by_op}
+
+
+def roofline_terms(*, flops_dev: float, bytes_dev: float,
+                   coll_dev: float) -> dict:
+    """All inputs are PER-DEVICE (the compiled SPMD module is one device's
+    program; affine depth extrapolation preserves that)."""
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = coll_dev / ICI_BW
+    terms = {"t_compute_s": t_compute, "t_memory_s": t_memory,
+             "t_collective_s": t_collective}
+    bound = max(terms, key=terms.get)
+    terms["bound"] = {"t_compute_s": "compute", "t_memory_s": "memory",
+                      "t_collective_s": "collective"}[bound]
+    total = max(t_compute, t_memory, t_collective)
+    terms["roofline_frac_compute"] = (t_compute / total) if total else 0.0
+    return terms
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful training FLOPs; forward-only
+    (2ND) for prefill; 2*N_active per token for decode."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,71 @@
+"""Serving launcher: train-or-load a model, EWQ/FastEWQ-quantize, serve.
+
+Usage:
+  python -m repro.launch.serve --arch yi-9b --smoke --variant 4bit/8bit
+  python -m repro.launch.serve --arch llama3.2-3b --smoke --fast \
+      --prompt-len 16 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.configs.registry import ARCHS, get_config
+from repro.core.planner import plan_model
+from repro.models.model import build
+from repro.serving.engine import ServeEngine
+from repro.serving.quantized import fastewq_metadata_plan
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--variant", default="8bit-mixed",
+                    choices=["raw", "4bit", "8bit", "8bit-mixed",
+                             "4bit/8bit"])
+    ap.add_argument("--fast", action="store_true",
+                    help="FastEWQ metadata plan (no weight analysis)")
+    ap.add_argument("--train-steps", type=int, default=30,
+                    help="brief training so weights are non-degenerate")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    run = RunConfig(steps=args.train_steps, learning_rate=1e-3,
+                    warmup_steps=3, remat=False)
+    result = train(cfg, run, batch=args.batch, seq=args.prompt_len * 2)
+    model, params = result["model"], result["params"]
+
+    if args.variant == "raw":
+        plan = None
+    elif args.fast:
+        plan = fastewq_metadata_plan(cfg, args.variant)
+    else:
+        plan = plan_model(model, params, variant=args.variant)
+    engine = ServeEngine(model, params, plan=plan,
+                         max_seq=args.prompt_len + args.max_new)
+    raw_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    print(f"weights: {engine.weight_bytes()/2**20:.1f} MiB effective "
+          f"(raw {raw_bytes/2**20:.1f} MiB)")
+    if plan:
+        print(f"plan: {plan.counts()}")
+
+    prompts = jax.random.randint(jax.random.PRNGKey(7),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    out = engine.generate(prompts, args.max_new)
+    print(f"generated {out.tokens.shape[1] - args.prompt_len} tokens/seq; "
+          f"mean logprob {float(out.logprobs.mean()):.3f}")
+    print("sample:", out.tokens[0, -args.max_new:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Step builders shared by the dry-run, the trainer and the serving engine."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models.model import Model, build
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import make_schedule
+from repro.train.step import make_train_step
+
+
+def make_optimizer(run: RunConfig) -> AdamW:
+    sched = make_schedule(run.schedule, base_lr=run.learning_rate,
+                          warmup_steps=run.warmup_steps,
+                          total_steps=max(run.steps, 1))
+    return AdamW(learning_rate=sched, weight_decay=run.weight_decay,
+                 moment_dtype=run.moment_dtype)
+
+
+def abstract_train_state(model: Model, run: RunConfig):
+    """(params, opt_state) as ShapeDtypeStructs — no allocation."""
+    params = model.abstract_params()
+    opt = make_optimizer(run)
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state, opt
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_inputs(model: Model, shape: ShapeConfig):
+    """(cache, tokens) specs for one decode step with a seq_len-deep cache."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return cache, tokens
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        # serving prefill: next-token logits only (no (B, S, V) temp)
+        logits, _ = model.apply(params, batch, remat=False, last_only=True)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_cache
+
+    return decode_step
+
+
+def step_for_shape(model: Model, shape: ShapeConfig, run: RunConfig):
+    """Returns (fn, example_inputs) for the shape's kind."""
+    if shape.kind == "train":
+        params, opt_state, opt = abstract_train_state(model, run)
+        fn = make_train_step(model, opt, run)
+        return fn, (params, opt_state, train_batch_specs(model.cfg, shape))
+    if shape.kind == "prefill":
+        params = model.abstract_params()
+        return make_prefill_step(model), (params,
+                                          prefill_batch_specs(model.cfg,
+                                                              shape))
+    if shape.kind == "decode":
+        params = model.abstract_params()
+        cache, tokens = decode_inputs(model, shape)
+        return make_decode_step(model), (params, cache, tokens)
+    raise ValueError(shape.kind)

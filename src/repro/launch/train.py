@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+Single-host CPU runs execute directly; the same entry point drives a
+production mesh when launched under multi-host JAX (jax.distributed) — the
+mesh shape and shardings come from the same specs the dry-run proves.
+
+Usage:
+  python -m repro.launch.train --arch olmo-1b --smoke --steps 100
+  python -m repro.launch.train --arch llama3.2-3b --smoke --steps 200 \
+      --checkpoint-dir /tmp/ckpt --grad-compression int8_ef
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import RunConfig
+from repro.configs.registry import ARCHS, get_config
+from repro.train.loop import evaluate, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schedule", default="cosine",
+                    choices=["cosine", "wsd", "linear"])
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=[None, "int8_ef"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    # minicpm trains with WSD per its paper
+    schedule = "wsd" if args.arch == "minicpm-2b" and \
+        args.schedule == "cosine" else args.schedule
+    run = RunConfig(steps=args.steps, learning_rate=args.lr,
+                    schedule=schedule, moment_dtype=args.moment_dtype,
+                    microbatch=args.microbatch,
+                    checkpoint_dir=args.checkpoint_dir,
+                    checkpoint_every=args.checkpoint_every,
+                    grad_compression=args.grad_compression, seed=args.seed,
+                    warmup_steps=max(args.steps // 20, 1), remat=False)
+    result = train(cfg, run, batch=args.batch, seq=args.seq)
+    ev = evaluate(result["model"], result["params"], batch=args.batch,
+                  seq=args.seq)
+    print(f"final train loss {result['final_loss']:.4f}; "
+          f"eval loss {ev['loss']:.4f} ppl {ev['perplexity']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Encoder-decoder transformer (whisper-medium backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, encoder_seq, d_model). Encoder layers are
+bidirectional self-attention + GeLU MLP; decoder layers are causal
+self-attention + cross-attention + GeLU MLP; LayerNorm (scale-only), no rope
+(whisper uses sinusoidal encoder / learned decoder positions — we use
+sinusoidal for both; noted in DESIGN.md).
+
+Decode maintains per-layer self-attention KV caches plus precomputed
+cross-attention K/V from the encoder pass.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models.common import (dtype_of, embed_init, embed_lookup, dense_init,
+                                 layer_norm, lm_head, sinusoidal_positions)
+from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array        # (Ld, B, S_max, Hkv, hd) decoder self-attn
+    v: jax.Array
+    cross_k: jax.Array  # (Ld, B, S_enc, Hkv, hd) precomputed encoder K/V
+    cross_v: jax.Array
+    pos: jax.Array
+
+
+def _ln(x, w, cfg):
+    return layer_norm(x, w, cfg.norm_eps)
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn": A.init_attention_params(ks[0], cfg, dtype),
+        "mlp": M.init_mlp_params(ks[1], cfg.d_model, cfg.d_ff,
+                                 cfg.num_encoder_layers, dtype, "gelu"),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_attn": A.init_attention_params(ks[0], cfg, dtype),
+        "cross_attn": A.init_attention_params(ks[1], cfg, dtype),
+        "mlp": M.init_mlp_params(ks[2], cfg.d_model, cfg.d_ff, cfg.num_layers,
+                                 dtype, "gelu"),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln_x": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init(key, cfg):
+    dtype = dtype_of(cfg)
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k_enc, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": {"tok": embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                    dtype)},
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "final": {"enc_norm": jnp.ones((cfg.d_model,), dtype),
+                  "norm": jnp.ones((cfg.d_model,), dtype)},
+    }
+
+
+def encode(params, frames: jax.Array, cfg, *, remat: bool = True):
+    """frames: (B, S_enc, D) precomputed embeddings -> (B, S_enc, D)."""
+    dtype = dtype_of(cfg)
+    b, s, _ = frames.shape
+    h = constrain(frames.astype(dtype)
+                  + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None],
+                  ("batch", None, None))
+
+    def body(h, p):
+        p = unshard_fsdp(p)
+        a, _ = A.attention(p["attn"], _ln(h, p["ln1"], cfg),
+                           num_heads=cfg.num_heads,
+                           num_kv_heads=cfg.num_kv_heads,
+                           head_dim=cfg.head_dim, causal=False,
+                           norm_eps=cfg.norm_eps)
+        h = h + a
+        h = h + M.mlp(p["mlp"], _ln(h, p["ln2"], cfg), "gelu")
+        return constrain(h, ("batch", "seq", None)), None
+
+    fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(fn, h, params["enc_layers"], unroll=unroll_flag())
+    return _ln(h, params["final"]["enc_norm"], cfg)
+
+
+def _dec_layer(p, h, enc_out, cfg, cache_kv=None, cache_pos=None,
+               cross_kv=None):
+    p = unshard_fsdp(p)
+    a, new_kv = A.attention(p["self_attn"], _ln(h, p["ln1"], cfg),
+                            num_heads=cfg.num_heads,
+                            num_kv_heads=cfg.num_kv_heads,
+                            head_dim=cfg.head_dim, causal=True,
+                            norm_eps=cfg.norm_eps, cache=cache_kv,
+                            cache_pos=cache_pos)
+    h = h + a
+    if cross_kv is not None:
+        x, _ = A.attention(p["cross_attn"], _ln(h, p["ln_x"], cfg),
+                           num_heads=cfg.num_heads,
+                           num_kv_heads=cfg.num_kv_heads,
+                           head_dim=cfg.head_dim, cached_kv=cross_kv,
+                           norm_eps=cfg.norm_eps)
+    else:
+        x, _ = A.attention(p["cross_attn"], _ln(h, p["ln_x"], cfg),
+                           num_heads=cfg.num_heads,
+                           num_kv_heads=cfg.num_kv_heads,
+                           head_dim=cfg.head_dim, causal=False,
+                           kv_x=enc_out, norm_eps=cfg.norm_eps)
+    h = h + x
+    h = constrain(h + M.mlp(p["mlp"], _ln(h, p["ln2"], cfg), "gelu"),
+                  ("batch", "seq", None))
+    return h, new_kv
+
+
+def apply(params, tokens: jax.Array, frames: jax.Array, cfg, *,
+          remat: bool = True, last_only: bool = False):
+    """Full enc-dec forward: (B, S) tokens + (B, S_enc, D) frames -> logits."""
+    dtype = dtype_of(cfg)
+    b, s = tokens.shape
+    enc_out = encode(params, frames, cfg, remat=remat)
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h = embed_lookup(embed_w, tokens, dtype)
+    h = constrain(h + sinusoidal_positions(s, cfg.d_model).astype(dtype)[None],
+                  ("batch", None, None))
+
+    def body(h, p):
+        h2, _ = _dec_layer(p, h, enc_out, cfg)
+        return h2, None
+
+    fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(fn, h, params["dec_layers"], unroll=unroll_flag())
+    if last_only:
+        h = h[:, -1:, :]
+    h = _ln(h, params["final"]["norm"], cfg)
+    logits = constrain(lm_head(h, embed_w),
+                       ("batch", None, "model"))  # whisper ties emb/head
+    return logits, {}
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> EncDecCache:
+    dtype = dtype_of(cfg)
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    cross = (cfg.num_layers, batch, cfg.encoder_seq, cfg.num_kv_heads,
+             cfg.head_dim)
+    return EncDecCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       cross_k=jnp.zeros(cross, dtype),
+                       cross_v=jnp.zeros(cross, dtype), pos=jnp.int32(0))
+
+
+def precompute_cross_kv(params, enc_out: jax.Array, cfg) -> tuple:
+    """Encoder K/V for every decoder layer (run once per request)."""
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def body(_, p):
+        from repro.models.common import qdot
+        k = qdot(enc_out, p["cross_attn"]["wk"]).reshape(b, s, hkv, hd)
+        v = qdot(enc_out, p["cross_attn"]["wv"]).reshape(b, s, hkv, hd)
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_layers"])
+    return ks, vs
+
+
+def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
+    dtype = dtype_of(cfg)
+    b, s = tokens.shape
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h = embed_lookup(embed_w, tokens, dtype)
+    # sinusoidal position at cache.pos
+    half = cfg.d_model // 2
+    freqs = 1.0 / (10000 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = cache.pos.astype(jnp.float32) * freqs
+    pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+    h = h + pos_emb.astype(dtype)
+
+    def body(h, xs):
+        p, k_l, v_l, ck_l, cv_l = xs
+        h2, new_kv = _dec_layer(p, h, None, cfg,
+                                cache_kv=A.KVCache(k=k_l, v=v_l),
+                                cache_pos=cache.pos,
+                                cross_kv=A.KVCache(k=ck_l, v=cv_l))
+        return h2, (new_kv.k, new_kv.v)
+
+    h, (new_k, new_v) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache.k, cache.v,
+                  cache.cross_k, cache.cross_v), unroll=unroll_flag())
+    h = _ln(h, params["final"]["norm"], cfg)
+    logits = lm_head(h, embed_w)
+    return logits, EncDecCache(k=new_k, v=new_v, cross_k=cache.cross_k,
+                               cross_v=cache.cross_v, pos=cache.pos + s)
+
+
+def block_params(params) -> list[Any]:
+    """[embed, enc_0..enc_{Le-1}, dec_0..dec_{Ld-1}] — two stacks, one plan."""
+    blocks = [params["embed"]]
+    for name in ("enc_layers", "dec_layers"):
+        layers = params[name]
+        n = jax.tree.leaves(layers)[0].shape[0]
+        blocks += [jax.tree.map(lambda x: x[i], layers) for i in range(n)]
+    return blocks

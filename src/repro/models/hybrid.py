@@ -1,0 +1,183 @@
+"""Hybrid Mamba2 + shared-attention LM (zamba2-2.7b).
+
+Structure: num_layers Mamba2 blocks; ONE shared attention+MLP block (shared
+weights, per Zamba2's design) is applied before every ``shared_attn_period``
+Mamba2 layers. With 54 layers and period 6 the shared block runs 9 times.
+Execution scans over 9 units; each unit = shared block + inner scan over the
+unit's 6 stacked Mamba2 layers. The KV cache carries one (B, S, Hkv, hd)
+entry per shared-block *application site* (activations differ per site even
+though weights are shared).
+
+Deviation noted in DESIGN.md: Zamba2's per-application LoRA adapters on the
+shared block are omitted; shared-block quantization applies to all sites.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models import ssm as S
+from repro.models.common import (dtype_of, embed_init, embed_lookup, lm_head,
+                                 norm)
+from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
+
+
+class HybridCache(NamedTuple):
+    conv: jax.Array    # (L, B, W-1, conv_dim)
+    state: jax.Array   # (L, B, H, P, N) f32
+    k: jax.Array       # (U, B, S_max, Hkv, hd) — U shared-attn sites
+    v: jax.Array
+    pos: jax.Array     # scalar int32
+
+
+def _num_units(cfg) -> int:
+    assert cfg.num_layers % cfg.shared_attn_period == 0
+    return cfg.num_layers // cfg.shared_attn_period
+
+
+def init(key, cfg):
+    dtype = dtype_of(cfg)
+    k_emb, k_layers, k_shared, k_mlp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+
+    def init_mamba_layer(k):
+        p = S.init_ssm_params(k, cfg, dtype)
+        p["ln"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+
+    layers = jax.vmap(init_mamba_layer)(layer_keys)
+    shared = {
+        "attn": A.init_attention_params(k_shared, cfg, dtype),
+        "mlp": M.init_mlp_params(k_mlp, cfg.d_model, cfg.d_ff, cfg.num_layers,
+                                 dtype, cfg.mlp_act),
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    return {
+        "embed": {"tok": embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                    dtype)},
+        "layers": layers,
+        "shared": shared,
+        "final": {"norm": jnp.ones((cfg.d_model,), dtype)},
+    }
+
+
+def _shared_block(shared, h, positions, cfg, cache_kv=None, cache_pos=None):
+    a, new_kv = A.attention(
+        shared["attn"], norm(h, shared["ln1"], cfg),
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, positions=positions,
+        rope_theta=cfg.rope_theta, causal=True, norm_eps=cfg.norm_eps,
+        cache=cache_kv, cache_pos=cache_pos)
+    h = h + a
+    h = h + M.mlp(shared["mlp"], norm(h, shared["ln2"], cfg), cfg.mlp_act)
+    return h, new_kv
+
+
+def _unit_stack(layers, cfg):
+    """Reshape stacked (L, ...) mamba params into (U, period, ...)."""
+    u, p = _num_units(cfg), cfg.shared_attn_period
+    return jax.tree.map(lambda x: x.reshape((u, p) + x.shape[1:]), layers)
+
+
+def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
+          last_only: bool = False):
+    dtype = dtype_of(cfg)
+    b, s = tokens.shape
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h = constrain(embed_lookup(embed_w, tokens, dtype),
+                  ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    units = _unit_stack(params["layers"], cfg)
+    shared = unshard_fsdp(params["shared"])
+
+    def unit_body(h, unit_layers):
+        h, _ = _shared_block(shared, h, positions, cfg)
+
+        def mamba_body(h, p_layer):
+            p_layer = unshard_fsdp(p_layer)
+            y = S.ssm_block(p_layer, norm(h, p_layer["ln"], cfg), cfg)
+            return constrain(h + y, ("batch", "seq", None)), None
+
+        inner = jax.checkpoint(mamba_body) if remat else mamba_body
+        h, _ = jax.lax.scan(inner, h, unit_layers, unroll=unroll_flag())
+        return h, None
+
+    fn = jax.checkpoint(unit_body) if remat else unit_body
+    h, _ = jax.lax.scan(fn, h, units, unroll=unroll_flag())
+    if last_only:
+        h = h[:, -1:, :]
+    h = norm(h, params["final"]["norm"], cfg)
+    logits = constrain(lm_head(h, embed_w), ("batch", None, "model"))
+    return logits, {}
+
+
+def init_cache(cfg, batch: int, max_seq: int) -> HybridCache:
+    dtype = dtype_of(cfg)
+    one = S.init_ssm_cache(batch, cfg, dtype)
+    u = _num_units(cfg)
+    kv_shape = (u, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return HybridCache(
+        conv=jnp.zeros((cfg.num_layers,) + one.conv.shape, dtype),
+        state=jnp.zeros((cfg.num_layers,) + one.state.shape, jnp.float32),
+        k=jnp.zeros(kv_shape, dtype), v=jnp.zeros(kv_shape, dtype),
+        pos=jnp.int32(0))
+
+
+def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
+    dtype = dtype_of(cfg)
+    b = tokens.shape[0]
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h2d = embed_lookup(embed_w, tokens[:, 0], dtype)  # (B, D)
+    positions = jnp.broadcast_to(cache.pos[None, None], (b, 1)).astype(jnp.int32)
+    units = _unit_stack(params["layers"], cfg)
+    u, period = _num_units(cfg), cfg.shared_attn_period
+    conv_u = cache.conv.reshape((u, period) + cache.conv.shape[1:])
+    state_u = cache.state.reshape((u, period) + cache.state.shape[1:])
+    shared = unshard_fsdp(params["shared"])
+
+    def unit_body(h, xs):
+        unit_layers, conv_l, state_l, k_l, v_l = xs
+        h3 = h[:, None, :]  # (B, 1, D) for attention
+        h3, new_kv = _shared_block(shared, h3, positions, cfg,
+                                   cache_kv=A.KVCache(k=k_l, v=v_l),
+                                   cache_pos=cache.pos)
+        h = h3[:, 0, :]
+
+        def mamba_body(h, xs_inner):
+            p_layer, c_l, s_l = xs_inner
+            p_layer = unshard_fsdp(p_layer)
+            y, new = S.ssm_decode_step(
+                p_layer, norm(h, p_layer["ln"], cfg),
+                S.SSMCache(conv=c_l, state=s_l), cfg)
+            return h + y, (new.conv, new.state)
+
+        h, (nc, ns) = jax.lax.scan(mamba_body, h, (unit_layers, conv_l,
+                                                   state_l),
+                                   unroll=unroll_flag())
+        return h, (nc, ns, new_kv.k, new_kv.v)
+
+    h2d, (new_conv, new_state, new_k, new_v) = jax.lax.scan(
+        unit_body, h2d, (units, conv_u, state_u, cache.k, cache.v),
+        unroll=unroll_flag())
+    h = norm(h2d, params["final"]["norm"], cfg)
+    logits = lm_head(h[:, None, :], embed_w)
+    new_cache = HybridCache(
+        conv=new_conv.reshape(cache.conv.shape),
+        state=new_state.reshape(cache.state.shape),
+        k=new_k, v=new_v, pos=cache.pos + 1)
+    return logits, new_cache
+
+
+def block_params(params) -> list[Any]:
+    layers = params["layers"]
+    num_layers = jax.tree.leaves(layers)[0].shape[0]
+    blocks = [params["embed"]]
+    blocks += [jax.tree.map(lambda x: x[i], layers) for i in range(num_layers)]
+    blocks.append(params["shared"])
+    return blocks

@@ -1,0 +1,42 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GeLU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, qdot
+
+
+def swiglu(p, x):
+    g = qdot(x, p["w_gate"])
+    u = qdot(x, p["w_up"])
+    return qdot(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+                p["w_down"])
+
+
+def gelu_mlp(p, x):
+    h = qdot(x, p["w_up"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return qdot(h, p["w_down"])
+
+
+def mlp(p, x, act: str):
+    return swiglu(p, x) if act == "swiglu" else gelu_mlp(p, x)
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, num_layers: int, dtype,
+                    act: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    down_scale = 1.0 / np.sqrt(2 * max(num_layers, 1))
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_ff, d_model, dtype),
+            "w_up": dense_init(ks[1], d_ff, d_model, dtype),
+            "w_down": dense_init(ks[2], d_model, d_ff, dtype, scale=down_scale),
+        }
+    return {
+        "w_up": dense_init(ks[0], d_ff, d_model, dtype),
+        "w_down": dense_init(ks[1], d_model, d_ff, dtype, scale=down_scale),
+    }

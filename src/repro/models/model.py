@@ -1,0 +1,65 @@
+"""Model registry: uniform interface over the four family modules."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "encdec": encdec,
+    "hybrid": hybrid,
+    "ssm": ssm_lm,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def module(self):
+        return _FAMILIES[self.cfg.family]
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, key) -> Any:
+        return self.module.init(key, self.cfg)
+
+    def abstract_params(self, key=None) -> Any:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self.module.init(k, self.cfg), key)
+
+    # ---- forward ----------------------------------------------------------
+    def apply(self, params, batch: dict, *, remat: bool = True,
+              last_only: bool = False):
+        """batch: {"tokens": (B,S)} (+ "frames" for enc-dec). -> (logits, aux)."""
+        if self.cfg.family == "encdec":
+            return self.module.apply(params, batch["tokens"], batch["frames"],
+                                     self.cfg, remat=remat,
+                                     last_only=last_only)
+        return self.module.apply(params, batch["tokens"], self.cfg,
+                                 remat=remat, last_only=last_only)
+
+    # ---- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int):
+        return self.module.init_cache(self.cfg, batch, max_seq)
+
+    def decode_step(self, params, cache, tokens):
+        return self.module.decode_step(params, cache, tokens, self.cfg)
+
+    # ---- EWQ --------------------------------------------------------------
+    def block_params(self, params) -> list:
+        return self.module.block_params(params)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return Model(cfg=cfg)

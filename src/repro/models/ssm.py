@@ -1,0 +1,215 @@
+"""Mamba2 (SSD — state-space duality) block: chunked prefill + O(1) decode.
+
+Prefill uses the SSD chunked algorithm: quadratic attention-like computation
+inside fixed-size chunks (decay matrix via segment-sums), and a *sequential
+scan* over chunk states for the inter-chunk recurrence (linear in sequence
+length — the reference "minimal SSD" builds a (nc x nc) chunk decay matrix,
+which is quadratic in chunk count and would blow up at 500k tokens).
+
+Decode maintains (conv_state, ssm_state) and is O(1) per token — the reason
+``long_500k`` is runnable for SSM/hybrid archs.
+
+Per-layer parameters (stored (out, in)):
+  w_in     : (2*d_inner + 2*G*N + H, D)
+  conv_w   : (conv_dim, W)      depthwise causal conv, conv_dim = d_inner+2GN
+  conv_b   : (conv_dim,)
+  A_log    : (H,)               A = -exp(A_log)
+  D        : (H,)               skip gain
+  dt_bias  : (H,)
+  norm_w   : (d_inner,)         gated RMSNorm
+  w_out    : (D, d_inner)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, qdot
+from repro.sharding.ctx import constrain, unroll_flag
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_dim)
+    state: jax.Array  # (B, H, P, N) f32
+
+
+def init_ssm_cache(batch, cfg, dtype=jnp.bfloat16) -> SSMCache:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                         cfg.ssm_state), jnp.float32))
+
+
+def init_ssm_params(key, cfg, dtype):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], 2 * di + 2 * g * n + h, d, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, cfg.ssm_conv),
+                                     jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 1e-1, h))), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], d, di, dtype,
+                            scale=1.0 / np.sqrt(2 * max(cfg.num_layers, 1))),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, L, C), w (C, W) -> (B, L, C)."""
+    bsz, l, c = x.shape
+    width = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + l, :].astype(jnp.float32) \
+            * w[:, i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gated_rms_norm(y, z, w, eps=1e-5):
+    yz = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yz * yz, axis=-1, keepdims=True)
+    return (yz * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(y.dtype)
+
+
+def _ssd_chunked(x, a, bm, cm, chunk: int):
+    """SSD scan. x: (B, L, H, P) premultiplied by dt; a: (B, L, H) = dt*A;
+    bm, cm: (B, L, H, N). Returns (y: (B, L, H, P), final_state)."""
+    bsz, l, h, p = x.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, l)
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    xs = x.reshape(bsz, nc, chunk, h, p)
+    asr = a.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bs = bm.reshape(bsz, nc, chunk, h, n)
+    cs = cm.reshape(bsz, nc, chunk, h, n)
+    a_cum = jnp.cumsum(asr, axis=2)                      # (B, nc, cs, H)
+
+    # --- intra-chunk (diagonal blocks) -------------------------------------
+    # mask BEFORE exp: the upper triangle of seg is positive (a_cum is
+    # decreasing), and exp(+big) -> inf would poison gradients through the
+    # masked-out entries (0 * inf = nan in the backward pass).
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]   # (B,nc,s,t,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    lmat = jnp.exp(seg)
+    y_diag = jnp.einsum("bcshn,bcthn,bcsth,bcthp->bcshp",
+                        cs.astype(jnp.float32), bs.astype(jnp.float32),
+                        lmat, xs.astype(jnp.float32))
+
+    # --- per-chunk end states ----------------------------------------------
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)       # (B,nc,cs,H)
+    states = jnp.einsum("bcthn,bcth,bcthp->bchpn",
+                        bs.astype(jnp.float32), decay_states,
+                        xs.astype(jnp.float32))               # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                 # (B,nc,H)
+
+    # --- inter-chunk recurrence: sequential scan (linear in nc) ------------
+    def scan_f(s, inp):
+        cd, st = inp                                          # (B,H), (B,H,P,N)
+        s_new = cd[:, :, None, None] * s + st
+        return s_new, s                                       # emit ENTERING state
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, entering = jax.lax.scan(
+        scan_f, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                     jnp.moveaxis(states, 1, 0)), unroll=unroll_flag())
+    entering = jnp.moveaxis(entering, 0, 1)                   # (B,nc,H,P,N)
+
+    # --- off-diagonal contribution ------------------------------------------
+    state_decay = jnp.exp(a_cum)                              # (B,nc,cs,H)
+    y_off = jnp.einsum("bcshn,bcsh,bchpn->bcshp",
+                       cs.astype(jnp.float32), state_decay, entering)
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def _split_zxbcdt(zxbcdt, cfg):
+    di = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _heads_from_groups(m, cfg):
+    """(B, ..., G, N) -> (B, ..., H, N) by repeating groups."""
+    rep = cfg.ssm_nheads // cfg.ssm_ngroups
+    return jnp.repeat(m, rep, axis=-2)
+
+
+def ssm_block(p, u: jax.Array, cfg):
+    """Prefill/train path. u: (B, L, D) -> (B, L, D)."""
+    bsz, l, _ = u.shape
+    di, h, pd = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = constrain(qdot(u, p["w_in"]), ("batch", None, None))
+    z, xbc, dt = _split_zxbcdt(zxbcdt, cfg)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    ).astype(u.dtype)
+    x = xbc[..., :di].reshape(bsz, l, h, pd)
+    x = constrain(x, ("batch", None, "model", None))
+    bm = _heads_from_groups(
+        xbc[..., di:di + g * n].reshape(bsz, l, g, n), cfg)
+    cm = _heads_from_groups(
+        xbc[..., di + g * n:].reshape(bsz, l, g, n), cfg)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, H)
+    a = -jnp.exp(p["A_log"])                                       # (H,)
+    y, _ = _ssd_chunked(x * dt[..., None].astype(x.dtype),
+                        dt * a, bm, cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = _gated_rms_norm(y.reshape(bsz, l, di).astype(u.dtype),
+                        z, p["norm_w"], cfg.norm_eps)
+    return qdot(y, p["w_out"])
+
+
+def ssm_decode_step(p, u: jax.Array, cache: SSMCache, cfg):
+    """Single-token decode. u: (B, D) -> ((B, D), new cache)."""
+    bsz, _ = u.shape
+    di, h, pd = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+
+    zxbcdt = qdot(u, p["w_in"])                                    # (B, ...)
+    z, xbc, dt = _split_zxbcdt(zxbcdt, cfg)
+
+    window = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)
+    conv_out = (jnp.einsum("bwc,cw->bc", window.astype(jnp.float32),
+                           p["conv_w"].astype(jnp.float32))
+                + p["conv_b"].astype(jnp.float32))
+    new_conv = window[:, 1:, :]
+    xbc = jax.nn.silu(conv_out).astype(u.dtype)
+
+    x = xbc[..., :di].reshape(bsz, h, pd)
+    bm = _heads_from_groups(xbc[..., di:di + g * n].reshape(bsz, g, n), cfg)
+    cm = _heads_from_groups(xbc[..., di + g * n:].reshape(bsz, g, n), cfg)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B, H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                           # (B, H)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    state = (cache.state * da[:, :, None, None]
+             + jnp.einsum("bhp,bhn->bhpn", xdt, bm.astype(jnp.float32)))
+    y = (jnp.einsum("bhpn,bhn->bhp", state, cm.astype(jnp.float32))
+         + p["D"][None, :, None] * x.astype(jnp.float32))
+    y = _gated_rms_norm(y.reshape(bsz, di).astype(u.dtype), z, p["norm_w"],
+                        cfg.norm_eps)
+    return qdot(y, p["w_out"]), SSMCache(conv=new_conv, state=state)

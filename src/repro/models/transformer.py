@@ -1,0 +1,235 @@
+"""Decoder-only LM covering the dense and MoE families.
+
+Architectures served: chameleon-34b (qk-norm, VQ-token vocab), minicpm-2b,
+yi-9b, llama3.2-3b, olmo-1b (non-parametric LN, tied embeddings),
+arctic-480b (MoE + dense residual), grok-1-314b (MoE).
+
+Layers are stacked on a leading axis and executed with lax.scan (optionally
+rematerialized); parameters may be raw arrays or QTensors (EWQ-quantized).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models import moe as MOE
+from repro.models.common import (dtype_of, embed_init, embed_lookup, dense_init,
+                                 lm_head, norm, qdot)
+from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
+
+
+class DecodeCache(NamedTuple):
+    k: jax.Array    # (L, B, S_max, Hkv, hd)
+    v: jax.Array    # (L, B, S_max, Hkv, hd)
+    pos: jax.Array  # scalar int32 — next write position
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"attn": A.init_attention_params(ks[0], cfg, dtype,
+                                         with_qk_norm=cfg.qk_norm)}
+    if not cfg.nonparametric_norm:
+        p["ln1"] = jnp.ones((cfg.d_model,), dtype)
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.num_experts > 0:
+        p["moe"] = MOE.init_moe_params(ks[1], cfg.d_model, cfg.expert_d_ff,
+                                       cfg.num_experts, cfg.num_layers, dtype)
+        if cfg.dense_residual:
+            p["mlp"] = M.init_mlp_params(ks[2], cfg.d_model, cfg.d_ff,
+                                         cfg.num_layers, dtype, cfg.mlp_act)
+    else:
+        p["mlp"] = M.init_mlp_params(ks[2], cfg.d_model, cfg.d_ff,
+                                     cfg.num_layers, dtype, cfg.mlp_act)
+    return p
+
+
+def init(key, cfg):
+    dtype = dtype_of(cfg)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": {"tok": embed_init(k_emb, cfg.padded_vocab, cfg.d_model,
+                                    dtype)},
+        "layers": layers,
+        "final": {},
+    }
+    if not cfg.nonparametric_norm:
+        params["final"]["norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["final"]["head"] = dense_init(k_head, cfg.padded_vocab,
+                                             cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer body
+# ---------------------------------------------------------------------------
+
+def _layer(p, h, positions, cfg, cache_kv=None, cache_pos=None):
+    p = unshard_fsdp(p)
+    ln1 = p.get("ln1")
+    ln2 = p.get("ln2")
+    a, new_kv = A.attention(
+        p["attn"], norm(h, ln1, cfg),
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.head_dim, positions=positions,
+        rope_theta=cfg.rope_theta, causal=True, qk_norm=cfg.qk_norm,
+        norm_eps=cfg.norm_eps, cache=cache_kv, cache_pos=cache_pos)
+    h = h + a
+    hn = norm(h, ln2, cfg)
+    aux = {}
+    if cfg.num_experts > 0:
+        m, aux = MOE.moe_block(p["moe"], hn, num_experts=cfg.num_experts,
+                               top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+        if cfg.dense_residual:
+            m = m + M.mlp(p["mlp"], hn, cfg.mlp_act)
+    else:
+        m = M.mlp(p["mlp"], hn, cfg.mlp_act)
+    h = constrain(h + m, ("batch", "seq", None))
+    return h, aux, new_kv
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
+          return_cache: bool = False, last_only: bool = False):
+    """tokens: (B, S) int32 -> logits (B, S, V_pad) f32 (+ aux dict).
+
+    last_only=True computes head logits for the final position only
+    (serving prefill: next-token logits without a (B, S, V) temp)."""
+    dtype = dtype_of(cfg)
+    b, s = tokens.shape
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h = constrain(embed_lookup(embed_w, tokens, dtype),
+                  ("batch", None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, p_layer):
+        h2, aux, _ = _layer(p_layer, h, positions, cfg)
+        return h2, aux
+
+    def body_cache(h, p_layer):
+        p_layer = unshard_fsdp(p_layer)
+        hn = norm(h, p_layer.get("ln1"), cfg)
+        a, kv = A.attention(
+            p_layer["attn"], hn, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
+            positions=positions, rope_theta=cfg.rope_theta, causal=True,
+            qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps, emit_kv=True)
+        h = h + a
+        hn2 = norm(h, p_layer.get("ln2"), cfg)
+        if cfg.num_experts > 0:
+            m, aux = MOE.moe_block(p_layer["moe"], hn2,
+                                   num_experts=cfg.num_experts,
+                                   top_k=cfg.top_k,
+                                   capacity_factor=cfg.capacity_factor)
+            if cfg.dense_residual:
+                m = m + M.mlp(p_layer["mlp"], hn2, cfg.mlp_act)
+        else:
+            m = M.mlp(p_layer["mlp"], hn2, cfg.mlp_act)
+        return h + m, (aux, kv)
+
+    from repro.quant.apply import SegmentedParams
+    layers = params["layers"]
+    if return_cache:
+        fn = jax.checkpoint(body_cache) if remat else body_cache
+        h, (auxs, kvs) = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
+        cache = DecodeCache(k=kvs[0], v=kvs[1], pos=jnp.int32(s))
+    elif isinstance(layers, SegmentedParams):
+        fn = jax.checkpoint(body) if remat else body
+        auxs = None
+        for seg in layers.segments:
+            h, seg_auxs = jax.lax.scan(fn, h, seg.params,
+                                       unroll=unroll_flag())
+            auxs = seg_auxs if auxs is None else jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), auxs, seg_auxs)
+        cache = None
+    else:
+        fn = jax.checkpoint(body) if remat else body
+        h, auxs = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
+        cache = None
+
+    if last_only:
+        h = h[:, -1:, :]
+    h = norm(h, params["final"].get("norm"), cfg)
+    head_w = unshard_fsdp(params["final"]).get("head", embed_w)
+    logits = constrain(lm_head(h, head_w), ("batch", None, "model"))
+    aux = {k: jnp.sum(v) for k, v in (auxs or {}).items()}
+    return (logits, aux, cache) if return_cache else (logits, aux)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int) -> DecodeCache:
+    dtype = dtype_of(cfg)
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return DecodeCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       pos=jnp.int32(0))
+
+
+def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
+    """tokens: (B, 1) -> (logits (B, 1, V_pad), new cache)."""
+    dtype = dtype_of(cfg)
+    b, s = tokens.shape
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h = constrain(embed_lookup(embed_w, tokens, dtype),
+                  ("batch", None, None))
+    positions = jnp.broadcast_to(cache.pos[None, None], (b, s)).astype(jnp.int32)
+
+    def body(h, xs):
+        p_layer, k_l, v_l = xs
+        h2, _, new_kv = _layer(p_layer, h, positions, cfg,
+                               cache_kv=A.KVCache(k=k_l, v=v_l),
+                               cache_pos=cache.pos)
+        return h2, (new_kv.k, new_kv.v)
+
+    from repro.quant.apply import SegmentedParams
+    layers = params["layers"]
+    if isinstance(layers, SegmentedParams):
+        ks, vs = [], []
+        for seg in layers.segments:
+            h, (nk, nv) = jax.lax.scan(
+                body, h, (seg.params, cache.k[seg.start:seg.stop],
+                          cache.v[seg.start:seg.stop]),
+                unroll=unroll_flag())
+            ks.append(nk)
+            vs.append(nv)
+        new_k = jnp.concatenate(ks, axis=0)
+        new_v = jnp.concatenate(vs, axis=0)
+    else:
+        h, (new_k, new_v) = jax.lax.scan(body, h,
+                                         (layers, cache.k, cache.v),
+                                         unroll=unroll_flag())
+    h = norm(h, params["final"].get("norm"), cfg)
+    head_w = unshard_fsdp(params["final"]).get("head", embed_w)
+    logits = constrain(lm_head(h, head_w), ("batch", None, "model"))
+    return logits, DecodeCache(k=new_k, v=new_v, pos=cache.pos + s)
+
+
+# ---------------------------------------------------------------------------
+# EWQ view
+# ---------------------------------------------------------------------------
+
+def block_params(params) -> list[Any]:
+    """[embedding block, layer_0, ..., layer_{L-1}] — paper exec_index order."""
+    layers = params["layers"]
+    num_layers = jax.tree.leaves(layers)[0].shape[0]
+    blocks = [params["embed"]]
+    for i in range(num_layers):
+        blocks.append(jax.tree.map(lambda x: x[i], layers))
+    return blocks

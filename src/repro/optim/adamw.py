@@ -1,0 +1,109 @@
+"""AdamW with configurable moment dtype (f32 / bf16 / int8-quantized).
+
+The int8 option applies the paper's idea to optimizer state: moments are
+stored as group-wise absmax int8 (the same quantizer the EWQ serving path
+uses), dequantized on read and requantized on write. This is the 8-bit-Adam
+analogue that makes ≥300B-param training fit per-device HBM budgets
+(EXPERIMENTS.md §Dry-run discusses the arctic/grok memory deltas).
+
+Moments inherit the parameter sharding (FSDP+TP), giving ZeRO-equivalent
+optimizer-state partitioning under pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QTensor
+from repro.quant.quantize import quantize_int8, dequantize
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+def _encode_moment(x: jax.Array, dtype: str):
+    if dtype == "float32":
+        return x.astype(jnp.float32)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    if dtype == "int8":
+        if x.ndim >= 1 and x.shape[-1] % 128 == 0:
+            return quantize_int8(x, group=128)
+        return x.astype(jnp.float32)  # small/ragged leaves stay f32
+    raise ValueError(dtype)
+
+
+def _decode_moment(x) -> jax.Array:
+    if isinstance(x, QTensor):
+        return dequantize(x, jnp.float32)
+    return x.astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Any            # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: _encode_moment(jnp.zeros(p.shape, jnp.float32),
+                                     self.moment_dtype), params)
+        zeros_v = jax.tree.map(
+            lambda p: _encode_moment(jnp.zeros(p.shape, jnp.float32),
+                                     self.moment_dtype), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+    def update(self, grads, state: AdamWState, params):
+        count = state.count + 1
+        lr = (self.learning_rate(count)
+              if callable(self.learning_rate) else self.learning_rate)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def leaf(g, m_enc, v_enc, p):
+            g = g.astype(jnp.float32)
+            m = b1 * _decode_moment(m_enc) + (1 - b1) * g
+            v = b2 * _decode_moment(v_enc) + (1 - b2) * g * g
+            update = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                update = update + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+            return new_p, _encode_moment(m, self.moment_dtype), \
+                _encode_moment(v, self.moment_dtype)
+
+        is_q = lambda x: isinstance(x, QTensor)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m, is_leaf=is_q)
+        flat_v = jax.tree.leaves(state.v, is_leaf=is_q)
+        flat_p, treedef = jax.tree.flatten(params)
+        out = [leaf(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, AdamWState(count=count, m=new_m, v=new_v)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm

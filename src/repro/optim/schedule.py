@@ -1,0 +1,50 @@
+"""LR schedules: linear warmup + {cosine, WSD (minicpm), linear} decay."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, base_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+
+def wsd(step, *, base_lr: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): warmup, long stable plateau, then a
+    short exponential-ish (here: linear-in-log) decay over the last
+    ``decay_frac`` of training."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total_steps * (1.0 - decay_frac)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    decayed = base_lr * jnp.exp(jnp.log(final_frac) * frac)
+    out = jnp.where(step < warmup_steps, warm, base_lr)
+    return jnp.where(step > decay_start, decayed, out)
+
+
+def warmup_linear(step, *, base_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    lin = base_lr * (1 - (1 - final_frac) * frac)
+    return jnp.where(step < warmup_steps, warm, lin)
+
+
+SCHEDULES = {"cosine": warmup_cosine, "wsd": wsd, "linear": warmup_linear}
+
+
+def make_schedule(name: str, *, base_lr: float, warmup_steps: int,
+                  total_steps: int):
+    fn = SCHEDULES[name]
+    return lambda step: fn(step, base_lr=base_lr, warmup_steps=warmup_steps,
+                           total_steps=total_steps)

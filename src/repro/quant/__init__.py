@@ -1,0 +1,4 @@
+from repro.quant.qtypes import QTensor, is_qtensor  # noqa: F401
+from repro.quant.quantize import (  # noqa: F401
+    quantize, dequantize, quantize_int8, quantize_int4, quantize_ternary,
+)

@@ -1,0 +1,76 @@
+"""Quantized tensor pytree for weight-only quantization.
+
+A QTensor stores:
+  data   : int8 array. For int8 this is the values; for int4 two nibbles are
+           packed per int8 along the *last* (contraction-group) axis; for
+           ternary values are {-1, 0, +1} stored in int8 (2 trits per byte
+           would complicate the matmul kernel; size accounting reports the
+           1.58-bit figure separately).
+  scale  : bf16/f32 per-group scales with shape data_shape[:-1] + (groups,)
+  precision: "int8" | "int4" | "ternary"
+  shape  : logical (unquantized) shape
+  group  : group size along the last axis (contraction dim), default 128.
+
+Registered as a pytree so QTensors flow through jit/scan/pjit and can carry
+shardings like any other leaf bundle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_GROUP = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    data: jax.Array
+    scale: jax.Array
+    precision: str = dataclasses.field(metadata={"static": True})
+    shape: tuple[int, ...] = dataclasses.field(metadata={"static": True})
+    group: int = DEFAULT_GROUP
+
+    # -- pytree protocol -----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.precision, self.shape, self.group)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        precision, shape, group = aux
+        return cls(data=data, scale=scale, precision=precision, shape=shape,
+                   group=group)
+
+    # -- info ------------------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def logical_size(self) -> int:
+        return int(np.prod(self.shape))
+
+    def nbytes_effective(self) -> float:
+        """Effective storage bytes (counts ternary at 1.58 bits even though
+        the in-memory carrier is int8)."""
+        bits = {"int8": 8.0, "int4": 4.0, "ternary": 1.58}[self.precision]
+        scale_bytes = float(np.prod(self.scale.shape)) * 2.0  # bf16 scales
+        return self.logical_size * bits / 8.0 + scale_bytes
+
+
+def is_qtensor(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+def qtensor_specs(q: QTensor) -> "QTensor":
+    """ShapeDtypeStruct twin of a QTensor (for dry-run input_specs)."""
+    return QTensor(
+        data=jax.ShapeDtypeStruct(q.data.shape, q.data.dtype),
+        scale=jax.ShapeDtypeStruct(q.scale.shape, q.scale.dtype),
+        precision=q.precision, shape=q.shape, group=q.group)

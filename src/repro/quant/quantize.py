@@ -1,0 +1,105 @@
+"""Group-wise symmetric absmax quantization (int8 / packed int4 / ternary).
+
+Quantization groups run along the tensor's LAST axis. All matmul weights in
+this framework are stored ``(out_features, in_features)`` (and stacked
+``(layers, out, in)``), so the last axis is the contraction axis and the
+per-group scale factors out of each partial dot product — dequantization
+fuses into the matmul (see repro/kernels/qmatmul). Embedding tables (V, D)
+are gathered along axis 0, so per-row groups along D likewise dequantize
+cheaply at lookup.
+
+int4 packing: two nibbles per int8, low nibble = even element. Packing is
+along the last axis, so a (..., K) tensor stores (..., K//2) int8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.qtypes import DEFAULT_GROUP, QTensor
+
+
+def _grouped(w: jax.Array, group: int) -> jax.Array:
+    *lead, k = w.shape
+    assert k % group == 0, f"last dim {k} not divisible by group {group}"
+    return w.reshape(*lead, k // group, group)
+
+
+def quantize_int8(w: jax.Array, group: int = DEFAULT_GROUP) -> QTensor:
+    g = _grouped(w.astype(jnp.float32), group)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = absmax / 127.0
+    q = jnp.round(g / jnp.where(scale == 0, 1.0, scale))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return QTensor(data=q.reshape(w.shape), scale=scale[..., 0].astype(jnp.bfloat16),
+                   precision="int8", shape=tuple(w.shape), group=group)
+
+
+def quantize_int4(w: jax.Array, group: int = DEFAULT_GROUP) -> QTensor:
+    g = _grouped(w.astype(jnp.float32), group)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = absmax / 7.0
+    q = jnp.round(g / jnp.where(scale == 0, 1.0, scale))
+    q = jnp.clip(q, -7, 7).astype(jnp.int8).reshape(w.shape)
+    # Pack two 4-bit values per int8 along the last axis.
+    *lead, k = w.shape
+    q2 = q.reshape(*lead, k // 2, 2)
+    lo = q2[..., 0] & 0x0F
+    hi = (q2[..., 1] & 0x0F) << 4
+    packed = (lo | hi).astype(jnp.int8)
+    return QTensor(data=packed, scale=scale[..., 0].astype(jnp.bfloat16),
+                   precision="int4", shape=tuple(w.shape), group=group)
+
+
+def unpack_int4(data: jax.Array) -> jax.Array:
+    """Unpack int8-packed nibbles back to signed int8 in [-7, 7]."""
+    lo = (data & 0x0F).astype(jnp.int8)
+    hi = ((data >> 4) & 0x0F).astype(jnp.int8)
+    # Sign-extend 4-bit two's complement.
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=-1).reshape(*data.shape[:-1], data.shape[-1] * 2)
+
+
+def quantize_ternary(w: jax.Array, group: int = DEFAULT_GROUP) -> QTensor:
+    """1.58-bit (BitNet-style) ternary: W ~ scale * sign(W) * 1{|W| > tau},
+    tau = mean(|W|) per group (standard absmean ternarization)."""
+    g = _grouped(w.astype(jnp.float32), group)
+    absmean = jnp.mean(jnp.abs(g), axis=-1, keepdims=True)
+    q = jnp.where(jnp.abs(g) > 0.5 * absmean, jnp.sign(g), 0.0)
+    # Scale minimizes ||W - s*q||^2 per group: s = <W,q>/<q,q>.
+    num = jnp.sum(g * q, axis=-1, keepdims=True)
+    den = jnp.sum(q * q, axis=-1, keepdims=True)
+    scale = num / jnp.where(den == 0, 1.0, den)
+    return QTensor(data=q.reshape(w.shape).astype(jnp.int8),
+                   scale=scale[..., 0].astype(jnp.bfloat16),
+                   precision="ternary", shape=tuple(w.shape), group=group)
+
+
+def quantize(w: jax.Array, precision: str, group: int = DEFAULT_GROUP) -> QTensor:
+    if precision == "int8":
+        return quantize_int8(w, group)
+    if precision in ("int4", "int3"):  # int3 uses the int4 carrier at [-3,3]
+        return quantize_int4(w, group)
+    if precision == "ternary":
+        return quantize_ternary(w, group)
+    raise ValueError(f"cannot quantize to precision={precision!r}")
+
+
+def dequantize(q: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize. Shapes are derived from ``q.data`` (not the static
+    ``q.shape`` metadata) so QTensors stay valid under scan/vmap slicing."""
+    if q.precision == "int8":
+        vals = q.data.astype(jnp.float32)
+    elif q.precision == "int4":
+        vals = unpack_int4(q.data).astype(jnp.float32)
+    elif q.precision == "ternary":
+        vals = q.data.astype(jnp.float32)
+    else:
+        raise ValueError(q.precision)
+    *lead, k = vals.shape
+    g = vals.reshape(*lead, k // q.group, q.group)
+    out = g * q.scale.astype(jnp.float32)[..., None]
+    return out.reshape(*lead, k).astype(dtype)

@@ -1,0 +1,104 @@
+"""Batched serving engine with EWQ/FastEWQ-quantized weights.
+
+Deployment story (the paper's §3.4/§4 pipeline, end-to-end):
+  1. at startup, pick a QuantPlan — full EWQ (weights analyzed), FastEWQ
+     (O(1), metadata only), or resource-fitted via cluster.fit_plan_to_hbm;
+  2. quantize params per plan (block-granular mixed precision);
+  3. serve: prefill fills the KV/SSM cache, greedy/temperature decode steps
+     run against quantized weights (decode is weight-bytes-bound — exactly
+     where int8/int4 payloads pay off, see EXPERIMENTS.md §Perf).
+
+Prefill paths: transformer families use the fused apply(return_cache=True);
+SSM/hybrid/enc-dec prefill by scanning decode steps over the prompt (their
+decode matches teacher-forced forward exactly — tests/test_models_parity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPlan
+from repro.models.model import Model
+from repro.serving.quantized import apply_plan_to_params
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: jax.Array          # (B, prompt+new)
+    logprobs: jax.Array        # (B, new) chosen-token logprobs
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_seq: int,
+                 plan: Optional[QuantPlan] = None, group: int = 128):
+        self.model = model
+        self.cfg = model.cfg
+        self.max_seq = max_seq
+        self.plan = plan
+        if plan is not None:
+            params = apply_plan_to_params(model, params, plan, group)
+        self.params = params
+        self._decode = jax.jit(model.decode_step)
+
+    # -- prefill -------------------------------------------------------------
+    def _prefill_scan(self, prompts: jax.Array):
+        """Universal prefill: scan decode steps over prompt tokens."""
+        b, s = prompts.shape
+        cache = self.model.init_cache(b, self.max_seq)
+
+        def body(cache, tok):
+            logits, cache = self.model.decode_step(self.params, cache,
+                                                   tok[:, None])
+            return cache, logits[:, 0]
+
+        cache, logits = jax.lax.scan(body, cache, prompts.T)
+        return cache, logits[-1]  # logits after last prompt token
+
+    def prefill(self, prompts: jax.Array):
+        return jax.jit(self._prefill_scan)(prompts)
+
+    # -- generation ------------------------------------------------------------
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> GenerateResult:
+        b = prompts.shape[0]
+        cache, last_logits = self.prefill(prompts)
+        toks = [prompts]
+        logprobs = []
+        logits = last_logits
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(max_new_tokens):
+            lp = jax.nn.log_softmax(
+                logits[:, :self.cfg.vocab_size].astype(jnp.float32), -1)
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, lp / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lp, axis=-1)
+            logprobs.append(jnp.take_along_axis(lp, nxt[:, None], 1)[:, 0])
+            toks.append(nxt[:, None].astype(jnp.int32))
+            step_logits, cache = self._decode(self.params, cache,
+                                              nxt[:, None].astype(jnp.int32))
+            logits = step_logits[:, 0]
+        return GenerateResult(tokens=jnp.concatenate(toks, axis=1),
+                              logprobs=jnp.stack(logprobs, axis=1),
+                              steps=max_new_tokens)
+
+    # -- diagnostics -----------------------------------------------------------
+    def weight_bytes(self) -> float:
+        from repro.quant.apply import tree_nbytes
+        from repro.quant.apply import SegmentedParams
+        total = 0.0
+        for v in jax.tree.leaves(
+                self.params,
+                is_leaf=lambda x: isinstance(x, SegmentedParams)):
+            if isinstance(v, SegmentedParams):
+                total += v.nbytes_effective()
+            else:
+                total += tree_nbytes(v)
+        return total

@@ -1,0 +1,130 @@
+"""EWQ-quantized serving: plan application + dry-run input builders.
+
+This is the paper's deployment story as a first-class serving feature:
+weights are quantized per the EWQ/FastEWQ plan (block-granular mixed
+precision), logits stay full quality for high-entropy blocks, and decode —
+which is weight-bytes-bound — reads int8/int4 payloads instead of bf16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import BlockDecision, QuantPlan
+from repro.models.model import Model
+from repro.quant.apply import apply_plan_stacked, quantize_tree
+
+
+def _subplan(plan: QuantPlan, lo: int, hi: int) -> QuantPlan:
+    return dataclasses.replace(plan, decisions=plan.decisions[lo:hi])
+
+
+def fastewq_metadata_plan(cfg: ModelConfig, variant: str = "8bit-mixed",
+                          quant_fraction: float = 0.41) -> QuantPlan:
+    """O(1) plan from architecture metadata only (no weights) — the FastEWQ
+    deployment path. Mirrors the trained classifier's dominant feature
+    (exec_index): the trailing ``quant_fraction`` of transformer blocks are
+    selected, int8 by default; the final block drops to int4 under the
+    "4bit/8bit" variant (paper §6.3). When the trained FastEWQ classifier
+    is available (repro/core/fastewq.py) it replaces this closed form; the
+    closed form equals the classifier's majority behavior on the paper's
+    dataset and keeps the dry-run dependency-free.
+    """
+    blocks = []
+    n_layers = cfg.num_layers + (cfg.num_encoder_layers or 0)
+    extra = 1 if cfg.family == "hybrid" else 0
+    total = 1 + n_layers + extra  # embedding block + layers (+ shared)
+    n_quant = max(1, int(round(n_layers * quant_fraction)))
+    first_quant = 1 + (n_layers - n_quant)
+    for i in range(total):
+        if i == 0:
+            prec = "raw"  # embedding stays raw in the fast variants
+        elif i >= first_quant and i <= n_layers:
+            last = i == n_layers
+            prec = ("int4" if (variant.startswith("4bit") and last)
+                    else "int8")
+        elif i > n_layers:  # hybrid shared block
+            prec = "int8"
+        else:
+            prec = "raw"
+        blocks.append(BlockDecision(block_index=i, exec_index=i + 1,
+                                    entropy=float("nan"), num_parameters=0,
+                                    precision=prec))
+    return QuantPlan(decisions=blocks, mu=float("nan"), sigma=float("nan"),
+                     threshold=float("nan"), x_factor=1.0)
+
+
+def apply_plan_to_params(model: Model, params, plan: QuantPlan,
+                         group: int = 128):
+    """Quantize a model's params per an EWQ plan (block order matches
+    Model.block_params: [embed] + layers [+ shared / enc+dec])."""
+    cfg = model.cfg
+    new = dict(params)
+    new["embed"] = quantize_tree(params["embed"],
+                                 plan.decisions[0].precision, group)
+    if cfg.family in ("dense", "moe", "ssm"):
+        lp = _subplan(plan, 1, 1 + cfg.num_layers)
+        new["layers"] = apply_plan_stacked(params["layers"], lp, group)
+    elif cfg.family == "hybrid":
+        lp = _subplan(plan, 1, 1 + cfg.num_layers)
+        seg = apply_plan_stacked(params["layers"], lp, group)
+        # hybrid exec interleaves shared attention inside the unit scan;
+        # mixed per-layer plans require a uniform segment per unit stack —
+        # enforce single-segment (uniform) for now (DESIGN.md §7).
+        if len(seg.segments) == 1:
+            new["layers"] = seg.segments[0].params
+        else:
+            new["layers"] = params["layers"]  # fall back to raw stack
+        new["shared"] = quantize_tree(params["shared"],
+                                      plan.decisions[-1].precision, group)
+    elif cfg.family == "encdec":
+        ne = cfg.num_encoder_layers
+        ep = _subplan(plan, 1, 1 + ne)
+        dp = _subplan(plan, 1 + ne, 1 + ne + cfg.num_layers)
+        enc = apply_plan_stacked(params["enc_layers"], ep, group)
+        dec = apply_plan_stacked(params["dec_layers"], dp, group)
+        new["enc_layers"] = (enc.segments[0].params
+                             if len(enc.segments) == 1 else
+                             params["enc_layers"])
+        new["dec_layers"] = (dec.segments[0].params
+                             if len(dec.segments) == 1 else
+                             params["dec_layers"])
+    return new
+
+
+def explicit_plan(cfg: ModelConfig, layer_precisions: list[str],
+                  variant: str = "8bit-mixed") -> QuantPlan:
+    """Plan with explicit per-layer precisions (embed stays raw) — used by
+    the dry-run's two-stack (raw/quant) affine cost extrapolation."""
+    assert len(layer_precisions) == cfg.num_layers
+    ds = [BlockDecision(block_index=0, exec_index=1, entropy=float("nan"),
+                        num_parameters=0, precision="raw")]
+    for i, p in enumerate(layer_precisions):
+        ds.append(BlockDecision(block_index=i + 1, exec_index=i + 2,
+                                entropy=float("nan"), num_parameters=0,
+                                precision=p))
+    if cfg.family == "hybrid":
+        ds.append(BlockDecision(block_index=len(ds), exec_index=len(ds) + 1,
+                                entropy=float("nan"), num_parameters=0,
+                                precision="raw"))
+    return QuantPlan(decisions=ds, mu=float("nan"), sigma=float("nan"),
+                     threshold=float("nan"), x_factor=1.0)
+
+
+def quantize_decode_inputs(model: Model, shape: ShapeConfig, variant: str,
+                           plan: Optional[QuantPlan] = None):
+    """Dry-run builder: abstract EWQ-quantized params + cache + tokens."""
+    from repro.launch.steps import decode_inputs, make_decode_step
+    plan = plan or fastewq_metadata_plan(model.cfg, variant)
+    # abstract params must enter eval_shape as ARGUMENTS (tracers support
+    # slicing; bare ShapeDtypeStructs do not)
+    params_q = jax.eval_shape(
+        lambda p: apply_plan_to_params(model, p, plan),
+        model.abstract_params())
+    cache, tokens = decode_inputs(model, shape)
+    return make_decode_step(model), (params_q, cache, tokens)

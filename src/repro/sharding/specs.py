@@ -1,0 +1,233 @@
+"""Named-axis sharding rules (DP/FSDP/TP/EP/SP) for every model family.
+
+Mesh axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+The "pod" axis extends data parallelism (batch and FSDP shard over
+("pod", "data")), so gradient all-reduces are hierarchical: intra-pod over
+"data", inter-pod (DCN) over "pod".
+
+Parameter policy (2D "FSDP+TP", MaxText-style):
+  column-parallel weights (wq/wk/wv/w_gate/w_up/w_in, (out, in)):
+      out -> "model", in -> fsdp axes
+  row-parallel weights (wo/w_down/w_out, (out, in)):
+      out -> fsdp axes, in -> "model"
+  embeddings / lm head (V, D):  V -> "model", D -> fsdp axes
+  MoE experts (E, F, D): E -> "model" (EP) when E % |model| == 0, else
+      F/D -> "model" (expert TP); the other matrix dim -> fsdp axes
+  norms / biases / scalars: replicated
+  QTensor leaves: payload inherits the weight rule; per-group scales inherit
+      the same dims (group axis divides the contraction axis).
+
+Dims are sharded only when divisible by the axis size — otherwise that dim
+is replicated (GSPMD would pad; we prefer predictable layouts).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import (DictKey, FlattenedIndexKey, GetAttrKey,
+                           SequenceKey)
+
+COLUMN_PARALLEL = ("wq", "wk", "wv", "w_gate", "w_up", "w_in")
+ROW_PARALLEL = ("wo", "w_down", "w_out")
+EMBED = ("tok", "head")
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, GetAttrKey):
+            names.append(k.name)
+        elif isinstance(k, SequenceKey):
+            names.append(f"[{k.idx}]")
+        elif isinstance(k, FlattenedIndexKey):
+            names.append(f"#{k.key}")
+    return names
+
+
+def _div(dim: int, mesh: Mesh, axis) -> Optional[Any]:
+    """axis if dim divisible by its size, else None (replicate)."""
+    if axis is None:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _weight_spec(names: list[str], shape: tuple, mesh: Mesh,
+                 fsdp: Any, is_scale: bool = False) -> P:
+    """Spec for a (possibly layer-stacked, possibly expert-stacked) matrix."""
+    leaf = None
+    for n in reversed(names):
+        if not n.startswith("#"):
+            leaf = n
+            break
+    ndim = len(shape)
+
+    # norms / biases / 1D leaves: replicate
+    if ndim <= 1:
+        return P()
+
+    # Embedding / head tables: (V, D)
+    if leaf in EMBED:
+        return P(_div(shape[0], mesh, "model"), _div(shape[1], mesh, fsdp))
+
+    # Determine trailing matrix dims; leading dims are layer/expert stacks.
+    n_stack = ndim - 2
+    stack_spec: list[Any] = [None] * n_stack
+
+    is_expert = leaf in ("w_gate", "w_up", "w_down") and n_stack >= 1 and \
+        names and any("moe" in n for n in names)
+    if is_expert:
+        # (L?, E, F/D, D/F): expert dim is the last stack dim.
+        e = shape[n_stack - 1]
+        if e % _axis_size(mesh, "model") == 0:
+            stack_spec[n_stack - 1] = "model"
+            model_used = True
+        else:
+            model_used = False
+        out_dim, in_dim = shape[-2], shape[-1]
+        if leaf in ("w_gate", "w_up"):
+            out_ax = "model" if not model_used else None
+            spec = [_div(out_dim, mesh, out_ax) if out_ax else None,
+                    _div(in_dim, mesh, fsdp)]
+        else:  # w_down
+            in_ax = "model" if not model_used else None
+            spec = [_div(out_dim, mesh, fsdp),
+                    _div(in_dim, mesh, in_ax) if in_ax else None]
+        return P(*stack_spec, *spec)
+
+    if leaf in COLUMN_PARALLEL:
+        return P(*stack_spec, _div(shape[-2], mesh, "model"),
+                 _div(shape[-1], mesh, fsdp))
+    if leaf in ROW_PARALLEL:
+        return P(*stack_spec, _div(shape[-2], mesh, fsdp),
+                 _div(shape[-1], mesh, "model"))
+    if leaf == "router":
+        return P(*stack_spec, None, None)
+    if leaf == "conv_w":
+        return P(*stack_spec, _div(shape[-2], mesh, "model"), None)
+    # default 2D leaf: fsdp on the larger dim
+    return P(*stack_spec, _div(shape[-2], mesh, fsdp), None)
+
+
+def param_specs(params: Any, mesh: Mesh, *, serving: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params`` (QTensor-aware).
+
+    serving=True keeps weights TP-sharded only (replicated over the data
+    axes): decode re-reads weights every step, so FSDP sharding would force
+    a per-step, per-layer all-gather. Use only when params/TP fit HBM —
+    launch/dryrun.py decides per arch (giant MoEs keep 2D sharding).
+    """
+    fsdp = None if serving else fsdp_axes(mesh)
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        # QTensor children: #0 payload, #1 scale.
+        if names and names[-1] == "#1":
+            base = _weight_spec(names[:-1], shape, mesh, fsdp, is_scale=True)
+            # scale has the same rank; group axis (last) may not divide.
+            parts = list(base) + [None] * (len(shape) - len(base))
+            parts = parts[:len(shape)]
+            fixed = [ax if ax and shape[i] % _axis_size(mesh, ax) == 0
+                     else None for i, ax in enumerate(parts)]
+            return P(*fixed)
+        if names and names[-1] == "#0":
+            names = names[:-1]
+        return _weight_spec(names, shape, mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """tokens/labels (B, S) -> batch over (pod, data) when divisible."""
+    fsdp = fsdp_axes(mesh)
+
+    def spec_of(leaf):
+        b = leaf.shape[0]
+        return P(_div(b, mesh, fsdp), *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec_of, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV/SSM caches: batch dim over fsdp axes, head/state dims over model.
+
+    Layouts handled (by rank + position conventions):
+      KV:      (L, B, S, Hkv, hd)
+      conv:    (L, B, W-1, C)
+      state:   (L, B, H, P, N)
+      pos:     scalar
+    """
+    fsdp = fsdp_axes(mesh)
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        field = names[-1] if names else ""
+        if field in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+            # Prefer KV-head sharding; when heads don't divide the model
+            # axis (GQA kv=8 on |model|=16, MHA kv=36), shard the SEQUENCE
+            # dim instead — replicating a 32k-deep cache 16x is what blew
+            # decode memory to >100GiB/dev in the baseline sweep.
+            if shape[3] % _axis_size(mesh, "model") == 0:
+                return P(None, _div(shape[1], mesh, fsdp), None, "model",
+                         None)
+            return P(None, _div(shape[1], mesh, fsdp),
+                     _div(shape[2], mesh, "model"), None, None)
+        if field == "conv" and len(shape) == 4:
+            return P(None, _div(shape[1], mesh, fsdp), None,
+                     _div(shape[3], mesh, "model"))
+        if field == "state" and len(shape) == 5:
+            return P(None, _div(shape[1], mesh, fsdp),
+                     _div(shape[2], mesh, "model"), None, None)
+        # fallback: shard dim 1 (batch) if possible
+        parts = [None] * len(shape)
+        if len(shape) >= 2:
+            parts[1] = _div(shape[1], mesh, fsdp)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def opt_state_specs(opt_state, pspecs, mesh: Mesh):
+    """Adam moments inherit parameter specs (ZeRO); count replicated."""
+    from repro.optim.adamw import AdamWState
+    from repro.quant.qtypes import QTensor
+
+    def moment_spec(spec_leaf, moment_leaf):
+        if isinstance(moment_leaf, QTensor):
+            # int8 moments: payload inherits; scale replicated (simple).
+            return QTensor(data=spec_leaf, scale=P(),
+                           precision=moment_leaf.precision,
+                           shape=moment_leaf.shape, group=moment_leaf.group)
+        return spec_leaf
+
+    is_q = lambda x: isinstance(x, QTensor)
+    m_specs = jax.tree.map(moment_spec, pspecs, opt_state.m,
+                           is_leaf=lambda x: isinstance(x, P))
+    v_specs = jax.tree.map(moment_spec, pspecs, opt_state.v,
+                           is_leaf=lambda x: isinstance(x, P))
+    return AdamWState(count=P(), m=m_specs, v=v_specs)
+
+
+def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

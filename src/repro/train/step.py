@@ -1,0 +1,107 @@
+"""Loss and train/eval step factories."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.optim.adamw import AdamW, clip_by_global_norm
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean token cross-entropy. logits: (B, S, V_pad) f32; labels: (B, S).
+    Padded-vocab logits are masked to -inf so they never receive mass."""
+    v_pad = logits.shape[-1]
+    iota = jnp.arange(v_pad)
+    if v_pad != vocab_size:
+        logits = jnp.where((iota < vocab_size)[None, None, :], logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # gather-free gold logit: elementwise select + reduce keeps the vocab
+    # dim shardable (a take_along_axis over a TP-sharded vocab would force
+    # GSPMD to all-gather the logits).
+    gold = jnp.sum(jnp.where(iota[None, None, :] == labels[..., None],
+                             logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(model, *, remat: bool = True):
+    def loss_fn(params, batch):
+        logits, aux = model.apply(params, batch, remat=remat)
+        loss = cross_entropy(logits.astype(jnp.float32), batch["labels"],
+                             model.cfg.vocab_size)
+        total = loss
+        if "moe_aux_loss" in aux:
+            total = total + MOE_AUX_WEIGHT * aux["moe_aux_loss"]
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}}
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, opt: AdamW, run: RunConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    Supports gradient accumulation over microbatches (run.microbatch) — the
+    batch's leading dim is split and grads are averaged with lax.scan, which
+    is also the pipeline-friendly layout for overlap.
+    """
+    loss_fn = make_loss_fn(model, remat=run.remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if run.microbatch is None:
+            return grad_fn(params, batch)
+        b = batch["tokens"].shape[0]
+        mb = run.microbatch
+        assert b % mb == 0
+        n_micro = b // mb
+        split = jax.tree.map(
+            lambda x: x.reshape((n_micro, mb) + x.shape[1:]), batch)
+
+        def body(carry, micro):
+            (loss_acc, metr_acc, grads_acc) = carry
+            (l, m), g = grad_fn(params, micro)
+            grads_acc = jax.tree.map(jnp.add, grads_acc, g)
+            metr_acc = jax.tree.map(jnp.add, metr_acc, m)
+            return (loss_acc + l, metr_acc, grads_acc), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+        (l0, m0), g0 = grad_fn(params, jax.tree.map(lambda x: x[0], split))
+        if n_micro > 1:
+            (l, m, g), _ = jax.lax.scan(
+                body, (l0, m0, jax.tree.map(lambda x: x.astype(jnp.float32),
+                                            g0)),
+                jax.tree.map(lambda x: x[1:], split))
+        else:
+            l, m, g = l0, m0, g0
+        inv = 1.0 / n_micro
+        return (l * inv, jax.tree.map(lambda x: x * inv, m)), \
+            jax.tree.map(lambda x: x * inv, g)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model) -> Callable:
+    loss_fn = make_loss_fn(model, remat=False)
+
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,11 @@
+import os
+
+# Tests run single-device (the dry-run sets its own XLA_FLAGS in subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro", max_examples=20, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+settings.load_profile("repro")

@@ -1,0 +1,114 @@
+"""From-scratch classifier suite + metrics + paired statistics."""
+
+import numpy as np
+import pytest
+
+from repro.core.classifiers.boosted import GradientBoosting
+from repro.core.classifiers.gnb import GaussianNB
+from repro.core.classifiers.knn import KNN
+from repro.core.classifiers.linear import LinearSVM, LogisticRegression
+from repro.core.classifiers.metrics import (auc, classification_report,
+                                            cohens_d, confusion,
+                                            effect_size_label,
+                                            paired_t_test, roc_curve,
+                                            significance_label)
+from repro.core.classifiers.rf import RandomForest
+from repro.core.classifiers.scaler import StandardScaler
+from repro.core.classifiers.tree import DecisionTree
+
+
+def _separable(n=300, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.normal(-1.5, 1.0, (n // 2, 3))
+    x1 = rng.normal(1.5, 1.0, (n - n // 2, 3))
+    x = np.vstack([x0, x1])
+    y = np.array([0] * (n // 2) + [1] * (n - n // 2))
+    idx = rng.permutation(n)
+    return x[idx], y[idx]
+
+
+ALL = [DecisionTree, RandomForest, LogisticRegression, LinearSVM, KNN,
+       GaussianNB, GradientBoosting]
+
+
+@pytest.mark.parametrize("cls", ALL)
+def test_classifier_learns_separable(cls):
+    x, y = _separable()
+    xtr, ytr, xte, yte = x[:200], y[:200], x[200:], y[200:]
+    sc = StandardScaler()
+    clf = cls().fit(sc.fit_transform(xtr), ytr)
+    acc = (clf.predict(sc.transform(xte)) == yte).mean()
+    assert acc >= 0.9, f"{cls.__name__}: {acc}"
+
+
+def test_rf_nonlinear_beats_linear():
+    """XOR-ish data: tree ensembles must beat linear models (paper's
+    rationale for random forest)."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (400, 2))
+    y = ((x[:, 0] > 0) ^ (x[:, 1] > 0)).astype(int)
+    xtr, ytr, xte, yte = x[:300], y[:300], x[300:], y[300:]
+    rf = RandomForest(n_estimators=40, max_depth=6).fit(xtr, ytr)
+    lr = LogisticRegression().fit(xtr, ytr)
+    acc_rf = (rf.predict(xte) == yte).mean()
+    acc_lr = (lr.predict(xte) == yte).mean()
+    assert acc_rf > 0.85 and acc_rf > acc_lr + 0.2
+
+
+def test_scaler():
+    x = np.array([[1.0, 10.0], [3.0, 10.0], [5.0, 10.0]])
+    z = StandardScaler().fit_transform(x)
+    np.testing.assert_allclose(z.mean(0), [0, 0], atol=1e-12)
+    np.testing.assert_allclose(z[:, 0].std(), 1.0, atol=1e-12)
+    assert np.all(z[:, 1] == 0)  # zero-variance feature stays finite
+
+
+def test_confusion_and_report():
+    y_true = np.array([1, 1, 1, 0, 0, 0, 1, 0])
+    y_pred = np.array([1, 1, 0, 0, 0, 1, 1, 0])
+    c = confusion(y_true, y_pred)
+    assert c == {"tp": 3, "tn": 3, "fp": 1, "fn": 1}
+    rep = classification_report(y_true, y_pred)
+    assert abs(rep["accuracy"] - 6 / 8) < 1e-12
+    assert abs(rep["classes"][1]["precision"] - 3 / 4) < 1e-12
+    assert abs(rep["classes"][1]["recall"] - 3 / 4) < 1e-12
+
+
+def test_auc_perfect_and_random():
+    y = np.array([0, 0, 1, 1])
+    assert abs(auc(y, np.array([0.1, 0.2, 0.8, 0.9])) - 1.0) < 1e-9
+    assert abs(auc(y, np.array([0.9, 0.8, 0.2, 0.1])) - 0.0) < 1e-9
+    fpr, tpr, _ = roc_curve(y, np.array([0.1, 0.2, 0.8, 0.9]))
+    assert fpr[0] == 0 and tpr[-1] == 1
+
+
+def test_paired_t_test_and_cohens_d():
+    a = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    r = paired_t_test(a, a)
+    assert r["t"] == 0.0 and r["p"] == 1.0
+    # constant shift has zero-variance differences -> degenerate t (p=1)
+    r2 = paired_t_test(a + 1.0, a)
+    assert r2["p"] == 1.0 and r2["mean_diff"] == 1.0
+    rng = np.random.default_rng(0)
+    b = a + 2.0 + rng.normal(0, 0.1, 5)
+    r3 = paired_t_test(b, a)
+    assert r3["p"] < 0.05 and r3["t"] > 0
+    d = cohens_d(np.array([10.0, 11, 12, 9, 10]), np.array([0.0, 1, 2, -1, 0]))
+    assert effect_size_label(d) == "large"
+    assert significance_label(0.03) == "significant"
+    assert significance_label(0.07) == "marginally significant"
+    assert significance_label(0.5) == "not significant"
+
+
+def test_t_test_p_value_accuracy():
+    """Compare the betainc-based p-value against known t-table values:
+    t=2.776, df=4 -> p=0.05 (two-sided)."""
+    from repro.core.classifiers.metrics import _t_sf
+    assert abs(_t_sf(2.776, 4) - 0.05) < 2e-3
+    assert abs(_t_sf(1.96, 1000) - 0.05) < 2e-3
+
+
+def test_feature_importances_sum_to_one():
+    x, y = _separable()
+    rf = RandomForest(n_estimators=10, max_depth=5).fit(x, y)
+    assert abs(rf.feature_importances_.sum() - 1.0) < 1e-9

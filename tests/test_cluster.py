@@ -1,0 +1,88 @@
+"""Algorithms 1 & 2: resource-constrained distribution (paper §3.4/§4)."""
+
+import pytest
+
+from repro.core.cluster import (Machine, cluster_budget, fastewq_resource_adjust,
+                                fit_plan_to_hbm, optimize_distribution)
+from repro.core.entropy import BlockEntropy
+from repro.core.policy import decide
+
+
+def _plan(entropies, size=1_000_000):
+    blocks = [BlockEntropy(block_index=i, exec_index=i + 1, entropy=h,
+                           num_parameters=size, per_matrix={})
+              for i, h in enumerate(entropies)]
+    return decide(blocks, x_factor=1.0)
+
+
+def test_budget_is_min_of_mem_and_disk():
+    m = Machine("a", 100, 60)
+    assert m.budget == 60
+    assert cluster_budget([m, Machine("b", 10, 20)]) == 70
+
+
+def test_unquantized_when_it_fits():
+    plan = _plan([1.0, 5.0, 9.0])  # 3 blocks x 1M params x 2B = 6MB raw
+    res = optimize_distribution(plan, [Machine("m0", 10e6, 10e6)])
+    assert res["fits"]
+    assert all(d.precision == "raw" for d in res["plan"].decisions)
+
+
+def test_promote_highest_entropy_first():
+    plan = _plan([1.0, 5.0, 9.0])
+    # budget fits the EWQ plan with room for ONE promotion but not all raw
+    base = plan.total_bytes()
+    budget = base + 1_000_000 * (2.0 - 1.015625) + 1000  # one int8->raw
+    res = optimize_distribution(plan, [Machine("m0", budget, budget)])
+    precs = res["plan"].precisions()
+    assert res["fits"]
+    # highest-entropy quantized block got promoted first
+    assert res["plan"].total_bytes() <= budget
+
+
+def test_demote_lowest_entropy_until_fit():
+    plan = _plan([1.0, 5.0, 9.0])
+    tight = plan.total_bytes() * 0.8
+    res = optimize_distribution(plan, [Machine("m0", tight, tight)])
+    precs = res["plan"].precisions()
+    assert "ternary" in precs or "int4" in precs
+    assert res["plan"].total_bytes() <= tight or not res["fits"]
+
+
+def test_placement_respects_machine_budgets():
+    plan = _plan([1.0, 5.0, 9.0, 2.0], size=500_000)
+    machines = [Machine("a", 2.2e6, 2.2e6), Machine("b", 2.2e6, 2.2e6)]
+    res = optimize_distribution(plan, machines)
+    placed = sorted(i for blocks in res["placement"].values() for i in blocks)
+    assert placed == [0, 1, 2, 3]
+    for name, blocks in res["placement"].items():
+        used = sum(res["plan"].decisions[i].nbytes() for i in blocks)
+        assert used <= 2.2e6 + 1e-6
+
+
+def test_fastewq_adjust_promotes_by_exec_index():
+    plan = _plan([3.0, 3.0, 3.0, 3.0])
+    # start from all-int8 (classifier preselection)
+    plan = plan.with_precisions(["int8"] * 4)
+    budget = plan.total_bytes() + 1_000_000 * (2.0 - 1.015625) + 100
+    res = fastewq_resource_adjust(plan, [Machine("m", budget, budget)])
+    precs = res["plan"].precisions()
+    # the LOWEST exec_index block is promoted first
+    assert precs[0] == "raw"
+    assert precs[1:] == ["int8"] * 3
+
+
+def test_fastewq_adjust_demotes_highest_exec_index():
+    plan = _plan([3.0] * 4).with_precisions(["int8"] * 4)
+    tight = plan.total_bytes() * 0.85
+    res = fastewq_resource_adjust(plan, [Machine("m", tight, tight)])
+    precs = res["plan"].precisions()
+    assert precs[-1] in ("int4", "ternary")  # demotion starts at the end
+    assert precs[0] == "int8"
+
+
+def test_fit_plan_to_hbm_returns_fitting_plan():
+    plan = _plan([1.0, 5.0, 9.0], size=10_000_000)
+    fitted = fit_plan_to_hbm(plan, hbm_bytes_per_device=2e6, devices=16,
+                             reserved_fraction=0.25)
+    assert fitted.total_bytes() <= 2e6 * 0.75 * 16

@@ -1,0 +1,75 @@
+"""Entropy analysis (paper §3.1-3.2): correctness + properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import entropy as E
+
+
+def test_paper_formula_uniform_weights():
+    # constant weights -> softmax uniform -> H = -sum 1/n log(1/n + eps)
+    n = 1000
+    w = jnp.zeros((n,))
+    h = float(E.matrix_entropy(w, mode="paper", eps=0.01))
+    expected = -n * (1 / n) * np.log(1 / n + 0.01)
+    assert abs(h - expected) < 1e-4
+
+
+def test_stream_matches_paper_at_small_eps():
+    w = jax.random.normal(jax.random.PRNGKey(0), (257, 129)) * 0.5
+    h_paper = float(E.matrix_entropy(w, mode="paper", eps=1e-8))
+    h_stream = float(E.matrix_entropy(w, mode="stream"))
+    assert abs(h_paper - h_stream) < 1e-3
+
+
+def test_stream_shift_invariance():
+    # softmax entropy is invariant to adding a constant
+    w = jax.random.normal(jax.random.PRNGKey(1), (513,))
+    h0 = float(E.matrix_entropy_stream(w))
+    h1 = float(E.matrix_entropy_stream(w + 100.0))
+    assert abs(h0 - h1) < 1e-3
+
+
+def test_peaked_distribution_low_entropy():
+    w = jnp.zeros((1024,)).at[0].set(50.0)
+    h = float(E.matrix_entropy(w, mode="stream"))
+    assert h < 0.01  # one dominant weight -> near-zero entropy
+    h_uniform = float(E.matrix_entropy(jnp.zeros((1024,)), mode="stream"))
+    assert h_uniform > 6.9  # log(1024) = 6.93
+
+
+@given(st.integers(2, 2000), st.floats(0.01, 3.0))
+def test_entropy_bounds(n, scale):
+    w = jax.random.normal(jax.random.PRNGKey(n), (n,)) * scale
+    h = float(E.matrix_entropy_stream(w))
+    assert -1e-4 <= h <= np.log(n) + 1e-3
+
+
+def test_block_entropy_weighted_mean():
+    a = jnp.zeros((64, 64))            # uniform -> high entropy
+    b = jnp.zeros((32, 32)).at[0, 0].set(100.0)  # peaked -> low
+    h, n, per = E.block_entropy_from_matrices({"a": a, "b": b}, mode="stream")
+    ha, na = per["a"]
+    hb, nb = per["b"]
+    assert n == 64 * 64 + 32 * 32
+    assert abs(h - (ha * na + hb * nb) / n) < 1e-6
+    # vectors excluded
+    h2, n2, per2 = E.block_entropy_from_matrices(
+        {"a": a, "bias": jnp.zeros((128,))}, mode="stream")
+    assert "bias" not in per2 and n2 == 64 * 64
+
+
+def test_analyze_blocks_exec_index():
+    blocks = [{"w": jnp.ones((16, 16)) * i} for i in range(3)]
+    out = E.analyze_blocks(blocks, first_exec_index=2)
+    assert [b.exec_index for b in out] == [2, 3, 4]
+    assert [b.block_index for b in out] == [0, 1, 2]
+
+
+def test_entropy_stats_population_std():
+    mu, sigma = E.entropy_stats([1.0, 2.0, 3.0])
+    assert abs(mu - 2.0) < 1e-9
+    assert abs(sigma - np.sqrt(2.0 / 3.0)) < 1e-9

@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode) with shape sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.entropy.kernel import CHUNK, entropy_pallas
+from repro.kernels.entropy.ref import entropy_ref
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+from repro.kernels.qmatmul.ref import qmatmul_ref
+from repro.kernels.quantize.kernel import quantize_int8_pallas
+from repro.kernels.quantize.ref import quantize_int8_ref
+from repro.quant.quantize import quantize_int4, quantize_int8, quantize_ternary
+
+
+# --------------------------------------------------------------------------
+# entropy kernel
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (1024,), (CHUNK,), (CHUNK + 3,),
+                                   (3 * CHUNK,), (123, 45), (256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_entropy_kernel_matches_ref(shape, dtype):
+    w = (jax.random.normal(jax.random.PRNGKey(hash(shape) % 2**31), shape)
+         * 0.7).astype(dtype)
+    got = float(entropy_pallas(w, interpret=True))
+    want = float(entropy_ref(w))
+    assert abs(got - want) < 1e-3 * max(1.0, abs(want))
+
+
+@given(st.integers(1, 5000), st.floats(0.01, 5.0))
+@settings(max_examples=10)
+def test_entropy_kernel_property(n, scale):
+    w = jax.random.normal(jax.random.PRNGKey(n), (n,)) * scale
+    got = float(entropy_pallas(w, interpret=True))
+    want = float(entropy_ref(w))
+    assert abs(got - want) < 2e-3 * max(1.0, abs(want))
+
+
+# --------------------------------------------------------------------------
+# qmatmul kernel
+# --------------------------------------------------------------------------
+
+QUANTIZERS = {"int8": quantize_int8, "int4": quantize_int4,
+              "ternary": quantize_ternary}
+
+
+@pytest.mark.parametrize("precision", ["int8", "int4", "ternary"])
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (128, 128, 256, 128, 128, 128),
+    (256, 128, 512, 128, 128, 256),
+    (128, 256, 1024, 128, 128, 512),
+])
+@pytest.mark.parametrize("x_dtype", [jnp.float32, jnp.bfloat16])
+def test_qmatmul_kernel_matches_ref(precision, m, n, k, bm, bn, bk, x_dtype):
+    kx = jax.random.PRNGKey(m * 7 + n * 3 + k)
+    x = (jax.random.normal(kx, (m, k)) * 0.5).astype(x_dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (n, k)) * 0.2
+    q = QUANTIZERS[precision](w)
+    got = qmatmul_pallas(x.astype(jnp.float32), q.data, q.scale,
+                         precision=precision, bm=bm, bn=bn, bk=bk,
+                         interpret=True)
+    want = qmatmul_ref(x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# quantize kernel
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,bn,bk", [(128, 256, 128, 128),
+                                       (256, 512, 128, 256),
+                                       (512, 1024, 256, 512)])
+def test_quantize_kernel_matches_ref(n, k, bn, bk):
+    w = jax.random.normal(jax.random.PRNGKey(n + k), (n, k)) * 0.3
+    qk, sk = quantize_int8_pallas(w, bn=bn, bk=bk, interpret=True)
+    qr, sr = quantize_int8_ref(w)
+    assert bool(jnp.all(qk == qr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+def test_qmatmul_int4_halves_payload():
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 512))
+    q8, q4 = quantize_int8(w), quantize_int4(w)
+    assert q4.data.nbytes == q8.data.nbytes // 2

@@ -1,0 +1,100 @@
+"""Optimizer, schedules, clipping, int8 moments."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamW, clip_by_global_norm, global_norm
+from repro.optim.schedule import make_schedule, wsd
+
+
+def _params():
+    return {"w": jnp.ones((4, 128)) * 0.5, "b": jnp.zeros((7,))}
+
+
+def test_adamw_matches_reference_update():
+    opt = AdamW(learning_rate=0.1, b1=0.9, b2=0.95, eps=1e-8,
+                weight_decay=0.0)
+    params = {"w": jnp.array([[1.0, -2.0]])}
+    grads = {"w": jnp.array([[0.5, 0.25]])}
+    state = opt.init(params)
+    new_p, state = opt.update(grads, state, params)
+    # step 1: m = 0.1*g, v = 0.05*g^2; mhat = g, vhat = g^2
+    # update = g / (|g| + eps) = sign(g)
+    expected = np.array([[1.0 - 0.1, -2.0 - 0.1]])
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expected, rtol=1e-5)
+
+
+def test_adamw_weight_decay_matrices_only():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.5)
+    params = _params()
+    grads = jax.tree.map(jnp.zeros_like, params)
+    state = opt.init(params)
+    new_p, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(new_p["w"] - params["w"]).max()) > 0  # decayed
+    np.testing.assert_allclose(np.asarray(new_p["b"]),
+                               np.asarray(params["b"]))  # vectors skip decay
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_moment_dtypes_converge_quadratic(dtype):
+    """min ||w||^2 converges under all moment encodings."""
+    opt = AdamW(learning_rate=0.05, weight_decay=0.0, moment_dtype=dtype)
+    params = {"w": jnp.ones((2, 128))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 1e-2, dtype
+
+
+def test_int8_moments_memory():
+    from repro.quant.qtypes import QTensor
+    opt = AdamW(learning_rate=0.1, moment_dtype="int8")
+    state = opt.init({"w": jnp.ones((4, 256))})
+    assert isinstance(state.m["w"], QTensor)
+    assert state.m["w"].data.dtype == jnp.int8
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert abs(float(norm) - 3.0 * np.sqrt(10)) < 1e-4
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+    # below the limit -> untouched
+    clipped2, _ = clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]),
+                               np.asarray(grads["a"]))
+
+
+def test_wsd_schedule_shape():
+    lr = lambda s: float(wsd(s, base_lr=1.0, warmup_steps=10,
+                             total_steps=100, decay_frac=0.1))
+    assert lr(0) == 0.0
+    assert abs(lr(5) - 0.5) < 1e-6        # warmup
+    assert abs(lr(50) - 1.0) < 1e-6       # stable plateau
+    assert abs(lr(89) - 1.0) < 1e-6       # still stable
+    assert lr(95) < 0.5                   # decaying
+    assert lr(100) <= 0.011               # final_frac
+
+
+def test_cosine_schedule_monotone_decay():
+    sched = make_schedule("cosine", base_lr=1.0, warmup_steps=5,
+                          total_steps=50)
+    vals = [float(sched(s)) for s in range(5, 50, 5)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+
+
+def test_grad_compression_roundtrip():
+    """int8 EF quantize/dequantize error bounded by group absmax/127."""
+    from repro.optim.compress import _dequant_leaf, _quant_leaf
+    g = jax.random.normal(jax.random.PRNGKey(0), (37, 13)) * 0.1
+    q, scale, n = _quant_leaf(g, group=64)
+    back = _dequant_leaf(q, scale, n, g.shape)
+    err = float(jnp.max(jnp.abs(back - g)))
+    assert err <= float(scale.max()) * 0.5 + 1e-7

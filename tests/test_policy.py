@@ -1,0 +1,92 @@
+"""Selection policy (paper §3.3)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.entropy import BlockEntropy
+from repro.core import policy as P
+from repro.core.planner import plan
+
+
+def _blocks(entropies, size=1000):
+    return [BlockEntropy(block_index=i, exec_index=i + 1, entropy=h,
+                         num_parameters=size, per_matrix={})
+            for i, h in enumerate(entropies)]
+
+
+def test_threshold_decision_tiers():
+    # mu = 5, sigma = sqrt(8) for [1,3,5,7,9]: T = 5 - 2.828 = 2.17
+    ents = [1.0, 3.0, 5.0, 7.0, 9.0]
+    p = P.decide(_blocks(ents), x_factor=1.0)
+    assert abs(p.mu - 5.0) < 1e-9
+    assert p.threshold < p.mu
+    assert p.decisions[0].precision == "int4"     # 1.0 <= T
+    assert p.decisions[1].precision == "int8"     # T < 3 <= mu
+    assert p.decisions[2].precision == "int8"     # 5 == mu -> int8
+    assert p.decisions[3].precision == "raw"
+    assert p.decisions[4].precision == "raw"
+
+
+def test_x_factor_zero_means_threshold_at_mean():
+    ents = [1.0, 2.0, 3.0]
+    p = P.decide(_blocks(ents), x_factor=0.0)
+    assert p.threshold == p.mu
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=3, max_size=30),
+       st.floats(0.0, 2.0))
+def test_monotone_in_entropy(ents, x):
+    """Lower-entropy blocks never get less aggressive precision."""
+    p = P.decide(_blocks(ents), x_factor=x)
+    order = {"int4": 0, "int8": 1, "raw": 2}
+    by_h = sorted(p.decisions, key=lambda d: d.entropy)
+    ranks = [order[d.precision] for d in by_h]
+    assert ranks == sorted(ranks)
+
+
+def test_priority_view_ascending():
+    p = P.decide(_blocks([5.0, 1.0, 3.0]))
+    pri = p.by_priority()
+    assert [d.entropy for d in pri] == [1.0, 3.0, 5.0]
+
+
+def test_bytes_accounting():
+    p = P.decide_uniform(_blocks([1.0, 2.0], size=1280), "int8")
+    # int8: (8 + 16/128)/8 bytes/param
+    expected = 2 * 1280 * (8 + 0.125) / 8
+    assert abs(p.total_bytes() - expected) < 1e-6
+    assert abs(p.reduction() - (1 - expected / (2 * 1280 * 2))) < 1e-9
+
+
+def test_json_roundtrip():
+    p = P.decide(_blocks([1.0, 5.0, 9.0]))
+    q = P.QuantPlan.from_json(p.to_json())
+    assert q.precisions() == p.precisions()
+    assert q.mu == p.mu and q.threshold == p.threshold
+
+
+def test_planner_variants():
+    import jax.numpy as jnp
+    import jax
+    blocks = []
+    for i in range(6):
+        w = jax.random.normal(jax.random.PRNGKey(i), (64, 64)) * (0.1 + i)
+        blocks.append({"w": w})
+    for variant in ("raw", "4bit", "8bit", "8bit-mixed", "4bit/8bit",
+                    "ternary/4bit"):
+        p = plan(blocks, variant=variant)
+        assert len(p.decisions) == 6
+    assert plan(blocks, variant="raw").counts()["raw"] == 6
+    assert plan(blocks, variant="4bit").counts()["int4"] == 6
+    m = plan(blocks, variant="8bit-mixed").counts()
+    assert m["int8"] >= 1 and m["raw"] >= 1 and m["int4"] == 0
+    t = plan(blocks, variant="ternary/4bit").counts()
+    assert t["int8"] == 0
+
+
+def test_promote_demote_chain():
+    assert P.promote("int4") == "int8" and P.promote("int8") == "raw"
+    assert P.promote("raw") == "raw"
+    assert P.demote("raw") == "int8" and P.demote("int8") == "int4"
+    assert P.demote("int4") == "ternary" and P.demote("ternary") == "ternary"

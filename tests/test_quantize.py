@@ -1,0 +1,121 @@
+"""Quantization substrate: quant/dequant error bounds, packing, pytrees."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.quant.apply import (SegmentedParams, apply_plan_stacked,
+                               plan_segments, quantize_tree, tree_nbytes)
+from repro.quant.qtypes import QTensor
+from repro.quant.quantize import (dequantize, quantize, quantize_int4,
+                                  quantize_int8, quantize_ternary,
+                                  unpack_int4)
+from repro.core.policy import BlockDecision, QuantPlan
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+def test_int8_roundtrip_error():
+    w = _rand((64, 256))
+    q = quantize_int8(w)
+    err = jnp.abs(dequantize(q, jnp.float32) - w)
+    # per-group absmax/127 is the max step; scales are bf16 (+0.4% rel)
+    g = w.reshape(64, 2, 128)
+    absmax = jnp.repeat(jnp.max(jnp.abs(g), -1), 128, -1).reshape(64, 256)
+    bound = absmax / 127.0 * 0.5 + absmax * 0.005 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+def test_int4_pack_unpack_roundtrip():
+    vals = jnp.arange(-7, 8, dtype=jnp.int8)
+    w = jnp.tile(vals, 256)[: 128 * 16].reshape(16, 128).astype(jnp.float32)
+    q = quantize_int4(w * 0.01)
+    assert q.data.shape == (16, 64)  # packed two per byte
+    unpacked = unpack_int4(q.data)
+    assert unpacked.shape == (16, 128)
+    assert int(jnp.max(jnp.abs(unpacked))) <= 7
+
+
+@given(st.integers(1, 8), st.integers(1, 4), st.floats(0.01, 10.0))
+def test_int4_error_bound(rows8, groups, scale):
+    rows = rows8 * 4
+    k = groups * 128
+    w = _rand((rows, k), seed=rows * 31 + groups, scale=scale)
+    q = quantize_int4(w)
+    err = jnp.abs(dequantize(q, jnp.float32) - w)
+    g = w.reshape(rows, groups, 128)
+    absmax = jnp.repeat(jnp.max(jnp.abs(g), -1), 128, -1).reshape(rows, k)
+    bound = absmax / 7.0 * 0.5 + absmax * 0.005 + 1e-5  # bf16 scales
+    assert bool(jnp.all(err <= bound))
+
+
+def test_ternary_values_and_scale():
+    w = _rand((32, 128), seed=3)
+    q = quantize_ternary(w)
+    assert set(np.unique(np.asarray(q.data))).issubset({-1, 0, 1})
+    # reconstruction error strictly better than the zero approximation
+    dq = dequantize(q, jnp.float32)
+    assert float(jnp.mean((dq - w) ** 2)) < float(jnp.mean(w ** 2))
+
+
+def test_qtensor_pytree_roundtrip():
+    q = quantize_int8(_rand((8, 128)))
+    leaves, treedef = jax.tree.flatten(q)
+    q2 = jax.tree.unflatten(treedef, leaves)
+    assert q2.precision == "int8" and q2.group == q.group
+    assert bool(jnp.all(q2.data == q.data))
+
+
+def test_qtensor_scan_slicing():
+    """Stacked QTensors must slice correctly under lax.scan."""
+    w = _rand((4, 16, 128), seed=5)
+    q = quantize_int8(w)
+
+    def body(c, q_layer):
+        return c, dequantize(q_layer, jnp.float32)
+
+    _, dq = jax.lax.scan(body, 0, q)
+    assert dq.shape == (4, 16, 128)
+    np.testing.assert_allclose(np.asarray(dq),
+                               np.asarray(dequantize(q, jnp.float32)),
+                               rtol=1e-6)
+
+
+def test_nbytes_effective():
+    q8 = quantize_int8(_rand((100, 128)))
+    assert abs(q8.nbytes_effective() - (100 * 128 + 100 * 2)) < 1
+    q4 = quantize_int4(_rand((100, 128)))
+    assert q4.nbytes_effective() < q8.nbytes_effective()
+
+
+def _plan(precisions):
+    ds = [BlockDecision(block_index=i, exec_index=i + 1, entropy=float(i),
+                        num_parameters=10, precision=p)
+          for i, p in enumerate(precisions)]
+    return QuantPlan(decisions=ds, mu=0, sigma=0, threshold=0, x_factor=1)
+
+
+def test_plan_segments():
+    p = _plan(["raw", "raw", "int8", "int8", "int4", "raw"])
+    assert plan_segments(p) == [("raw", 0, 2), ("int8", 2, 4),
+                                ("int4", 4, 5), ("raw", 5, 6)]
+
+
+def test_apply_plan_stacked_excludes_vectors():
+    stacked = {"w": _rand((4, 16, 128)), "ln": jnp.ones((4, 128))}
+    seg = apply_plan_stacked(stacked, _plan(["int8"] * 4))
+    assert len(seg.segments) == 1
+    s = seg.segments[0]
+    assert isinstance(s.params["w"], QTensor)
+    assert not isinstance(s.params["ln"], QTensor)  # (L, D) stays raw
+
+
+def test_segmented_bytes_reduction():
+    stacked = {"w": _rand((8, 64, 256))}
+    raw_bytes = tree_nbytes(stacked)
+    seg = apply_plan_stacked(stacked, _plan(["int8"] * 8))
+    assert seg.nbytes_effective() < raw_bytes * 0.55
