@@ -1,0 +1,108 @@
+"""Serving throughput: fused chunked decode loop vs per-token dispatch.
+
+For each deployment variant (raw bf16 | EWQ 8bit-mixed | EWQ 4bit/8bit) of
+the same trained model, measures decode tokens/sec for:
+
+  * ``stepwise`` — the legacy per-token Python loop (one jitted decode
+    dispatch + host sync per token; what ServeEngine.generate did before
+    the continuous-batching refactor);
+  * ``fused``    — the jitted ``lax.scan`` chunked loop (one dispatch per
+    CHUNK tokens);
+  * ``stream``   — continuous batching over a simulated request stream
+    (Poisson-ish arrivals, slots freed mid-run are re-filled), reporting
+    batch occupancy and mid-run admissions alongside throughput.
+
+Smoke-scale (CPU) defaults; run directly or via ``benchmarks/run.py serve``:
+
+  PYTHONPATH=src python -m benchmarks.serve_throughput
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.serving.engine import ServeEngine
+from repro.serving.quantized import plan_for_variant
+from repro.serving.scheduler import synthetic_stream
+
+ARCH = "llama3.2-3b"
+VARIANTS = ("raw", "8bit-mixed", "4bit/8bit")
+BATCH = 4
+PROMPT_LEN = 16
+MAX_NEW = 32
+CHUNK = 16
+# stream simulation
+NUM_REQUESTS = 12
+NUM_SLOTS = 4
+ARRIVAL_RATE = 0.25   # requests per decode step
+
+
+def _time(fn, reps: int = 3) -> float:
+    """Best-of-``reps`` wall time after a warmup/compile call."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[tuple]:
+    cfg, model, params = common.get_trained(ARCH)
+    prompts = jax.random.randint(jax.random.PRNGKey(7), (BATCH, PROMPT_LEN),
+                                 0, cfg.vocab_size, dtype=jnp.int32)
+    rows = []
+    summary = {}
+    for variant in VARIANTS:
+        plan = plan_for_variant(model, params, variant)
+        engine = ServeEngine(model, params, plan=plan,
+                             max_seq=PROMPT_LEN + int(MAX_NEW * 1.25) + 1)
+        tokens = BATCH * MAX_NEW
+
+        dt_step = _time(lambda: engine.generate_stepwise(prompts, MAX_NEW)
+                        .tokens)
+        dt_fused = _time(lambda: engine.generate(prompts, MAX_NEW,
+                                                 chunk=CHUNK).tokens)
+        tps_step = tokens / dt_step
+        tps_fused = tokens / dt_fused
+
+        requests = synthetic_stream(
+            NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+            max_new_tokens=MAX_NEW, arrival_rate=ARRIVAL_RATE, seed=0)
+        # warm the serve path (chunk fn, batch=1 prefill, insert/release
+        # compiles) so the timed run is steady-state like the rows above
+        engine.serve(requests[:2], num_slots=NUM_SLOTS, chunk=CHUNK)
+        t0 = time.perf_counter()
+        _, stats = engine.serve(requests, num_slots=NUM_SLOTS, chunk=CHUNK)
+        dt_stream = time.perf_counter() - t0
+        tps_stream = stats.generated_tokens / dt_stream
+
+        tag = variant.replace("/", "-")
+        rows.append((f"serve/{tag}/stepwise", dt_step / tokens * 1e6,
+                     f"{tps_step:.1f} tok/s"))
+        rows.append((f"serve/{tag}/fused", dt_fused / tokens * 1e6,
+                     f"{tps_fused:.1f} tok/s speedup {tps_fused/tps_step:.2f}x"))
+        rows.append((f"serve/{tag}/stream", dt_stream / max(
+            stats.generated_tokens, 1) * 1e6,
+            f"{tps_stream:.1f} tok/s occupancy {stats.occupancy:.2f} "
+            f"admissions {stats.admissions}"))
+        summary[variant] = {
+            "weight_mib": engine.weight_bytes() / 2**20,
+            "tok_s_stepwise": tps_step, "tok_s_fused": tps_fused,
+            "fused_speedup": tps_fused / tps_step,
+            "tok_s_stream": tps_stream, "occupancy": stats.occupancy,
+            "mid_run_admissions": stats.admissions,
+            "decode_steps": stats.decode_steps,
+        }
+    common.save_json("serve_throughput.json", summary)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    common.emit(run())

@@ -124,7 +124,7 @@ def flatten_block_params(tree: Any, prefix: str = "") -> dict[str, jax.Array]:
     out: dict[str, jax.Array] = {}
     if isinstance(tree, Mapping):
         for k, v in tree.items():
-            out.update(flatten_block_params(v, f"{prefix}{k}." if prefix or True else k))
+            out.update(flatten_block_params(v, f"{prefix}{k}."))
     else:
         out[prefix[:-1]] = tree
     return out

@@ -45,8 +45,7 @@ def _unpack_int4(packed: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=-1).reshape(n, kh * 2)
 
 
-def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, group: int, packed: bool,
-                    n_k_steps: int):
+def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, group: int, packed: bool):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
@@ -84,8 +83,7 @@ def qmatmul_pallas(x: jax.Array, data: jax.Array, scale: jax.Array, *,
     assert bk % group == 0
     n_k_steps = k // bk
 
-    kernel = functools.partial(_qmatmul_kernel, group=group, packed=packed,
-                               n_k_steps=n_k_steps)
+    kernel = functools.partial(_qmatmul_kernel, group=group, packed=packed)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, n_k_steps),

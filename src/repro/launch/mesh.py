@@ -8,20 +8,27 @@ CPU device while the dry-run forces 512 virtual devices via XLA_FLAGS.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+
+def _axis_type_kwargs(n: int) -> dict:
+    """axis_types=(Auto,)*n on jax versions that have it (>= 0.5)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / small-scale runs)."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+                         **_axis_type_kwargs(len(axes)))
 
 
 def data_axis_names(mesh) -> tuple:

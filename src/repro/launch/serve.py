@@ -4,21 +4,26 @@ Usage:
   python -m repro.launch.serve --arch yi-9b --smoke --variant 4bit/8bit
   python -m repro.launch.serve --arch llama3.2-3b --smoke --fast \
       --prompt-len 16 --max-new 16
+
+Request-stream simulation (continuous batching — new requests are admitted
+into freed slots between decode chunks):
+  python -m repro.launch.serve --arch llama3.2-3b --smoke \
+      --num-requests 16 --arrival-rate 0.5 --num-slots 4 --chunk 8
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
 from repro.configs.registry import ARCHS, get_config
-from repro.core.planner import plan_model
-from repro.models.model import build
 from repro.serving.engine import ServeEngine
-from repro.serving.quantized import fastewq_metadata_plan
+from repro.serving.quantized import plan_for_variant
+from repro.serving.scheduler import synthetic_stream
 from repro.train.loop import train
 
 
@@ -36,6 +41,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    # request-stream simulation (continuous batching)
+    ap.add_argument("--num-requests", type=int, default=0,
+                    help="simulate a stream of N requests (0: single batch)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="requests per decode step (0: all arrive at once)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="decode steps per jitted chunk")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="concurrent decode slots")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -44,24 +58,40 @@ def main():
     result = train(cfg, run, batch=args.batch, seq=args.prompt_len * 2)
     model, params = result["model"], result["params"]
 
-    if args.variant == "raw":
-        plan = None
-    elif args.fast:
-        plan = fastewq_metadata_plan(cfg, args.variant)
-    else:
-        plan = plan_model(model, params, variant=args.variant)
-    engine = ServeEngine(model, params, plan=plan,
-                         max_seq=args.prompt_len + args.max_new)
+    requests = None
+    max_seq = args.prompt_len + args.max_new
+    if args.num_requests > 0:
+        requests = synthetic_stream(
+            args.num_requests, vocab_size=cfg.vocab_size,
+            prompt_len=args.prompt_len, max_new_tokens=args.max_new,
+            arrival_rate=args.arrival_rate)
+        max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+
+    plan = plan_for_variant(model, params, args.variant, fast=args.fast)
+    engine = ServeEngine(model, params, plan=plan, max_seq=max_seq)
     raw_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     print(f"weights: {engine.weight_bytes()/2**20:.1f} MiB effective "
           f"(raw {raw_bytes/2**20:.1f} MiB)")
     if plan:
         print(f"plan: {plan.counts()}")
 
+    if requests is not None:
+        t0 = time.perf_counter()
+        outputs, stats = engine.serve(requests, num_slots=args.num_slots,
+                                      chunk=args.chunk)
+        dt = time.perf_counter() - t0
+        print(f"served {len(outputs)} requests in {dt:.1f}s "
+              f"({stats.generated_tokens/dt:.1f} tok/s): "
+              f"{stats.num_chunks} chunks x {args.chunk} steps, "
+              f"occupancy {stats.occupancy:.1%}, "
+              f"{stats.admissions} mid-run admissions")
+        print("sample:", outputs[0].generated.tolist())
+        return
+
     prompts = jax.random.randint(jax.random.PRNGKey(7),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size, dtype=jnp.int32)
-    out = engine.generate(prompts, args.max_new)
+    out = engine.generate(prompts, args.max_new, chunk=args.chunk)
     print(f"generated {out.tokens.shape[1] - args.prompt_len} tokens/seq; "
           f"mean logprob {float(out.logprobs.mean()):.3f}")
     print("sample:", out.tokens[0, -args.max_new:].tolist())

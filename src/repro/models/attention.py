@@ -207,13 +207,24 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
 
     if cache is not None:
         # Decode: insert new k/v at cache_pos, attend over the cache.
-        k_cache = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
-        t = k_cache.shape[1]
-        valid = jnp.arange(t) <= (cache_pos + s - 1)
-        bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+        # cache_pos is a scalar (whole batch at one position) or a (B,)
+        # vector (continuous batching: per-slot positions).
+        if getattr(cache_pos, "ndim", 0) == 1:
+            write = jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))
+            k_cache = write(cache.k, k.astype(cache.k.dtype), cache_pos)
+            v_cache = write(cache.v, v.astype(cache.v.dtype), cache_pos)
+            t = k_cache.shape[1]
+            valid = jnp.arange(t)[None, :] <= (cache_pos[:, None] + s - 1)
+            bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
+            t = k_cache.shape[1]
+            valid = jnp.arange(t) <= (cache_pos + s - 1)
+            bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
         out = _full_attention(q, k_cache, v_cache, bias)
         new_cache = KVCache(k=k_cache, v=v_cache)
     elif causal:

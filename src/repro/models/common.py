@@ -23,6 +23,17 @@ def dtype_of(cfg):
     return jnp.dtype(cfg.dtype)
 
 
+def decode_positions(pos: jax.Array, b: int, s: int) -> jax.Array:
+    """(B, S) int32 token positions for a decode step.
+
+    ``pos`` is the cache position — a scalar (whole batch in lockstep) or a
+    (B,) vector (slotted continuous batching, one position per slot)."""
+    step = jnp.arange(s, dtype=jnp.int32)[None]
+    if getattr(pos, "ndim", 0) == 1:
+        return pos.astype(jnp.int32)[:, None] + step
+    return jnp.broadcast_to(pos.astype(jnp.int32)[None, None] + step, (b, s))
+
+
 # --------------------------------------------------------------------------
 # Initializers
 # --------------------------------------------------------------------------

@@ -30,7 +30,10 @@ class EncDecCache(NamedTuple):
     v: jax.Array
     cross_k: jax.Array  # (Ld, B, S_enc, Hkv, hd) precomputed encoder K/V
     cross_v: jax.Array
-    pos: jax.Array
+    pos: jax.Array      # int32 — scalar, or (B,) per-slot
+
+
+CACHE_BATCH_AXES = EncDecCache(k=1, v=1, cross_k=1, cross_v=1, pos=0)
 
 
 def _ln(x, w, cfg):
@@ -183,11 +186,13 @@ def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
     b, s = tokens.shape
     embed_w = unshard_fsdp(params["embed"])["tok"]
     h = embed_lookup(embed_w, tokens, dtype)
-    # sinusoidal position at cache.pos
+    # sinusoidal position at cache.pos (scalar, or (B,) per-slot vector)
     half = cfg.d_model // 2
     freqs = 1.0 / (10000 ** (jnp.arange(half, dtype=jnp.float32) / half))
-    ang = cache.pos.astype(jnp.float32) * freqs
-    pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+    pos = cache.pos if getattr(cache.pos, "ndim", 0) == 1 \
+        else jnp.broadcast_to(cache.pos, (b,))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None]        # (B, half)
+    pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)[:, None]
     h = h + pos_emb.astype(dtype)
 
     def body(h, xs):

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 from repro.models import attention as A
 from repro.models import mlp as M
 from repro.models import ssm as S
-from repro.models.common import (dtype_of, embed_init, embed_lookup, lm_head,
-                                 norm)
+from repro.models.common import (decode_positions, dtype_of, embed_init,
+                                 embed_lookup, lm_head, norm)
 from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 
 
@@ -32,7 +32,10 @@ class HybridCache(NamedTuple):
     state: jax.Array   # (L, B, H, P, N) f32
     k: jax.Array       # (U, B, S_max, Hkv, hd) — U shared-attn sites
     v: jax.Array
-    pos: jax.Array     # scalar int32
+    pos: jax.Array     # int32 — scalar, or (B,) per-slot
+
+
+CACHE_BATCH_AXES = HybridCache(conv=1, state=1, k=1, v=1, pos=0)
 
 
 def _num_units(cfg) -> int:
@@ -134,7 +137,7 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
     b = tokens.shape[0]
     embed_w = unshard_fsdp(params["embed"])["tok"]
     h2d = embed_lookup(embed_w, tokens[:, 0], dtype)  # (B, D)
-    positions = jnp.broadcast_to(cache.pos[None, None], (b, 1)).astype(jnp.int32)
+    positions = decode_positions(cache.pos, b, 1)
     units = _unit_stack(params["layers"], cfg)
     u, period = _num_units(cfg), cfg.shared_attn_period
     conv_u = cache.conv.reshape((u, period) + cache.conv.shape[1:])

@@ -54,6 +54,36 @@ class Model:
     def decode_step(self, params, cache, tokens):
         return self.module.decode_step(params, cache, tokens, self.cfg)
 
+    # ---- slotted decode (continuous batching) -----------------------------
+    @property
+    def cache_batch_axes(self):
+        """Cache NamedTuple of ints: batch axis per field in the slotted
+        layout (``pos`` held as a (B,) per-slot vector)."""
+        return self.module.CACHE_BATCH_AXES
+
+    def slotted_cache(self, num_slots: int, max_seq: int):
+        """init_cache with per-slot positions — serving/batch.py layout."""
+        cache = self.init_cache(num_slots, max_seq)
+        return cache._replace(pos=jnp.zeros((num_slots,), jnp.int32))
+
+    def insert_cache_slot(self, cache, one, slot):
+        """Write a single-request cache (batch=1 leaves, scalar or (1,) pos)
+        into slot ``slot`` of a slotted batch cache. Traceable (``slot`` may
+        be a traced index)."""
+
+        def leaf(dst, src, axis):
+            src = jnp.asarray(src)
+            if src.ndim < dst.ndim:           # scalar pos -> (1,) vector
+                src = src[None]
+            start = [0] * dst.ndim
+            start[axis] = slot
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                                tuple(start))
+
+        axes = self.cache_batch_axes
+        return type(cache)(*(leaf(d, s, a)
+                             for d, s, a in zip(cache, one, axes)))
+
     # ---- EWQ --------------------------------------------------------------
     def block_params(self, params) -> list:
         return self.module.block_params(params)

@@ -16,7 +16,10 @@ from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 class SSMLMCache(NamedTuple):
     conv: jax.Array    # (L, B, W-1, conv_dim)
     state: jax.Array   # (L, B, H, P, N) f32
-    pos: jax.Array     # scalar int32 (nominal position; state is O(1))
+    pos: jax.Array     # int32 nominal position (state is O(1)) — scalar or (B,)
+
+
+CACHE_BATCH_AXES = SSMLMCache(conv=1, state=1, pos=0)
 
 
 def _init_layer(key, cfg, dtype):

@@ -18,15 +18,20 @@ import jax.numpy as jnp
 from repro.models import attention as A
 from repro.models import mlp as M
 from repro.models import moe as MOE
-from repro.models.common import (dtype_of, embed_init, embed_lookup, dense_init,
-                                 lm_head, norm, qdot)
+from repro.models.common import (decode_positions, dtype_of, embed_init,
+                                 embed_lookup, dense_init, lm_head, norm, qdot)
 from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 
 
 class DecodeCache(NamedTuple):
     k: jax.Array    # (L, B, S_max, Hkv, hd)
     v: jax.Array    # (L, B, S_max, Hkv, hd)
-    pos: jax.Array  # scalar int32 — next write position
+    pos: jax.Array  # int32 next write position — scalar, or (B,) per-slot
+
+
+# batch axis of each cache field once ``pos`` is a (B,) vector
+# (serving/batch.py slotted layout; model.insert_cache_slot)
+CACHE_BATCH_AXES = DecodeCache(k=1, v=1, pos=0)
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +144,7 @@ def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
             if cfg.dense_residual:
                 m = m + M.mlp(p_layer["mlp"], hn2, cfg.mlp_act)
         else:
+            aux = {}
             m = M.mlp(p_layer["mlp"], hn2, cfg.mlp_act)
         return h + m, (aux, kv)
 
@@ -146,7 +152,18 @@ def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
     layers = params["layers"]
     if return_cache:
         fn = jax.checkpoint(body_cache) if remat else body_cache
-        h, (auxs, kvs) = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
+        if isinstance(layers, SegmentedParams):
+            auxs, ks, vs = None, [], []
+            for seg in layers.segments:
+                h, (seg_auxs, kv) = jax.lax.scan(fn, h, seg.params,
+                                                 unroll=unroll_flag())
+                ks.append(kv[0])
+                vs.append(kv[1])
+                auxs = seg_auxs if auxs is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b]), auxs, seg_auxs)
+            kvs = (jnp.concatenate(ks, axis=0), jnp.concatenate(vs, axis=0))
+        else:
+            h, (auxs, kvs) = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
         cache = DecodeCache(k=kvs[0], v=kvs[1], pos=jnp.int32(s))
     elif isinstance(layers, SegmentedParams):
         fn = jax.checkpoint(body) if remat else body
@@ -189,7 +206,7 @@ def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
     embed_w = unshard_fsdp(params["embed"])["tok"]
     h = constrain(embed_lookup(embed_w, tokens, dtype),
                   ("batch", None, None))
-    positions = jnp.broadcast_to(cache.pos[None, None], (b, s)).astype(jnp.int32)
+    positions = decode_positions(cache.pos, b, s)
 
     def body(h, xs):
         p_layer, k_l, v_l = xs

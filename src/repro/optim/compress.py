@@ -52,9 +52,12 @@ def compressed_psum_mean(grads, error, axis_names, group: int = 256):
     Returns (mean_grads, new_error). 4x fewer all-reduce payload bytes than
     f32 (2x vs bf16) at the cost of a small scale side-channel.
     """
+    # jax.lax.axis_size is 0.5+; psum(1, ax) is the portable spelling
+    axis_size = getattr(jax.lax, "axis_size",
+                        lambda ax: jax.lax.psum(1, ax))
     n_replicas = 1
     for ax in axis_names:
-        n_replicas *= jax.lax.axis_size(ax)
+        n_replicas *= axis_size(ax)
 
     def leaf(g, e):
         corrected = g.astype(jnp.float32) + e

@@ -1,0 +1,91 @@
+"""Slot-based decode state for continuous batching.
+
+The engine decodes a fixed number of *slots* in lockstep; each slot holds at
+most one in-flight request. All per-slot bookkeeping lives in ``DecodeState``
+— a pytree that is the carry of the engine's jitted ``lax.scan`` decode loop
+— so a token step never leaves the device:
+
+* ``tokens`` / ``logprobs`` are (B, S_max) ring-free buffers written at
+  ``lengths[slot]`` via a masked scatter (done/empty slots never advance);
+* ``cache`` is the model family's KV/SSM cache in the *slotted* layout
+  (``pos`` is a (B,) per-slot vector — see Model.slotted_cache);
+* admission (``insert_request``) overwrites one slot with a freshly
+  prefilled request; eviction (``release_slot``) just drops the slot's
+  active flag — the next insert overwrites every per-slot buffer.
+
+Both helpers are traceable (the slot index may be a tracer), so the engine
+jits them once per prompt length.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+class DecodeState(NamedTuple):
+    cache: Any              # family cache, slotted layout (pos: (B,) int32)
+    last_logits: jax.Array  # (B, V_pad) f32 — logits after each slot's last token
+    tokens: jax.Array       # (B, S_max) int32 — prompt + generated tokens
+    lengths: jax.Array      # (B,) int32 — valid tokens in each row
+    max_len: jax.Array      # (B,) int32 — slot stops once lengths reaches this
+    done: jax.Array         # (B,) bool — finished generating
+    active: jax.Array       # (B,) bool — slot holds a live request
+    logprobs: jax.Array     # (B, S_max) f32 — chosen-token logprob per position
+    key: jax.Array          # PRNG carry for temperature sampling
+
+    @property
+    def num_slots(self) -> int:
+        return self.tokens.shape[0]
+
+
+def init_state(model: Model, num_slots: int, max_seq: int,
+               key: jax.Array) -> DecodeState:
+    """All slots empty: inactive, done, zero-length."""
+    return DecodeState(
+        cache=model.slotted_cache(num_slots, max_seq),
+        last_logits=jnp.zeros((num_slots, model.cfg.padded_vocab),
+                              jnp.float32),
+        tokens=jnp.zeros((num_slots, max_seq), jnp.int32),
+        lengths=jnp.zeros((num_slots,), jnp.int32),
+        max_len=jnp.zeros((num_slots,), jnp.int32),
+        done=jnp.ones((num_slots,), bool),
+        active=jnp.zeros((num_slots,), bool),
+        logprobs=jnp.zeros((num_slots, max_seq), jnp.float32),
+        key=key)
+
+
+def insert_request(model: Model, state: DecodeState, slot: jax.Array,
+                   prompt: jax.Array, prompt_cache: Any,
+                   last_logits: jax.Array, max_new: jax.Array) -> DecodeState:
+    """Admit one prefilled request into ``slot``.
+
+    ``prompt``: (P,) int32; ``prompt_cache``/``last_logits`` come from a
+    batch=1 prefill (scalar cache pos == P). The whole slot row is reset so
+    nothing leaks from the previous occupant.
+    """
+    p = prompt.shape[0]
+    tokens = state.tokens.at[slot].set(0)
+    tokens = jax.lax.dynamic_update_slice(
+        tokens, prompt[None].astype(jnp.int32), (slot, 0))
+    return DecodeState(
+        cache=model.insert_cache_slot(state.cache, prompt_cache, slot),
+        last_logits=state.last_logits.at[slot].set(
+            last_logits.reshape(-1).astype(jnp.float32)),
+        tokens=tokens,
+        lengths=state.lengths.at[slot].set(p),
+        max_len=state.max_len.at[slot].set(jnp.int32(p) + max_new),
+        done=state.done.at[slot].set(False),
+        active=state.active.at[slot].set(True),
+        logprobs=state.logprobs.at[slot].set(0.0),
+        key=state.key)
+
+
+def release_slot(state: DecodeState, slot: jax.Array) -> DecodeState:
+    """Evict a finished request: the slot becomes admissible again."""
+    return state._replace(done=state.done.at[slot].set(True),
+                          active=state.active.at[slot].set(False))

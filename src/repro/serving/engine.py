@@ -1,29 +1,48 @@
-"""Batched serving engine with EWQ/FastEWQ-quantized weights.
+"""Continuous-batching serving engine with EWQ/FastEWQ-quantized weights.
 
 Deployment story (the paper's §3.4/§4 pipeline, end-to-end):
   1. at startup, pick a QuantPlan — full EWQ (weights analyzed), FastEWQ
      (O(1), metadata only), or resource-fitted via cluster.fit_plan_to_hbm;
   2. quantize params per plan (block-granular mixed precision);
-  3. serve: prefill fills the KV/SSM cache, greedy/temperature decode steps
-     run against quantized weights (decode is weight-bytes-bound — exactly
-     where int8/int4 payloads pay off, see EXPERIMENTS.md §Perf).
+  3. serve: prefill fills the KV/SSM cache, decode runs against quantized
+     weights (decode is weight-bytes-bound — exactly where int8/int4
+     payloads pay off; see README.md §Serving and
+     benchmarks/serve_throughput.py).
 
-Prefill paths: transformer families use the fused apply(return_cache=True);
-SSM/hybrid/enc-dec prefill by scanning decode steps over the prompt (their
-decode matches teacher-forced forward exactly — tests/test_models_parity).
+Engine structure:
+  * the decode loop is ONE jitted ``lax.scan`` over a chunk of token steps
+    (``_make_chunk_fn``): masked sampling, per-slot stop conditions (EOS /
+    max-new-tokens), per-slot cache positions. No per-token Python
+    dispatch; one compile per (chunk, num_slots, temperature).
+  * ``serve`` runs continuous batching: between chunks the host-side
+    Scheduler admits queued requests into freed slots (each admission is a
+    batch=1 prefill + jitted slot insert) and harvests finished ones.
+  * ``generate`` is a thin compatibility wrapper — a single fixed batch is
+    one scheduler-free drain of the same chunked loop.
+
+Prefill paths: transformer families use the fused apply(return_cache=True)
+pass (works for segmented/quantized stacks too); SSM/hybrid/enc-dec prefill
+by scanning decode steps over the prompt (their decode matches
+teacher-forced forward exactly — tests/test_models_parity). The jitted
+prefill is built once per engine and cached across calls.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.policy import QuantPlan
 from repro.models.model import Model
+from repro.serving import batch as B
 from repro.serving.quantized import apply_plan_to_params
+from repro.serving.scheduler import Request, RequestOutput, Scheduler
+
+DEFAULT_CHUNK = 8
 
 
 @dataclasses.dataclass
@@ -33,17 +52,35 @@ class GenerateResult:
     steps: int
 
 
+@dataclasses.dataclass
+class ServeStats:
+    """Continuous-batching run statistics (benchmarks/serve_throughput.py)."""
+    decode_steps: int          # jitted decode steps executed (chunks * chunk)
+    generated_tokens: int      # tokens actually emitted across all requests
+    occupancy: float           # mean fraction of active slots per chunk
+    num_chunks: int
+    admissions: int            # continuous-batching refills: requests
+                               # admitted while others were mid-decode
+
+
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_seq: int,
-                 plan: Optional[QuantPlan] = None, group: int = 128):
+                 plan: Optional[QuantPlan] = None, group: int = 128,
+                 eos_id: Optional[int] = None, pad_id: int = 0):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
         self.plan = plan
+        self.eos_id = eos_id
+        self.pad_id = pad_id
         if plan is not None:
             params = apply_plan_to_params(model, params, plan, group)
         self.params = params
         self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(self._prefill_impl)      # built once, cached
+        self._insert = jax.jit(self._insert_impl)
+        self._release = jax.jit(B.release_slot)
+        self._chunk_fns: dict = {}
 
     # -- prefill -------------------------------------------------------------
     def _prefill_scan(self, prompts: jax.Array):
@@ -59,20 +96,138 @@ class ServeEngine:
         cache, logits = jax.lax.scan(body, cache, prompts.T)
         return cache, logits[-1]  # logits after last prompt token
 
-    def prefill(self, prompts: jax.Array):
-        return jax.jit(self._prefill_scan)(prompts)
+    def _prefill_fused(self, prompts: jax.Array):
+        """Transformer prefill: one fused forward emitting the KV cache."""
+        from repro.models import transformer
+        b, s = prompts.shape
+        logits, _, cache = transformer.apply(
+            self.params, prompts, self.cfg, remat=False, return_cache=True,
+            last_only=True)
+        pad = self.max_seq - s
+        k = jnp.pad(cache.k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(cache.v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return cache._replace(k=k, v=v), logits[:, 0]
 
-    # -- generation ------------------------------------------------------------
+    def _prefill_impl(self, prompts: jax.Array):
+        if self.cfg.family in ("dense", "moe"):
+            return self._prefill_fused(prompts)
+        return self._prefill_scan(prompts)
+
+    def prefill(self, prompts: jax.Array):
+        assert prompts.shape[1] <= self.max_seq
+        return self._prefill(prompts)
+
+    # -- fused chunked decode loop -------------------------------------------
+    def _make_chunk_fn(self, steps: int, temperature: float):
+        """One jitted scan over ``steps`` token positions.
+
+        Per step: masked sampling from each slot's last logits (done or
+        empty slots emit pad and do not advance), scatter the chosen token
+        and its logprob at ``lengths[slot]``, update per-slot stop
+        conditions, then one batched decode_step for the next logits.
+        """
+        vocab = self.cfg.vocab_size
+        eos_id, pad_id = self.eos_id, self.pad_id
+        model = self.model
+
+        def step(params, st, _):
+            lp = jax.nn.log_softmax(
+                st.last_logits[:, :vocab].astype(jnp.float32), -1)
+            key, sub = jax.random.split(st.key)
+            if temperature > 0:
+                nxt = jax.random.categorical(sub, lp / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lp, axis=-1)
+            chosen_lp = jnp.take_along_axis(lp, nxt[:, None], 1)[:, 0]
+            advance = st.active & ~st.done
+            nxt = jnp.where(advance, nxt, pad_id).astype(jnp.int32)
+            at = jnp.arange(st.tokens.shape[1])[None, :] == st.lengths[:, None]
+            write = at & advance[:, None]
+            tokens = jnp.where(write, nxt[:, None], st.tokens)
+            logprobs = jnp.where(write, chosen_lp[:, None], st.logprobs)
+            lengths = st.lengths + advance.astype(jnp.int32)
+            done = st.done | (advance & (lengths >= st.max_len))
+            if eos_id is not None:
+                done = done | (advance & (nxt == eos_id))
+            logits, cache = model.decode_step(params, st.cache, nxt[:, None])
+            return B.DecodeState(
+                cache=cache, last_logits=logits[:, 0].astype(jnp.float32),
+                tokens=tokens, lengths=lengths, max_len=st.max_len,
+                done=done, active=st.active, logprobs=logprobs, key=key), None
+
+        def run(params, state):
+            state, _ = jax.lax.scan(
+                lambda st, x: step(params, st, x), state, None, length=steps)
+            return state
+
+        return jax.jit(run)
+
+    def _chunk_fn(self, steps: int, temperature: float):
+        key = (steps, float(temperature))
+        if key not in self._chunk_fns:
+            self._chunk_fns[key] = self._make_chunk_fn(steps, temperature)
+        return self._chunk_fns[key]
+
+    def _insert_impl(self, state, slot, prompt, prompt_cache, last_logits,
+                     max_new):
+        return B.insert_request(self.model, state, slot, prompt,
+                                prompt_cache, last_logits, max_new)
+
+    # -- generation (compat wrapper: single batch == one drain) ---------------
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  temperature: float = 0.0,
-                 key: Optional[jax.Array] = None) -> GenerateResult:
+                 key: Optional[jax.Array] = None,
+                 chunk: Optional[int] = None) -> GenerateResult:
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        b, p = prompts.shape
+        total = p + max_new_tokens
+        assert total <= self.max_seq, (total, self.max_seq)
+        cache, last_logits = self.prefill(prompts)
+        cache = cache._replace(pos=jnp.full((b,), p, jnp.int32))
+        tokens = jnp.zeros((b, self.max_seq), jnp.int32)
+        tokens = jax.lax.dynamic_update_slice(
+            tokens, prompts.astype(jnp.int32), (0, 0))
+        state = B.DecodeState(
+            cache=cache, last_logits=last_logits.astype(jnp.float32),
+            tokens=tokens,
+            lengths=jnp.full((b,), p, jnp.int32),
+            max_len=jnp.full((b,), total, jnp.int32),
+            done=jnp.zeros((b,), bool),
+            active=jnp.ones((b,), bool),
+            logprobs=jnp.zeros((b, self.max_seq), jnp.float32),
+            key=key if key is not None else jax.random.PRNGKey(0))
+        chunk = max_new_tokens if chunk is None else min(chunk, max_new_tokens)
+        fn = self._chunk_fn(chunk, temperature)
+        steps = 0
+        while True:
+            state = fn(self.params, state)
+            steps += chunk
+            if steps >= max_new_tokens or bool(state.done.all()):
+                break
+        return GenerateResult(tokens=state.tokens[:, :total],
+                              logprobs=state.logprobs[:, p:total],
+                              steps=steps)
+
+    def generate_stepwise(self, prompts: jax.Array, max_new_tokens: int,
+                          temperature: float = 0.0,
+                          key: Optional[jax.Array] = None) -> GenerateResult:
+        """Legacy per-token Python dispatch loop.
+
+        Kept as the benchmark baseline (benchmarks/serve_throughput.py):
+        identical math to ``generate``, but every token pays Python-side
+        sampling-op dispatch plus a separate jitted decode dispatch.
+        """
         b = prompts.shape[0]
         cache, last_logits = self.prefill(prompts)
         toks = [prompts]
         logprobs = []
         logits = last_logits
         key = key if key is not None else jax.random.PRNGKey(0)
-        for i in range(max_new_tokens):
+        for _ in range(max_new_tokens):
             lp = jax.nn.log_softmax(
                 logits[:, :self.cfg.vocab_size].astype(jnp.float32), -1)
             if temperature > 0:
@@ -81,13 +236,83 @@ class ServeEngine:
             else:
                 nxt = jnp.argmax(lp, axis=-1)
             logprobs.append(jnp.take_along_axis(lp, nxt[:, None], 1)[:, 0])
-            toks.append(nxt[:, None].astype(jnp.int32))
-            step_logits, cache = self._decode(self.params, cache,
-                                              nxt[:, None].astype(jnp.int32))
+            nxt = nxt[:, None].astype(jnp.int32)
+            toks.append(nxt)
+            step_logits, cache = self._decode(self.params, cache, nxt)
             logits = step_logits[:, 0]
         return GenerateResult(tokens=jnp.concatenate(toks, axis=1),
                               logprobs=jnp.stack(logprobs, axis=1),
                               steps=max_new_tokens)
+
+    # -- continuous batching ---------------------------------------------------
+    def serve(self, requests: Sequence[Request], *, num_slots: int = 8,
+              chunk: int = DEFAULT_CHUNK, temperature: float = 0.0,
+              key: Optional[jax.Array] = None
+              ) -> tuple[list[RequestOutput], ServeStats]:
+        """Drain a request stream with continuous batching.
+
+        Between decode chunks, finished slots are harvested and queued
+        requests (arrival_step <= clock) are admitted into freed slots.
+        Returns outputs ordered by request id plus occupancy statistics.
+        """
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        sched = Scheduler(num_slots)
+        for r in requests:
+            assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
+            sched.submit(r)
+        state = B.init_state(
+            self.model, num_slots, self.max_seq,
+            key if key is not None else jax.random.PRNGKey(0))
+        fn = self._chunk_fn(chunk, temperature)
+        clock = 0
+        occupancy: list[float] = []
+        admissions = 0
+        generated = 0
+        while not sched.all_done():
+            for slot in sched.free_slots():
+                req = sched.next_ready(clock)
+                if req is None:
+                    break
+                prompt = jnp.asarray(req.prompt, jnp.int32)
+                cache1, logits1 = self.prefill(prompt[None])
+                state = self._insert(state, jnp.int32(slot), prompt, cache1,
+                                     logits1, jnp.int32(req.max_new_tokens))
+                # a refill = joining a batch that is already mid-decode
+                if occupancy and sched.num_active > 0:
+                    admissions += 1
+                sched.assign(slot, req, clock)
+            if sched.num_active == 0:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                clock = max(clock + 1, nxt)   # idle: fast-forward the clock
+                continue
+            occupancy.append(sched.num_active / num_slots)
+            state = fn(self.params, state)
+            clock += chunk
+            done_np, len_np = jax.device_get((state.done, state.lengths))
+            for slot, req in sched.active_slots():
+                if not done_np[slot]:
+                    continue
+                n = int(len_np[slot])
+                row = np.asarray(jax.device_get(state.tokens[slot, :n]))
+                lps = np.asarray(jax.device_get(
+                    state.logprobs[slot, len(req.prompt):n]))
+                reason = ("eos" if self.eos_id is not None and n > 0
+                          and row[-1] == self.eos_id else "length")
+                sched.complete(slot, row, lps, reason, clock)
+                state = self._release(state, jnp.int32(slot))
+                generated += n - len(req.prompt)
+        outputs = sorted(sched.finished, key=lambda o: o.rid)
+        stats = ServeStats(
+            decode_steps=len(occupancy) * chunk,
+            generated_tokens=generated,
+            occupancy=float(np.mean(occupancy)) if occupancy else 0.0,
+            num_chunks=len(occupancy), admissions=admissions)
+        return outputs, stats
 
     # -- diagnostics -----------------------------------------------------------
     def weight_bytes(self) -> float:

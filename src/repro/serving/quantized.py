@@ -59,6 +59,22 @@ def fastewq_metadata_plan(cfg: ModelConfig, variant: str = "8bit-mixed",
                      threshold=float("nan"), x_factor=1.0)
 
 
+def plan_for_variant(model: Model, params, variant: str,
+                     fast: bool = False) -> Optional[QuantPlan]:
+    """Variant string -> QuantPlan (None for "raw").
+
+    ``fast`` selects the FastEWQ metadata-only path; otherwise the weights
+    are entropy-analyzed (full EWQ). Shared by launch/serve.py, examples
+    and benchmarks so they agree on the variant vocabulary.
+    """
+    if variant == "raw":
+        return None
+    if fast:
+        return fastewq_metadata_plan(model.cfg, variant)
+    from repro.core.planner import plan_model
+    return plan_model(model, params, variant=variant)
+
+
 def apply_plan_to_params(model: Model, params, plan: QuantPlan,
                          group: int = 128):
     """Quantize a model's params per an EWQ plan (block order matches

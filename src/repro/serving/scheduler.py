@@ -1,0 +1,125 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request moves queued -> assigned (slot) -> finished. The scheduler is
+pure host-side bookkeeping — all tensor state lives in
+``serving.batch.DecodeState``; the engine consults the scheduler between
+decode chunks to admit ready requests into freed slots and to harvest
+finished ones. Time is measured in decode steps (the engine's clock
+advances by ``chunk`` per jitted chunk), so ``arrival_step`` simulates a
+request stream without wall-clock dependence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new_tokens: int
+    arrival_step: int = 0         # decode-step clock at which it may be admitted
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    rid: int
+    tokens: np.ndarray            # (P + generated,) int32
+    prompt_len: int
+    logprobs: np.ndarray          # (generated,) f32 chosen-token logprobs
+    finish_reason: str            # "eos" | "length"
+    admitted_step: int
+    finished_step: int
+
+    @property
+    def generated(self) -> np.ndarray:
+        return self.tokens[self.prompt_len:]
+
+
+class Scheduler:
+    """Admission queue + slot table over a fixed number of decode slots."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self._queue: list[tuple[int, int, Request]] = []  # (arrival, rid, req)
+        self._slots: list[Optional[Request]] = [None] * num_slots
+        self._admitted_step: dict[int, int] = {}
+        self.finished: list[RequestOutput] = []
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        heapq.heappush(self._queue, (req.arrival_step, req.rid, req))
+
+    def next_ready(self, clock: int) -> Optional[Request]:
+        """Pop the earliest queued request that has arrived by ``clock``."""
+        if self._queue and self._queue[0][0] <= clock:
+            return heapq.heappop(self._queue)[2]
+        return None
+
+    def next_arrival(self) -> Optional[int]:
+        return self._queue[0][0] if self._queue else None
+
+    # -- slots --------------------------------------------------------------
+    def assign(self, slot: int, req: Request, clock: int) -> None:
+        assert self._slots[slot] is None, f"slot {slot} busy"
+        self._slots[slot] = req
+        self._admitted_step[req.rid] = clock
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def active_slots(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self._slots) if r is not None]
+
+    def complete(self, slot: int, tokens: np.ndarray, logprobs: np.ndarray,
+                 finish_reason: str, clock: int) -> RequestOutput:
+        req = self._slots[slot]
+        assert req is not None
+        self._slots[slot] = None
+        out = RequestOutput(
+            rid=req.rid, tokens=tokens, prompt_len=len(req.prompt),
+            logprobs=logprobs, finish_reason=finish_reason,
+            admitted_step=self._admitted_step.pop(req.rid),
+            finished_step=clock)
+        self.finished.append(out)
+        return out
+
+    # -- progress -----------------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._queue)
+
+    def all_done(self) -> bool:
+        return not self._queue and self.num_active == 0
+
+
+def synthetic_stream(num_requests: int, *, vocab_size: int, prompt_len: int,
+                     max_new_tokens: int, arrival_rate: float = 0.0,
+                     seed: int = 0) -> list[Request]:
+    """Deterministic request stream for benchmarks and tests.
+
+    ``arrival_rate`` is requests per decode step; 0 means all requests are
+    available at step 0 (pure batch drain). Generated lengths vary +-25%
+    around ``max_new_tokens`` so slots free up at different times and
+    mid-run admission is exercised.
+    """
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(num_requests):
+        prompt = rng.randint(0, vocab_size, size=(prompt_len,)).astype(np.int32)
+        lo = max(1, int(max_new_tokens * 0.75))
+        hi = max(lo + 1, int(max_new_tokens * 1.25) + 1)
+        arrival = 0 if arrival_rate <= 0 else int(i / arrival_rate)
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.randint(lo, hi)),
+                            arrival_step=arrival))
+    return reqs

@@ -3,9 +3,15 @@ import os
 # Tests run single-device (the dry-run sets its own XLA_FLAGS in subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "repro", max_examples=20, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
-settings.load_profile("repro")
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    # Property tests importorskip hypothesis per-module; everything else
+    # must still collect and run without it.
+    pass
+else:
+    settings.register_profile(
+        "repro", max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("repro")

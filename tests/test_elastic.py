@@ -6,6 +6,8 @@ import textwrap
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, strategies as st
 
 from repro.core.entropy import BlockEntropy

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, strategies as st
 
 from repro.core import entropy as E

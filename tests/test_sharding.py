@@ -26,9 +26,9 @@ def _run_subprocess(code: str):
 
 def test_param_spec_rules():
     """Rule checks on a trivial 1x1 mesh (axis sizes 1 divide everything)."""
+    from repro.launch.mesh import make_mesh
     from repro.sharding.specs import param_specs
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     params = {
         "layers": {
             "attn": {"wq": np.zeros((4, 8, 16)), "wo": np.zeros((4, 16, 8))},
