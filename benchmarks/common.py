@@ -37,20 +37,28 @@ def bench_config(arch: str):
     return dataclasses.replace(cfg, num_layers=6)
 
 
-def get_trained(arch: str):
+def model_dir(arch: str, steps: int | None = None) -> pathlib.Path:
+    """Raw-weights checkpoint cache dir for a briefly-trained bench model."""
+    tag = arch.replace("/", "_")
+    if steps is not None and steps != TRAIN_STEPS:
+        tag += f"_s{steps}"
+    return RESULTS / "models" / tag
+
+
+def get_trained(arch: str, steps: int | None = None):
     """(cfg, model, params) — trained once, checkpoint-cached."""
+    steps = TRAIN_STEPS if steps is None else steps
     cfg = bench_config(arch)
     model = build(cfg)
-    cdir = RESULTS / "models" / arch.replace("/", "_")
-    params_like = jax.tree.map(np.zeros_like, model.init(jax.random.PRNGKey(0)))
+    cdir = model_dir(arch, steps)
     if ckpt.latest_step(cdir) is not None:
-        params, _ = ckpt.restore(cdir, params_like)
+        params, _ = ckpt.restore(cdir, model.abstract_params())
         params = jax.tree.map(jnp.asarray, params)
         return cfg, model, params
-    run = RunConfig(steps=TRAIN_STEPS, learning_rate=2e-3, warmup_steps=10,
+    run = RunConfig(steps=steps, learning_rate=2e-3, warmup_steps=10,
                     remat=False)
     res = train(cfg, run, batch=16, seq=64, log_fn=lambda s: None)
-    ckpt.save(cdir, TRAIN_STEPS, res["params"], extra={})
+    ckpt.save(cdir, steps, res["params"], extra={})
     return cfg, model, res["params"]
 
 

@@ -1,36 +1,50 @@
-"""Serving throughput: fused chunked decode loop vs per-token dispatch.
+"""Serving throughput + cold start across all four model families.
 
-For each deployment variant (raw bf16 | EWQ 8bit-mixed | EWQ 4bit/8bit) of
-the same trained model, measures decode tokens/sec for:
+Two sweeps over briefly-trained smoke-scale models:
 
-  * ``stepwise`` — the legacy per-token Python loop (one jitted decode
-    dispatch + host sync per token; what ServeEngine.generate did before
-    the continuous-batching refactor);
-  * ``fused``    — the jitted ``lax.scan`` chunked loop (one dispatch per
-    CHUNK tokens);
-  * ``stream``   — continuous batching over a simulated request stream
-    (Poisson-ish arrivals, slots freed mid-run are re-filled), reporting
-    batch occupancy and mid-run admissions alongside throughput.
+1. **Variant sweep** (llama3.2-3b): for raw bf16 | EWQ 8bit-mixed |
+   EWQ 4bit/8bit, decode tokens/sec for
+     * ``stepwise`` — legacy per-token Python loop (one jitted decode
+       dispatch + host sync per token);
+     * ``fused``    — the jitted ``lax.scan`` chunked loop;
+     * ``stream``   — continuous batching over a simulated request stream
+       (occupancy and mid-run admissions reported).
 
-Smoke-scale (CPU) defaults; run directly or via ``benchmarks/run.py serve``:
+2. **Family sweep** (dense | ssm | hybrid | encdec) under the mixed
+   "4bit/8bit" plan — the regime where hybrid/enc-dec previously fell back
+   to raw weights: per-family effective weight bytes vs raw, fused decode
+   throughput, and **cold-start time** with vs without a compiled-plan
+   artifact (docs/DESIGN.md §8):
+     * no artifact — restore raw weights + EWQ entropy analysis + plan
+       compile/quantize + engine warmup;
+     * artifact    — ``ServeEngine.from_artifact`` (quantized checkpoint +
+       plan manifest) + engine warmup.
 
-  PYTHONPATH=src python -m benchmarks.serve_throughput
+Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
+or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
 
 from __future__ import annotations
 
+import shutil
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.checkpoint import ckpt
+from repro.core.planner import plan_model
+from repro.quant.compiler import save_artifact
 from repro.serving.engine import ServeEngine
 from repro.serving.quantized import plan_for_variant
 from repro.serving.scheduler import synthetic_stream
 
 ARCH = "llama3.2-3b"
 VARIANTS = ("raw", "8bit-mixed", "4bit/8bit")
+FAMILY_ARCHS = (("dense", "llama3.2-3b"), ("ssm", "mamba2-780m"),
+                ("hybrid", "zamba2-2.7b"), ("encdec", "whisper-medium"))
+FAMILY_VARIANT = "4bit/8bit"
 BATCH = 4
 PROMPT_LEN = 16
 MAX_NEW = 32
@@ -39,6 +53,7 @@ CHUNK = 16
 NUM_REQUESTS = 12
 NUM_SLOTS = 4
 ARRIVAL_RATE = 0.25   # requests per decode step
+SMOKE_TRAIN_STEPS = 20
 
 
 def _time(fn, reps: int = 3) -> float:
@@ -52,28 +67,33 @@ def _time(fn, reps: int = 3) -> float:
     return best
 
 
-def run() -> list[tuple]:
-    cfg, model, params = common.get_trained(ARCH)
-    prompts = jax.random.randint(jax.random.PRNGKey(7), (BATCH, PROMPT_LEN),
-                                 0, cfg.vocab_size, dtype=jnp.int32)
+def _prompts(cfg, batch, seed=7):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, PROMPT_LEN),
+                              0, cfg.vocab_size, dtype=jnp.int32)
+
+
+def _variant_rows(max_new: int, reps: int, summary: dict,
+                  steps: int | None = None,
+                  variants: tuple = VARIANTS) -> list[tuple]:
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    prompts = _prompts(cfg, BATCH)
     rows = []
-    summary = {}
-    for variant in VARIANTS:
+    for variant in variants:
         plan = plan_for_variant(model, params, variant)
         engine = ServeEngine(model, params, plan=plan,
-                             max_seq=PROMPT_LEN + int(MAX_NEW * 1.25) + 1)
-        tokens = BATCH * MAX_NEW
+                             max_seq=PROMPT_LEN + int(max_new * 1.25) + 1)
+        tokens = BATCH * max_new
 
-        dt_step = _time(lambda: engine.generate_stepwise(prompts, MAX_NEW)
-                        .tokens)
-        dt_fused = _time(lambda: engine.generate(prompts, MAX_NEW,
-                                                 chunk=CHUNK).tokens)
+        dt_step = _time(lambda: engine.generate_stepwise(prompts, max_new)
+                        .tokens, reps)
+        dt_fused = _time(lambda: engine.generate(prompts, max_new,
+                                                 chunk=CHUNK).tokens, reps)
         tps_step = tokens / dt_step
         tps_fused = tokens / dt_fused
 
         requests = synthetic_stream(
             NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
-            max_new_tokens=MAX_NEW, arrival_rate=ARRIVAL_RATE, seed=0)
+            max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
         # warm the serve path (chunk fn, batch=1 prefill, insert/release
         # compiles) so the timed run is steady-state like the rows above
         engine.serve(requests[:2], num_slots=NUM_SLOTS, chunk=CHUNK)
@@ -91,7 +111,7 @@ def run() -> list[tuple]:
             stats.generated_tokens, 1) * 1e6,
             f"{tps_stream:.1f} tok/s occupancy {stats.occupancy:.2f} "
             f"admissions {stats.admissions}"))
-        summary[variant] = {
+        summary["variants"][variant] = {
             "weight_mib": engine.weight_bytes() / 2**20,
             "tok_s_stepwise": tps_step, "tok_s_fused": tps_fused,
             "fused_speedup": tps_fused / tps_step,
@@ -99,10 +119,79 @@ def run() -> list[tuple]:
             "mid_run_admissions": stats.admissions,
             "decode_steps": stats.decode_steps,
         }
+    return rows
+
+
+def _family_rows(max_new: int, reps: int, steps: int | None,
+                 summary: dict) -> list[tuple]:
+    rows = []
+    for family, arch in FAMILY_ARCHS:
+        cfg, model, _ = common.get_trained(arch, steps=steps)
+        max_seq = PROMPT_LEN + max_new + 2
+        prompts = _prompts(cfg, 2)
+        cdir = common.model_dir(arch, steps)
+        adir = common.RESULTS / "artifacts" / arch.replace("/", "_")
+
+        # -- cold start WITHOUT artifact: raw weights -> plan -> quantize ----
+        t0 = time.perf_counter()
+        params, _ = ckpt.restore(cdir, model.abstract_params())
+        params = jax.tree.map(jnp.asarray, params)
+        plan = plan_model(model, params, variant=FAMILY_VARIANT)
+        compiled = model.compile_plan(params, plan)
+        engine = ServeEngine(model, compiled.params, max_seq=max_seq)
+        jax.block_until_ready(engine.generate(prompts, 2).tokens)
+        cold_raw = time.perf_counter() - t0
+
+        # -- cold start WITH artifact: quantized checkpoint + manifest -------
+        shutil.rmtree(adir, ignore_errors=True)
+        save_artifact(str(adir), compiled)
+        t0 = time.perf_counter()
+        engine_a = ServeEngine.from_artifact(model, str(adir),
+                                             max_seq=max_seq)
+        jax.block_until_ready(engine_a.generate(prompts, 2).tokens)
+        cold_art = time.perf_counter() - t0
+
+        raw_bytes = sum(x.size * x.dtype.itemsize
+                        for x in jax.tree.leaves(params))
+        eff = engine_a.weight_bytes()
+        dt_fused = _time(lambda: engine_a.generate(
+            prompts, max_new, chunk=min(CHUNK, max_new)).tokens, reps)
+        tps = 2 * max_new / dt_fused
+
+        rows.append((f"serve/family/{family}/fused", dt_fused / (
+            2 * max_new) * 1e6,
+            f"{tps:.1f} tok/s weights {eff/2**20:.2f} MiB eff "
+            f"({raw_bytes/2**20:.2f} raw)"))
+        rows.append((f"serve/family/{family}/cold_boot", cold_art * 1e6,
+                     f"artifact {cold_art:.2f}s vs raw-path {cold_raw:.2f}s "
+                     f"({cold_raw/max(cold_art, 1e-9):.1f}x)"))
+        summary["families"][family] = {
+            "arch": arch, "variant": FAMILY_VARIANT,
+            "weight_mib_effective": eff / 2**20,
+            "weight_mib_raw": raw_bytes / 2**20,
+            "plan_counts": plan.counts(),
+            "tok_s_fused": tps,
+            "cold_start_s_no_artifact": cold_raw,
+            "cold_start_s_artifact": cold_art,
+        }
+    return rows
+
+
+def run(smoke: bool = False) -> list[tuple]:
+    max_new = 8 if smoke else MAX_NEW
+    reps = 1 if smoke else 3
+    steps = SMOKE_TRAIN_STEPS if smoke else None
+    summary: dict = {"variants": {}, "families": {}}
+    # smoke (CI): one quantized variant through stepwise/fused/stream so the
+    # continuous-batching path is exercised, then the full family sweep
+    variants = ("4bit/8bit",) if smoke else VARIANTS
+    rows = _variant_rows(max_new, reps, summary, steps, variants)
+    rows += _family_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 
 
 if __name__ == "__main__":
+    import sys
     print("name,us_per_call,derived")
-    common.emit(run())
+    common.emit(run(smoke="--smoke" in sys.argv))

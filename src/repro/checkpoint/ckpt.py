@@ -163,10 +163,62 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
                                meta.get("scale_dtype", "float32")),
                            precision=meta["precision"],
                            shape=tuple(meta["shape"]), group=meta["group"])
+            if isinstance(like, QTensor) and \
+                    leaf.data.shape != tuple(like.data.shape):
+                raise ValueError(f"{key}: checkpoint qtensor data shape "
+                                 f"{leaf.data.shape} != expected "
+                                 f"{tuple(like.data.shape)}")
         else:
             arr = _from_storable(data[key], meta["dtype"])
+            want = getattr(like, "shape", None)
+            if want is not None and arr.shape != tuple(want):
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                                 f"expected {tuple(want)}")
             if mesh is not None and spec_flat is not None and key in spec_flat:
                 arr = jax.device_put(arr, NamedSharding(mesh, spec_flat[key]))
             leaf = arr
         leaves.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
+
+
+# ---------------------------------------------------------------------------
+# Compiled-plan artifacts (quant/compiler.py)
+#
+# An artifact is a regular step_0 checkpoint of the compiled parameter tree
+# (SegmentedParams stacks flatten into ordinary QTensor/array leaves) plus a
+# top-level ``plan_manifest.json`` that records everything needed to rebuild
+# the tree skeleton without raw weights: family, config name, the QuantPlan
+# itself, group size, and the per-stack segment layout.
+# ---------------------------------------------------------------------------
+
+_ARTIFACT_MANIFEST = "plan_manifest.json"
+
+
+def save_artifact(directory: str, tree: Any, manifest: dict) -> str:
+    """Persist a compiled quantized-param tree + its plan manifest."""
+    path = save(directory, 0, tree, extra={"plan_manifest": manifest},
+                keep=1)
+    tmp = pathlib.Path(directory) / (_ARTIFACT_MANIFEST + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=2)
+    os.replace(tmp, pathlib.Path(directory) / _ARTIFACT_MANIFEST)
+    return path
+
+
+def is_artifact(directory: str) -> bool:
+    d = pathlib.Path(directory)
+    return (d / _ARTIFACT_MANIFEST).exists() and latest_step(d) is not None
+
+
+def load_artifact_manifest(directory: str) -> dict:
+    path = pathlib.Path(directory) / _ARTIFACT_MANIFEST
+    if not path.exists():
+        raise FileNotFoundError(f"no {_ARTIFACT_MANIFEST} in {directory}")
+    with open(path) as f:
+        return json.load(f)
+
+
+def restore_artifact(directory: str, tree_like: Any) -> Any:
+    """Restore the compiled tree into a (segmented/quantized) skeleton."""
+    tree, _ = restore(directory, tree_like)
+    return tree

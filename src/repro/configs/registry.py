@@ -33,7 +33,7 @@ def shape_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Is (arch, shape) a runnable dry-run cell? Returns (ok, reason)."""
     if shape.name == "long_500k" and not cfg.supports_long_context:
         return False, ("pure full-attention arch: quadratic attention at "
-                       "524288 tokens; skipped per DESIGN.md")
+                       "524288 tokens; skipped per docs/DESIGN.md §2.3")
     return True, ""
 
 

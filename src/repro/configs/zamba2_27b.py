@@ -2,7 +2,7 @@
 
 54L d_model=2560 32H (GQA kv=32) d_ff=10240 vocab=32000, ssm_state=64 —
 arXiv:2411.15242. One shared attn+MLP block applied every 6 Mamba2 layers
-(9 sites); per-site LoRA adapters omitted (DESIGN.md).
+(9 sites); per-site LoRA adapters omitted (docs/DESIGN.md §2.1).
 """
 
 from repro.configs.base import ModelConfig

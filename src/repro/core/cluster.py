@@ -8,7 +8,7 @@ fits, and finally places blocks on machines first-fit by descending size.
 
 Algorithm 2 (FastEWQ) does the same keyed on exec_index instead of entropy.
 
-``fit_plan_to_hbm`` is the TPU-native adaptation (DESIGN.md §3): the same
+``fit_plan_to_hbm`` is the TPU-native adaptation (docs/DESIGN.md §3): the same
 promote/demote loop run against a per-device HBM budget for a sharded
 deployment (blocks are sharded, precision is the degree of freedom).
 """

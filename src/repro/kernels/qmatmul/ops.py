@@ -6,15 +6,27 @@ weight matmul. ``w`` may be:
 * a plain jax.Array (raw / bf16 path)          -> einsum
 * a QTensor (int8 / int4 / ternary)            -> fused dequant matmul
 
-Backend selection: on TPU the Pallas kernel runs natively; elsewhere
-(CPU dry-run/tests) we use the jnp fallback, which XLA fuses reasonably,
-keeping HLO byte counts faithful to weight-only quantization (int8/int4
-weights are read at their quantized width; dequant is a flop-cheap
-broadcast-multiply). The Pallas kernel itself is validated against ref.py
-in interpret mode (tests/test_kernels_qmatmul.py).
+Backend selection (explicit, per-call or process-wide):
+
+* ``auto``    — (default) the Pallas kernel on TPU when shapes are tile
+  aligned, else the ``simple`` jnp fallback. XLA fuses the fallback
+  reasonably, keeping HLO byte counts faithful to weight-only quantization
+  (int8/int4 weights are read at their quantized width; dequant is a
+  flop-cheap broadcast-multiply).
+* ``pallas``  — force the Pallas kernel (raises off-TPU / on misaligned
+  shapes rather than silently degrading).
+* ``grouped`` — jnp fallback with the kernel's exact math: per-group
+  partial sums are scaled, never materializing a dequantized weight.
+* ``simple``  — dequantize-then-dot fallback.
+
+Set process-wide via ``set_qdot_backend`` or the ``REPRO_QDOT_BACKEND``
+env var; both jnp fallbacks are validated against ref.py
+(tests/test_compiler.py::test_qdot_backends).
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -23,26 +35,59 @@ from repro.quant.qtypes import QTensor
 from repro.quant.quantize import unpack_int4
 from repro.kernels.qmatmul.kernel import qmatmul_pallas
 
+BACKENDS = ("auto", "pallas", "grouped", "simple")
+_backend = os.environ.get("REPRO_QDOT_BACKEND", "auto")
+
+
+def set_qdot_backend(name: str) -> None:
+    """Select the process-wide default qdot backend (see module docstring).
+
+    The selection is read at TRACE time: functions jitted before the call
+    (e.g. a ServeEngine's cached decode/prefill executables) keep the
+    backend they were traced with — rebuild them (or pass ``backend=`` per
+    call) to switch."""
+    if name not in BACKENDS:
+        raise ValueError(f"unknown qdot backend {name!r}; one of {BACKENDS}")
+    global _backend
+    _backend = name
+
+
+def get_qdot_backend() -> str:
+    return _backend
+
 
 def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _pallas_aligned(m: int, n: int, k: int) -> bool:
+    return m % 128 == 0 and n % 128 == 0 and k % 512 == 0
+
+
 def _dequant_fused(x2d: jax.Array, w: QTensor) -> jax.Array:
-    """jnp fallback with the same math as the kernel: scale the per-group
-    partial sums rather than materializing a full dequantized weight when
-    the contraction is grouped."""
+    """jnp fallback with the same math as the kernel: accumulate scaled
+    per-group partial sums over a scan of the K/group blocks rather than
+    materializing a full dequantized weight — temp memory stays O(M*N)
+    (one partial product), never O(M*N*K/group)."""
     data = w.data
     if w.precision == "int4":
         data = unpack_int4(data)
+    m = x2d.shape[0]
     n, k = data.shape
     g = w.group
-    # (M, K) x (N, K) grouped: einsum over (group-blocks, in-group).
-    xg = x2d.reshape(x2d.shape[0], k // g, g).astype(jnp.float32)
-    wg = data.reshape(n, k // g, g).astype(jnp.float32)
-    partial = jnp.einsum("mgk,ngk->mng", xg, wg,
-                         preferred_element_type=jnp.float32)
-    return jnp.einsum("mng,ng->mn", partial, w.scale.astype(jnp.float32))
+    # (G, M, g) x (G, N, g): one (M, N) partial per group block, scaled.
+    xg = jnp.moveaxis(x2d.reshape(m, k // g, g), 1, 0).astype(jnp.float32)
+    wg = jnp.moveaxis(data.reshape(n, k // g, g), 1, 0).astype(jnp.float32)
+    sg = jnp.moveaxis(w.scale.astype(jnp.float32), -1, 0)  # (G, N)
+
+    def body(acc, xs):
+        x_g, w_g, s_g = xs
+        part = jnp.einsum("mk,nk->mn", x_g, w_g,
+                          preferred_element_type=jnp.float32)
+        return acc + part * s_g[None, :], None
+
+    y, _ = jax.lax.scan(body, jnp.zeros((m, n), jnp.float32), (xg, wg, sg))
+    return y
 
 
 def _dequant_simple(x2d: jax.Array, w: QTensor) -> jax.Array:
@@ -53,8 +98,15 @@ def _dequant_simple(x2d: jax.Array, w: QTensor) -> jax.Array:
                                preferred_element_type=jnp.float32)
 
 
-def qdot(x: jax.Array, w, out_dtype=None) -> jax.Array:
-    """y[..., n] = sum_k x[..., k] * W[n, k] with W possibly quantized."""
+def qdot(x: jax.Array, w, out_dtype=None, backend: str | None = None
+         ) -> jax.Array:
+    """y[..., n] = sum_k x[..., k] * W[n, k] with W possibly quantized.
+
+    ``backend`` overrides the process-wide selection for this call."""
+    backend = backend or _backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown qdot backend {backend!r}; "
+                         f"one of {BACKENDS}")
     if out_dtype is None:
         out_dtype = x.dtype
     lead = x.shape[:-1]
@@ -62,10 +114,18 @@ def qdot(x: jax.Array, w, out_dtype=None) -> jax.Array:
     x2d = x.reshape(-1, k)
     if isinstance(w, QTensor):
         m, n = x2d.shape[0], w.data.shape[0]
-        if (_use_pallas() and m % 128 == 0 and n % 128 == 0
-                and k % 512 == 0):
+        if backend == "pallas" or (backend == "auto" and _use_pallas()
+                                   and _pallas_aligned(m, n, k)):
+            if backend == "pallas" and not (_use_pallas()
+                                            and _pallas_aligned(m, n, k)):
+                raise ValueError(
+                    f"qdot backend 'pallas' needs a TPU and tile-aligned "
+                    f"shapes (m%128, n%128, k%512); got m={m} n={n} k={k} "
+                    f"on {jax.default_backend()!r}")
             y = qmatmul_pallas(x2d, w.data, w.scale, group=w.group,
                                precision=w.precision)
+        elif backend == "grouped":
+            y = _dequant_fused(x2d, w)
         else:
             y = _dequant_simple(x2d, w)
         n_out = n

@@ -108,16 +108,21 @@ def depth_variants(cfg, quant: str | None):
     r = dataclasses.replace
     if quant:  # two stacks: raw layers vs quantized layers (dense/ssm)
         from repro.serving.quantized import explicit_plan
+
+        def ep(cfg_v, precs):
+            # explicit_plan covers encoder+decoder stacks for enc-dec; the
+            # affine raw/quant split applies to the decoder, encoder raw
+            ne = cfg_v.num_encoder_layers or 0
+            return explicit_plan(cfg_v, ["raw"] * ne + precs, quant)
+
         fulls = _quant_counts(cfg, quant)
         return ([
             (r(cfg, num_layers=2), {"raw": 1, "quant": 1},
-             explicit_plan(r(cfg, num_layers=2), ["raw", "int8"], quant)),
+             ep(r(cfg, num_layers=2), ["raw", "int8"])),
             (r(cfg, num_layers=3), {"raw": 1, "quant": 2},
-             explicit_plan(r(cfg, num_layers=3), ["raw", "int8", "int8"],
-                           quant)),
+             ep(r(cfg, num_layers=3), ["raw", "int8", "int8"])),
             (r(cfg, num_layers=3), {"raw": 2, "quant": 1},
-             explicit_plan(r(cfg, num_layers=3), ["raw", "raw", "int8"],
-                           quant)),
+             ep(r(cfg, num_layers=3), ["raw", "raw", "int8"])),
         ], fulls)
     if cfg.family == "encdec":
         return ([

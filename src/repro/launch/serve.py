@@ -9,6 +9,14 @@ Request-stream simulation (continuous batching — new requests are admitted
 into freed slots between decode chunks):
   python -m repro.launch.serve --arch llama3.2-3b --smoke \
       --num-requests 16 --arrival-rate 0.5 --num-slots 4 --chunk 8
+
+Compiled-plan artifacts (compile once, serve many — docs/DESIGN.md §8):
+  # first run: train, analyze, compile, persist the quantized checkpoint
+  python -m repro.launch.serve --arch zamba2-2.7b --smoke \
+      --variant 4bit/8bit --plan-artifact /tmp/zamba_plan
+  # later runs boot from the artifact: no weight load, no entropy analysis
+  python -m repro.launch.serve --arch zamba2-2.7b --smoke \
+      --plan-artifact /tmp/zamba_plan
 """
 
 from __future__ import annotations
@@ -41,6 +49,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--plan-artifact", default=None,
+                    help="compiled-plan artifact dir: boot from it when it "
+                         "exists, else compile + persist into it")
     # request-stream simulation (continuous batching)
     ap.add_argument("--num-requests", type=int, default=0,
                     help="simulate a stream of N requests (0: single batch)")
@@ -53,10 +64,6 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    run = RunConfig(steps=args.train_steps, learning_rate=1e-3,
-                    warmup_steps=3, remat=False)
-    result = train(cfg, run, batch=args.batch, seq=args.prompt_len * 2)
-    model, params = result["model"], result["params"]
 
     requests = None
     max_seq = args.prompt_len + args.max_new
@@ -67,9 +74,37 @@ def main():
             arrival_rate=args.arrival_rate)
         max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
 
-    plan = plan_for_variant(model, params, args.variant, fast=args.fast)
-    engine = ServeEngine(model, params, plan=plan, max_seq=max_seq)
-    raw_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    from repro.checkpoint import ckpt
+    if args.plan_artifact and ckpt.is_artifact(args.plan_artifact):
+        # cold boot: quantized weights straight from the compiled artifact —
+        # no training/raw-weight load, no entropy analysis, no quantization
+        from repro.models.model import build
+        model = build(cfg)
+        t0 = time.perf_counter()
+        engine = ServeEngine.from_artifact(model, args.plan_artifact,
+                                           max_seq=max_seq)
+        plan = engine.plan
+        print(f"booted from artifact {args.plan_artifact} in "
+              f"{time.perf_counter() - t0:.2f}s")
+    else:
+        run = RunConfig(steps=args.train_steps, learning_rate=1e-3,
+                        warmup_steps=3, remat=False)
+        result = train(cfg, run, batch=args.batch, seq=args.prompt_len * 2)
+        model, params = result["model"], result["params"]
+        plan = plan_for_variant(model, params, args.variant, fast=args.fast)
+        if plan is not None:
+            compiled = model.compile_plan(params, plan)
+            engine = ServeEngine(model, compiled.params, max_seq=max_seq)
+            engine.plan = plan
+            if args.plan_artifact:
+                from repro.quant.compiler import save_artifact
+                path = save_artifact(args.plan_artifact, compiled)
+                print(f"saved compiled plan artifact to {path}")
+        else:
+            engine = ServeEngine(model, params, max_seq=max_seq)
+
+    raw_bits = 32.0 if cfg.dtype == "float32" else 16.0
+    raw_bytes = cfg.param_count() * raw_bits / 8.0
     print(f"weights: {engine.weight_bytes()/2**20:.1f} MiB effective "
           f"(raw {raw_bytes/2**20:.1f} MiB)")
     if plan:

@@ -62,7 +62,7 @@ def _flatten_gqa_for_sharding(q, k, v):
     waste is (pad/H) extra attention FLOPs (14% for arctic, 33% for
     llama3.2-3b) versus a 16x replication loss. The TPU-target flash kernel
     handles grouped heads natively; this is the XLA-level layout
-    (DESIGN.md §5). Returns (q, k, v, original_h).
+    (docs/DESIGN.md §5). Returns (q, k, v, original_h).
     """
     ms = model_shards()
     h, hkv = q.shape[2], k.shape[2]

@@ -5,7 +5,7 @@ precomputed frame embeddings (B, encoder_seq, d_model). Encoder layers are
 bidirectional self-attention + GeLU MLP; decoder layers are causal
 self-attention + cross-attention + GeLU MLP; LayerNorm (scale-only), no rope
 (whisper uses sinusoidal encoder / learned decoder positions — we use
-sinusoidal for both; noted in DESIGN.md).
+sinusoidal for both; noted in docs/DESIGN.md §2.2).
 
 Decode maintains per-layer self-attention KV caches plus precomputed
 cross-attention K/V from the encoder pass.
@@ -98,8 +98,10 @@ def encode(params, frames: jax.Array, cfg, *, remat: bool = True):
         h = h + M.mlp(p["mlp"], _ln(h, p["ln2"], cfg), "gelu")
         return constrain(h, ("batch", "seq", None)), None
 
+    from repro.quant.apply import segment_slices
     fn = jax.checkpoint(body) if remat else body
-    h, _ = jax.lax.scan(fn, h, params["enc_layers"], unroll=unroll_flag())
+    for part, _, _ in segment_slices(params["enc_layers"]):
+        h, _ = jax.lax.scan(fn, h, part, unroll=unroll_flag())
     return _ln(h, params["final"]["enc_norm"], cfg)
 
 
@@ -146,8 +148,10 @@ def apply(params, tokens: jax.Array, frames: jax.Array, cfg, *,
         h2, _ = _dec_layer(p, h, enc_out, cfg)
         return h2, None
 
+    from repro.quant.apply import segment_slices
     fn = jax.checkpoint(body) if remat else body
-    h, _ = jax.lax.scan(fn, h, params["dec_layers"], unroll=unroll_flag())
+    for part, _, _ in segment_slices(params["dec_layers"]):
+        h, _ = jax.lax.scan(fn, h, part, unroll=unroll_flag())
     if last_only:
         h = h[:, -1:, :]
     h = _ln(h, params["final"]["norm"], cfg)
@@ -177,8 +181,14 @@ def precompute_cross_kv(params, enc_out: jax.Array, cfg) -> tuple:
         v = qdot(enc_out, p["cross_attn"]["wv"]).reshape(b, s, hkv, hd)
         return None, (k, v)
 
-    _, (ks, vs) = jax.lax.scan(body, None, params["dec_layers"])
-    return ks, vs
+    from repro.quant.apply import segment_slices
+    ks, vs = [], []
+    for part, _, _ in segment_slices(params["dec_layers"]):
+        _, (k_p, v_p) = jax.lax.scan(body, None, part)
+        ks.append(k_p)
+        vs.append(v_p)
+    return (jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0],
+            jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0])
 
 
 def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
@@ -203,9 +213,17 @@ def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
                                 cross_kv=A.KVCache(k=ck_l, v=cv_l))
         return h2, (new_kv.k, new_kv.v)
 
-    h, (new_k, new_v) = jax.lax.scan(
-        body, h, (params["dec_layers"], cache.k, cache.v,
-                  cache.cross_k, cache.cross_v), unroll=unroll_flag())
+    from repro.quant.apply import segment_slices
+    ks, vs = [], []
+    for part, lo, hi in segment_slices(params["dec_layers"]):
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (part, cache.k[lo:hi], cache.v[lo:hi],
+                      cache.cross_k[lo:hi], cache.cross_v[lo:hi]),
+            unroll=unroll_flag())
+        ks.append(nk)
+        vs.append(nv)
+    new_k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
+    new_v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
     h = _ln(h, params["final"]["norm"], cfg)
     logits = lm_head(h, embed_w)
     return logits, EncDecCache(k=new_k, v=new_v, cross_k=cache.cross_k,

@@ -8,8 +8,10 @@ unit's 6 stacked Mamba2 layers. The KV cache carries one (B, S, Hkv, hd)
 entry per shared-block *application site* (activations differ per site even
 though weights are shared).
 
-Deviation noted in DESIGN.md: Zamba2's per-application LoRA adapters on the
-shared block are omitted; shared-block quantization applies to all sites.
+Deviation noted in docs/DESIGN.md §2.1: Zamba2's per-application LoRA
+adapters on the shared block are omitted; shared-block quantization applies
+to all sites. Mixed-precision plans execute per-unit segments
+(docs/DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -88,6 +90,29 @@ def _unit_stack(layers, cfg):
     return jax.tree.map(lambda x: x.reshape((u, p) + x.shape[1:]), layers)
 
 
+def _layer_stack(layers, cfg):
+    """Resolve a (possibly segmented) mamba stack for execution.
+
+    Returns ``(uniform_stack, segments_by_unit)``: exactly one is non-None.
+    A plain stacked tree or a single-segment ``SegmentedParams`` (uniform
+    plan) executes via the fused unit-scan fast path; a mixed-precision
+    ``SegmentedParams`` (compiler cuts segments at unit boundaries —
+    docs/DESIGN.md §8) executes per-unit, scanning each segment's slice
+    inside its unit."""
+    from repro.quant.apply import SegmentedParams
+    if not isinstance(layers, SegmentedParams):
+        return layers, None
+    if len(layers.segments) == 1:
+        return layers.segments[0].params, None
+    period = cfg.shared_attn_period
+    by_unit = [[] for _ in range(_num_units(cfg))]
+    for seg in layers.segments:
+        assert seg.start // period == (seg.stop - 1) // period, \
+            f"segment [{seg.start},{seg.stop}) crosses a unit boundary"
+        by_unit[seg.start // period].append(seg)
+    return None, by_unit
+
+
 def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
           last_only: bool = False):
     dtype = dtype_of(cfg)
@@ -96,23 +121,33 @@ def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
     h = constrain(embed_lookup(embed_w, tokens, dtype),
                   ("batch", None, None))
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    units = _unit_stack(params["layers"], cfg)
     shared = unshard_fsdp(params["shared"])
+    stacked, by_unit = _layer_stack(params["layers"], cfg)
 
-    def unit_body(h, unit_layers):
-        h, _ = _shared_block(shared, h, positions, cfg)
+    def mamba_body(h, p_layer):
+        p_layer = unshard_fsdp(p_layer)
+        y = S.ssm_block(p_layer, norm(h, p_layer["ln"], cfg), cfg)
+        return constrain(h + y, ("batch", "seq", None)), None
 
-        def mamba_body(h, p_layer):
-            p_layer = unshard_fsdp(p_layer)
-            y = S.ssm_block(p_layer, norm(h, p_layer["ln"], cfg), cfg)
-            return constrain(h + y, ("batch", "seq", None)), None
+    inner = jax.checkpoint(mamba_body) if remat else mamba_body
 
-        inner = jax.checkpoint(mamba_body) if remat else mamba_body
-        h, _ = jax.lax.scan(inner, h, unit_layers, unroll=unroll_flag())
-        return h, None
+    if by_unit is not None:
+        # mixed-precision: units unrolled, one scan per in-unit segment
+        for unit_segs in by_unit:
+            h, _ = _shared_block(shared, h, positions, cfg)
+            for seg in unit_segs:
+                h, _ = jax.lax.scan(inner, h, seg.params,
+                                    unroll=unroll_flag())
+    else:
+        units = _unit_stack(stacked, cfg)
 
-    fn = jax.checkpoint(unit_body) if remat else unit_body
-    h, _ = jax.lax.scan(fn, h, units, unroll=unroll_flag())
+        def unit_body(h, unit_layers):
+            h, _ = _shared_block(shared, h, positions, cfg)
+            h, _ = jax.lax.scan(inner, h, unit_layers, unroll=unroll_flag())
+            return h, None
+
+        fn = jax.checkpoint(unit_body) if remat else unit_body
+        h, _ = jax.lax.scan(fn, h, units, unroll=unroll_flag())
     if last_only:
         h = h[:, -1:, :]
     h = norm(h, params["final"]["norm"], cfg)
@@ -138,42 +173,70 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
     embed_w = unshard_fsdp(params["embed"])["tok"]
     h2d = embed_lookup(embed_w, tokens[:, 0], dtype)  # (B, D)
     positions = decode_positions(cache.pos, b, 1)
-    units = _unit_stack(params["layers"], cfg)
     u, period = _num_units(cfg), cfg.shared_attn_period
-    conv_u = cache.conv.reshape((u, period) + cache.conv.shape[1:])
-    state_u = cache.state.reshape((u, period) + cache.state.shape[1:])
     shared = unshard_fsdp(params["shared"])
+    stacked, by_unit = _layer_stack(params["layers"], cfg)
 
-    def unit_body(h, xs):
-        unit_layers, conv_l, state_l, k_l, v_l = xs
-        h3 = h[:, None, :]  # (B, 1, D) for attention
-        h3, new_kv = _shared_block(shared, h3, positions, cfg,
-                                   cache_kv=A.KVCache(k=k_l, v=v_l),
-                                   cache_pos=cache.pos)
-        h = h3[:, 0, :]
+    def mamba_body(h, xs_inner):
+        p_layer, c_l, s_l = xs_inner
+        p_layer = unshard_fsdp(p_layer)
+        y, new = S.ssm_decode_step(
+            p_layer, norm(h, p_layer["ln"], cfg),
+            S.SSMCache(conv=c_l, state=s_l), cfg)
+        return h + y, (new.conv, new.state)
 
-        def mamba_body(h, xs_inner):
-            p_layer, c_l, s_l = xs_inner
-            p_layer = unshard_fsdp(p_layer)
-            y, new = S.ssm_decode_step(
-                p_layer, norm(h, p_layer["ln"], cfg),
-                S.SSMCache(conv=c_l, state=s_l), cfg)
-            return h + y, (new.conv, new.state)
+    if by_unit is not None:
+        # mixed-precision: units unrolled; each segment scans its slice of
+        # the per-layer conv/state cache inside its unit
+        convs, states, new_ks, new_vs = [], [], [], []
+        for ui, unit_segs in enumerate(by_unit):
+            h3 = h2d[:, None, :]  # (B, 1, D) for attention
+            h3, new_kv = _shared_block(
+                shared, h3, positions, cfg,
+                cache_kv=A.KVCache(k=cache.k[ui], v=cache.v[ui]),
+                cache_pos=cache.pos)
+            h2d = h3[:, 0, :]
+            new_ks.append(new_kv.k)
+            new_vs.append(new_kv.v)
+            for seg in unit_segs:
+                h2d, (nc, ns) = jax.lax.scan(
+                    mamba_body, h2d,
+                    (seg.params, cache.conv[seg.start:seg.stop],
+                     cache.state[seg.start:seg.stop]),
+                    unroll=unroll_flag())
+                convs.append(nc)
+                states.append(ns)
+        new_cache = HybridCache(
+            conv=jnp.concatenate(convs, axis=0),
+            state=jnp.concatenate(states, axis=0),
+            k=jnp.stack(new_ks), v=jnp.stack(new_vs), pos=cache.pos + 1)
+    else:
+        units = _unit_stack(stacked, cfg)
+        conv_u = cache.conv.reshape((u, period) + cache.conv.shape[1:])
+        state_u = cache.state.reshape((u, period) + cache.state.shape[1:])
 
-        h, (nc, ns) = jax.lax.scan(mamba_body, h, (unit_layers, conv_l,
-                                                   state_l),
-                                   unroll=unroll_flag())
-        return h, (nc, ns, new_kv.k, new_kv.v)
+        def unit_body(h, xs):
+            unit_layers, conv_l, state_l, k_l, v_l = xs
+            h3 = h[:, None, :]  # (B, 1, D) for attention
+            h3, new_kv = _shared_block(shared, h3, positions, cfg,
+                                       cache_kv=A.KVCache(k=k_l, v=v_l),
+                                       cache_pos=cache.pos)
+            h = h3[:, 0, :]
+            h, (nc, ns) = jax.lax.scan(mamba_body, h,
+                                       (unit_layers, conv_l, state_l),
+                                       unroll=unroll_flag())
+            return h, (nc, ns, new_kv.k, new_kv.v)
 
-    h2d, (new_conv, new_state, new_k, new_v) = jax.lax.scan(
-        unit_body, h2d, (units, conv_u, state_u, cache.k, cache.v),
-        unroll=unroll_flag())
+        h2d, (new_conv, new_state, new_k, new_v) = jax.lax.scan(
+            unit_body, h2d, (units, conv_u, state_u, cache.k, cache.v),
+            unroll=unroll_flag())
+        new_cache = HybridCache(
+            conv=new_conv.reshape(cache.conv.shape),
+            state=new_state.reshape(cache.state.shape),
+            k=new_k, v=new_v, pos=cache.pos + 1)
+
     h = norm(h2d, params["final"]["norm"], cfg)
     logits = lm_head(h[:, None, :], embed_w)
-    new_cache = HybridCache(
-        conv=new_conv.reshape(cache.conv.shape),
-        state=new_state.reshape(cache.state.shape),
-        k=new_k, v=new_v, pos=cache.pos + 1)
     return logits, new_cache
 
 

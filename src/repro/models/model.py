@@ -88,6 +88,14 @@ class Model:
     def block_params(self, params) -> list:
         return self.module.block_params(params)
 
+    def compile_plan(self, params, plan, group: int = 128):
+        """Lower a QuantPlan onto this model's parameter layout — segmented
+        quantized stacks for every family (quant/compiler.py,
+        docs/DESIGN.md §8). Returns a CompiledPlan; its ``.params`` slot in
+        for raw params everywhere (apply / decode_step / serving)."""
+        from repro.quant.compiler import compile_plan
+        return compile_plan(self, params, plan, group)
+
 
 def build(cfg: ModelConfig) -> Model:
     if cfg.family not in _FAMILIES:

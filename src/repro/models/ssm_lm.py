@@ -56,14 +56,10 @@ def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
         y = S.ssm_block(p_layer, norm(h, p_layer.get("ln"), cfg), cfg)
         return constrain(h + y, ("batch", "seq", None)), {}
 
-    from repro.quant.apply import SegmentedParams
-    layers = params["layers"]
+    from repro.quant.apply import segment_slices
     fn = jax.checkpoint(body) if remat else body
-    if isinstance(layers, SegmentedParams):
-        for seg in layers.segments:
-            h, _ = jax.lax.scan(fn, h, seg.params, unroll=unroll_flag())
-    else:
-        h, _ = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
+    for part, _, _ in segment_slices(params["layers"]):
+        h, _ = jax.lax.scan(fn, h, part, unroll=unroll_flag())
     if last_only:
         h = h[:, -1:, :]
     h = norm(h, params["final"]["norm"], cfg)
@@ -99,23 +95,17 @@ def decode_step(params, cache: SSMLMCache, tokens: jax.Array, cfg):
             S.SSMCache(conv=conv_l, state=state_l), cfg)
         return h + y, (new.conv, new.state)
 
-    from repro.quant.apply import SegmentedParams
-    layers = params["layers"]
-    if isinstance(layers, SegmentedParams):
-        convs, states = [], []
-        for seg in layers.segments:
-            h, (nc, ns) = jax.lax.scan(
-                body, h, (seg.params, cache.conv[seg.start:seg.stop],
-                          cache.state[seg.start:seg.stop]),
-                unroll=unroll_flag())
-            convs.append(nc)
-            states.append(ns)
-        new_conv = jnp.concatenate(convs, axis=0)
-        new_state = jnp.concatenate(states, axis=0)
-    else:
-        h, (new_conv, new_state) = jax.lax.scan(
-            body, h, (layers, cache.conv, cache.state),
+    from repro.quant.apply import segment_slices
+    convs, states = [], []
+    for part, lo, hi in segment_slices(params["layers"]):
+        h, (nc, ns) = jax.lax.scan(
+            body, h, (part, cache.conv[lo:hi], cache.state[lo:hi]),
             unroll=unroll_flag())
+        convs.append(nc)
+        states.append(ns)
+    new_conv = jnp.concatenate(convs, axis=0) if len(convs) > 1 else convs[0]
+    new_state = (jnp.concatenate(states, axis=0) if len(states) > 1
+                 else states[0])
     h = norm(h, params["final"]["norm"], cfg)
     logits = lm_head(h[:, None, :], embed_w)
     return logits, SSMLMCache(conv=new_conv, state=new_state,

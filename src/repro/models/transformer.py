@@ -148,35 +148,28 @@ def apply(params, tokens: jax.Array, cfg, *, remat: bool = True,
             m = M.mlp(p_layer["mlp"], hn2, cfg.mlp_act)
         return h + m, (aux, kv)
 
-    from repro.quant.apply import SegmentedParams
+    from repro.quant.apply import segment_slices
     layers = params["layers"]
     if return_cache:
         fn = jax.checkpoint(body_cache) if remat else body_cache
-        if isinstance(layers, SegmentedParams):
-            auxs, ks, vs = None, [], []
-            for seg in layers.segments:
-                h, (seg_auxs, kv) = jax.lax.scan(fn, h, seg.params,
-                                                 unroll=unroll_flag())
-                ks.append(kv[0])
-                vs.append(kv[1])
-                auxs = seg_auxs if auxs is None else jax.tree.map(
-                    lambda a, b: jnp.concatenate([a, b]), auxs, seg_auxs)
-            kvs = (jnp.concatenate(ks, axis=0), jnp.concatenate(vs, axis=0))
-        else:
-            h, (auxs, kvs) = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
-        cache = DecodeCache(k=kvs[0], v=kvs[1], pos=jnp.int32(s))
-    elif isinstance(layers, SegmentedParams):
-        fn = jax.checkpoint(body) if remat else body
-        auxs = None
-        for seg in layers.segments:
-            h, seg_auxs = jax.lax.scan(fn, h, seg.params,
-                                       unroll=unroll_flag())
+        auxs, ks, vs = None, [], []
+        for part, _, _ in segment_slices(layers):
+            h, (seg_auxs, kv) = jax.lax.scan(fn, h, part,
+                                             unroll=unroll_flag())
+            ks.append(kv[0])
+            vs.append(kv[1])
             auxs = seg_auxs if auxs is None else jax.tree.map(
                 lambda a, b: jnp.concatenate([a, b]), auxs, seg_auxs)
-        cache = None
+        kvs = (jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0],
+               jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0])
+        cache = DecodeCache(k=kvs[0], v=kvs[1], pos=jnp.int32(s))
     else:
         fn = jax.checkpoint(body) if remat else body
-        h, auxs = jax.lax.scan(fn, h, layers, unroll=unroll_flag())
+        auxs = None
+        for part, _, _ in segment_slices(layers):
+            h, seg_auxs = jax.lax.scan(fn, h, part, unroll=unroll_flag())
+            auxs = seg_auxs if auxs is None else jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), auxs, seg_auxs)
         cache = None
 
     if last_only:
@@ -215,23 +208,16 @@ def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
                                cache_pos=cache.pos)
         return h2, (new_kv.k, new_kv.v)
 
-    from repro.quant.apply import SegmentedParams
-    layers = params["layers"]
-    if isinstance(layers, SegmentedParams):
-        ks, vs = [], []
-        for seg in layers.segments:
-            h, (nk, nv) = jax.lax.scan(
-                body, h, (seg.params, cache.k[seg.start:seg.stop],
-                          cache.v[seg.start:seg.stop]),
-                unroll=unroll_flag())
-            ks.append(nk)
-            vs.append(nv)
-        new_k = jnp.concatenate(ks, axis=0)
-        new_v = jnp.concatenate(vs, axis=0)
-    else:
-        h, (new_k, new_v) = jax.lax.scan(body, h,
-                                         (layers, cache.k, cache.v),
-                                         unroll=unroll_flag())
+    from repro.quant.apply import segment_slices
+    ks, vs = [], []
+    for part, lo, hi in segment_slices(params["layers"]):
+        h, (nk, nv) = jax.lax.scan(
+            body, h, (part, cache.k[lo:hi], cache.v[lo:hi]),
+            unroll=unroll_flag())
+        ks.append(nk)
+        vs.append(nv)
+    new_k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
+    new_v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
     h = norm(h, params["final"].get("norm"), cfg)
     head_w = unshard_fsdp(params["final"]).get("head", embed_w)
     logits = constrain(lm_head(h, head_w), ("batch", None, "model"))

@@ -1,6 +1,6 @@
 """Int8 error-feedback gradient compression for cross-replica all-reduce.
 
-Distributed-optimization trick (DESIGN.md §7.3): per-leaf group-wise int8
+Distributed-optimization trick (docs/DESIGN.md §7.3): per-leaf group-wise int8
 quantization of gradients before the data-parallel all-reduce, with a
 persistent error-feedback buffer so quantization error is carried to the
 next step instead of lost (Seide et al.-style EF-SGD, here applied to the

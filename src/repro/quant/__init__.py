@@ -2,3 +2,7 @@ from repro.quant.qtypes import QTensor, is_qtensor  # noqa: F401
 from repro.quant.quantize import (  # noqa: F401
     quantize, dequantize, quantize_int8, quantize_int4, quantize_ternary,
 )
+from repro.quant.compiler import (  # noqa: F401
+    CompiledPlan, compile_plan, family_layout, load_artifact, plan_length,
+    save_artifact,
+)

@@ -16,7 +16,7 @@ Two layouts are supported:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -104,20 +104,27 @@ class SegmentedParams:
         return total
 
 
-def plan_segments(plan: QuantPlan) -> list[tuple[str, int, int]]:
-    """Maximal runs of equal precision over block_index order."""
+def plan_segments(plan: QuantPlan,
+                  cuts: Sequence[int] = ()) -> list[tuple[str, int, int]]:
+    """Maximal runs of equal precision over block_index order.
+
+    ``cuts`` forces additional segment boundaries at the given layer indices
+    (the hybrid family cuts at shared-attention unit boundaries so every
+    segment executes inside exactly one unit — docs/DESIGN.md §8)."""
     precisions = plan.precisions()
+    cutset = set(cuts)
     runs: list[tuple[str, int, int]] = []
     start = 0
     for i in range(1, len(precisions) + 1):
-        if i == len(precisions) or precisions[i] != precisions[start]:
+        if (i == len(precisions) or precisions[i] != precisions[start]
+                or i in cutset):
             runs.append((precisions[start], start, i))
             start = i
     return runs
 
 
-def apply_plan_stacked(stacked: Any, plan: QuantPlan,
-                       group: int = 128) -> SegmentedParams:
+def apply_plan_stacked(stacked: Any, plan: QuantPlan, group: int = 128,
+                       cuts: Sequence[int] = ()) -> SegmentedParams:
     """``stacked`` leaves have a leading layer axis of length == len(plan).
 
     The plan here must cover exactly the stacked layers (embedding / final
@@ -125,12 +132,26 @@ def apply_plan_stacked(stacked: Any, plan: QuantPlan,
     """
     num_layers = len(plan.decisions)
     segs = []
-    for precision, start, stop in plan_segments(plan):
+    for precision, start, stop in plan_segments(plan, cuts):
         sliced = jax.tree.map(lambda x: x[start:stop], stacked)
         segs.append(Segment(precision=precision, start=start, stop=stop,
                             params=quantize_tree(sliced, precision, group,
                                                  min_ndim=3)))
     return SegmentedParams(segments=segs, num_layers=num_layers)
+
+
+def segment_slices(layers: Any) -> list[tuple[Any, int, int]]:
+    """Uniform iteration over a layer stack that may or may not be segmented.
+
+    Returns ``[(stacked_params, start, stop), ...]`` — one entry per segment
+    for a ``SegmentedParams``, or a single full-range entry for a plain
+    stacked tree. Model scan bodies use this to run each segment (and its
+    cache slice ``[start:stop]``) through one ``lax.scan`` without branching
+    on the parameter layout."""
+    if isinstance(layers, SegmentedParams):
+        return [(s.params, s.start, s.stop) for s in layers.segments]
+    n = jax.tree.leaves(layers)[0].shape[0]
+    return [(layers, 0, n)]
 
 
 def tree_nbytes(tree: Any) -> float:

@@ -1,0 +1,194 @@
+"""Family-universal plan compiler: QuantPlan -> CompiledPlan.
+
+Lowers an EWQ/FastEWQ ``QuantPlan`` (one precision decision per block in
+``Model.block_params`` order) onto a model family's concrete parameter
+layout, replacing the previous per-family branching in serving/quantized.py
+(which silently fell back to RAW weights for hybrid and enc-dec mixed
+plans). Every family now yields quantized segmented stacks:
+
+* dense / moe / ssm — one layer stack, segmented into maximal runs of equal
+  precision (``SegmentedParams``);
+* hybrid — the Mamba2 layer stack is additionally cut at shared-attention
+  unit boundaries when the plan is mixed, so each segment executes inside
+  exactly one unit of the unit-scan (models/hybrid.py); the shared block is
+  a per-block extra quantized at its own decision;
+* encdec — independent segmented encoder and decoder stacks.
+
+The result carries a serializable manifest (family, plan, segment layout,
+group, effective bytes), and ``save_artifact``/``load_artifact`` persist the
+quantized parameters + manifest as a bootable checkpoint so a server cold
+start skips raw-weight loading AND entropy analysis entirely
+(``launch/serve.py --plan-artifact``). Contract details: docs/DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPlan
+from repro.quant.apply import (SegmentedParams, apply_plan_stacked,
+                               quantize_tree, tree_nbytes)
+
+ARTIFACT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSpec:
+    """One scanned layer stack: param key + the plan slice covering it."""
+    key: str                        # params dict key ("layers", "enc_layers", ...)
+    lo: int                         # first plan decision index (inclusive)
+    hi: int                         # last plan decision index (exclusive)
+    cut_period: Optional[int] = None  # forced segment cuts every N layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtraSpec:
+    """One non-stacked block quantized whole (embedding, hybrid shared)."""
+    key: str
+    index: int                      # plan decision index
+
+
+def family_layout(cfg: ModelConfig) -> tuple[list[StackSpec], list[ExtraSpec]]:
+    """Map a family's ``block_params`` order onto its param-dict layout.
+
+    The decision order is [embed] + stacked layers (+ family extras), matching
+    ``Model.block_params`` / the planner's exec_index convention.
+    """
+    n = cfg.num_layers
+    if cfg.family in ("dense", "moe", "ssm"):
+        return [StackSpec("layers", 1, 1 + n)], [ExtraSpec("embed", 0)]
+    if cfg.family == "hybrid":
+        # Mixed plans must not let a segment span a shared-attention site:
+        # cut at unit boundaries so execution stays a per-unit inner scan.
+        return ([StackSpec("layers", 1, 1 + n,
+                           cut_period=cfg.shared_attn_period)],
+                [ExtraSpec("embed", 0), ExtraSpec("shared", 1 + n)])
+    if cfg.family == "encdec":
+        ne = cfg.num_encoder_layers
+        return ([StackSpec("enc_layers", 1, 1 + ne),
+                 StackSpec("dec_layers", 1 + ne, 1 + ne + n)],
+                [ExtraSpec("embed", 0)])
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def plan_length(cfg: ModelConfig) -> int:
+    """Number of block decisions a plan for ``cfg`` must carry."""
+    stacks, extras = family_layout(cfg)
+    return max([s.hi for s in stacks] + [e.index + 1 for e in extras])
+
+
+def _subplan(plan: QuantPlan, lo: int, hi: int) -> QuantPlan:
+    return dataclasses.replace(plan, decisions=plan.decisions[lo:hi])
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A QuantPlan lowered onto one model's parameters.
+
+    ``params`` is the full parameter tree ready for the model/serving stack:
+    every scanned stack is a ``SegmentedParams`` (even uniform/raw plans —
+    one segment), per-block extras are quantized trees, and untouched keys
+    ("final", ...) pass through.
+    """
+    family: str
+    config_name: str
+    group: int
+    plan: QuantPlan
+    params: Any
+
+    def stack_keys(self) -> list[str]:
+        return [k for k, v in self.params.items()
+                if isinstance(v, SegmentedParams)]
+
+    def nbytes_effective(self) -> float:
+        total = 0.0
+        for v in self.params.values():
+            total += (v.nbytes_effective() if isinstance(v, SegmentedParams)
+                      else tree_nbytes(v))
+        return total
+
+    def manifest(self) -> dict:
+        stacks = {}
+        for key in self.stack_keys():
+            seg = self.params[key]
+            stacks[key] = [{"precision": s.precision, "start": s.start,
+                            "stop": s.stop} for s in seg.segments]
+        return {
+            "version": ARTIFACT_VERSION,
+            "family": self.family,
+            "config_name": self.config_name,
+            "group": self.group,
+            "plan": json.loads(self.plan.to_json()),
+            "stacks": stacks,
+            "effective_bytes": float(self.nbytes_effective()),
+        }
+
+
+def compile_plan(model, params, plan: QuantPlan,
+                 group: int = 128) -> CompiledPlan:
+    """Lower ``plan`` onto ``params`` for any model family.
+
+    Traceable (pure jnp + static python control flow), so it runs under
+    ``jax.eval_shape`` for abstract/dry-run inputs.
+    """
+    cfg = model.cfg
+    expected = plan_length(cfg)
+    assert len(plan.decisions) == expected, \
+        (f"plan has {len(plan.decisions)} decisions; family {cfg.family!r} "
+         f"needs {expected}")
+    stacks, extras = family_layout(cfg)
+    new = dict(params)
+    for spec in stacks:
+        sub = _subplan(plan, spec.lo, spec.hi)
+        cuts: Sequence[int] = ()
+        if spec.cut_period and len(set(sub.precisions())) > 1:
+            cuts = range(spec.cut_period, spec.hi - spec.lo, spec.cut_period)
+        new[spec.key] = apply_plan_stacked(params[spec.key], sub, group,
+                                           cuts=cuts)
+    for spec in extras:
+        new[spec.key] = quantize_tree(
+            params[spec.key], plan.decisions[spec.index].precision, group)
+    return CompiledPlan(family=cfg.family, config_name=cfg.name, group=group,
+                        plan=plan, params=new)
+
+
+# ---------------------------------------------------------------------------
+# persisted artifacts (compile once, serve many)
+# ---------------------------------------------------------------------------
+
+def save_artifact(directory: str, compiled: CompiledPlan) -> str:
+    """Persist a compiled plan: quantized params checkpoint + manifest."""
+    from repro.checkpoint import ckpt
+    return ckpt.save_artifact(directory, compiled.params, compiled.manifest())
+
+
+def load_artifact(directory: str, model) -> CompiledPlan:
+    """Boot a CompiledPlan from disk without raw weights or entropy analysis.
+
+    The manifest's plan is re-lowered through ``compile_plan`` under
+    ``eval_shape`` to rebuild the exact (segmented, quantized) tree skeleton,
+    then the checkpointed leaves are restored into it.
+    """
+    from repro.checkpoint import ckpt
+    manifest = ckpt.load_artifact_manifest(directory)
+    cfg = model.cfg
+    if manifest["family"] != cfg.family or \
+            manifest["config_name"] != cfg.name:
+        raise ValueError(
+            f"artifact was compiled for {manifest['config_name']!r} "
+            f"({manifest['family']}); model is {cfg.name!r} ({cfg.family})")
+    plan = QuantPlan.from_json(json.dumps(manifest["plan"]))
+    group = manifest["group"]
+    skeleton = jax.eval_shape(
+        lambda p: compile_plan(model, p, plan, group).params,
+        model.abstract_params())
+    params = ckpt.restore_artifact(directory, skeleton)
+    params = jax.tree.map(jnp.asarray, params)
+    return CompiledPlan(family=cfg.family, config_name=cfg.name, group=group,
+                        plan=plan, params=params)

@@ -21,10 +21,17 @@ Engine structure:
     one scheduler-free drain of the same chunked loop.
 
 Prefill paths: transformer families use the fused apply(return_cache=True)
-pass (works for segmented/quantized stacks too); SSM/hybrid/enc-dec prefill
-by scanning decode steps over the prompt (their decode matches
-teacher-forced forward exactly — tests/test_models_parity). The jitted
-prefill is built once per engine and cached across calls.
+pass (works for segmented/quantized stacks too); SSM/hybrid prefill by
+scanning decode steps over the prompt (their decode matches teacher-forced
+forward exactly — tests/test_models_parity); enc-dec prefill additionally
+encodes the request's frames and precomputes per-decoder-layer cross K/V
+first (zero frames when a request carries none). The jitted prefill is
+built once per engine and cached across calls.
+
+Quantized weights come either from an in-memory plan (compiled at engine
+construction via quant/compiler.py) or from a persisted artifact
+(``ServeEngine.from_artifact`` — cold start with no raw weights and no
+entropy analysis; docs/DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -77,16 +84,29 @@ class ServeEngine:
             params = apply_plan_to_params(model, params, plan, group)
         self.params = params
         self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(self._prefill_impl)      # built once, cached
+        # built once, cached (enc-dec prefill also takes encoder frames)
+        self._prefill = jax.jit(self._prefill_encdec
+                                if self.cfg.family == "encdec"
+                                else self._prefill_impl)
         self._insert = jax.jit(self._insert_impl)
         self._release = jax.jit(B.release_slot)
         self._chunk_fns: dict = {}
 
+    @classmethod
+    def from_artifact(cls, model: Model, directory: str, *, max_seq: int,
+                      **kw) -> "ServeEngine":
+        """Boot from a persisted compiled-plan artifact: quantized weights
+        are restored directly — no raw weight loading, no entropy analysis,
+        no re-quantization (quant/compiler.py)."""
+        from repro.quant.compiler import load_artifact
+        compiled = load_artifact(directory, model)
+        engine = cls(model, compiled.params, max_seq=max_seq, plan=None, **kw)
+        engine.plan = compiled.plan
+        return engine
+
     # -- prefill -------------------------------------------------------------
-    def _prefill_scan(self, prompts: jax.Array):
+    def _prefill_scan(self, prompts: jax.Array, cache):
         """Universal prefill: scan decode steps over prompt tokens."""
-        b, s = prompts.shape
-        cache = self.model.init_cache(b, self.max_seq)
 
         def body(cache, tok):
             logits, cache = self.model.decode_step(self.params, cache,
@@ -111,10 +131,33 @@ class ServeEngine:
     def _prefill_impl(self, prompts: jax.Array):
         if self.cfg.family in ("dense", "moe"):
             return self._prefill_fused(prompts)
-        return self._prefill_scan(prompts)
+        return self._prefill_scan(prompts,
+                                  self.model.init_cache(prompts.shape[0],
+                                                        self.max_seq))
 
-    def prefill(self, prompts: jax.Array):
+    def _prefill_encdec(self, prompts: jax.Array, frames: jax.Array):
+        """Enc-dec prefill: encode frames, precompute per-decoder-layer
+        cross K/V, then scan decode steps over the prompt."""
+        from repro.models import encdec
+        cache = self.model.init_cache(prompts.shape[0], self.max_seq)
+        enc_out = encdec.encode(self.params, frames, self.cfg, remat=False)
+        ck, cv = encdec.precompute_cross_kv(self.params, enc_out, self.cfg)
+        cache = cache._replace(cross_k=ck, cross_v=cv)
+        return self._prefill_scan(prompts, cache)
+
+    def _default_frames(self, batch: int) -> jax.Array:
+        from repro.models.common import dtype_of
+        return jnp.zeros((batch, self.cfg.encoder_seq, self.cfg.d_model),
+                         dtype_of(self.cfg))
+
+    def prefill(self, prompts: jax.Array, frames=None):
         assert prompts.shape[1] <= self.max_seq
+        if self.cfg.family == "encdec":
+            if frames is None:
+                frames = self._default_frames(prompts.shape[0])
+            assert frames.shape[1] == self.cfg.encoder_seq
+            return self._prefill(prompts, frames)
+        assert frames is None, "frames only apply to enc-dec models"
         return self._prefill(prompts)
 
     # -- fused chunked decode loop -------------------------------------------
@@ -177,7 +220,8 @@ class ServeEngine:
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None,
-                 chunk: Optional[int] = None) -> GenerateResult:
+                 chunk: Optional[int] = None,
+                 frames: Optional[jax.Array] = None) -> GenerateResult:
         if max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got "
                              f"{max_new_tokens}")
@@ -186,7 +230,7 @@ class ServeEngine:
         b, p = prompts.shape
         total = p + max_new_tokens
         assert total <= self.max_seq, (total, self.max_seq)
-        cache, last_logits = self.prefill(prompts)
+        cache, last_logits = self.prefill(prompts, frames)
         cache = cache._replace(pos=jnp.full((b,), p, jnp.int32))
         tokens = jnp.zeros((b, self.max_seq), jnp.int32)
         tokens = jax.lax.dynamic_update_slice(
@@ -214,7 +258,9 @@ class ServeEngine:
 
     def generate_stepwise(self, prompts: jax.Array, max_new_tokens: int,
                           temperature: float = 0.0,
-                          key: Optional[jax.Array] = None) -> GenerateResult:
+                          key: Optional[jax.Array] = None,
+                          frames: Optional[jax.Array] = None
+                          ) -> GenerateResult:
         """Legacy per-token Python dispatch loop.
 
         Kept as the benchmark baseline (benchmarks/serve_throughput.py):
@@ -222,7 +268,7 @@ class ServeEngine:
         sampling-op dispatch plus a separate jitted decode dispatch.
         """
         b = prompts.shape[0]
-        cache, last_logits = self.prefill(prompts)
+        cache, last_logits = self.prefill(prompts, frames)
         toks = [prompts]
         logprobs = []
         logits = last_logits
@@ -277,7 +323,9 @@ class ServeEngine:
                 if req is None:
                     break
                 prompt = jnp.asarray(req.prompt, jnp.int32)
-                cache1, logits1 = self.prefill(prompt[None])
+                frames = (jnp.asarray(req.frames)[None]
+                          if req.frames is not None else None)
+                cache1, logits1 = self.prefill(prompt[None], frames)
                 state = self._insert(state, jnp.int32(slot), prompt, cache1,
                                      logits1, jnp.int32(req.max_new_tokens))
                 # a refill = joining a batch that is already mid-decode

@@ -8,20 +8,14 @@ which is weight-bytes-bound — reads int8/int4 payloads instead of bf16.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.policy import BlockDecision, QuantPlan
 from repro.models.model import Model
-from repro.quant.apply import apply_plan_stacked, quantize_tree
-
-
-def _subplan(plan: QuantPlan, lo: int, hi: int) -> QuantPlan:
-    return dataclasses.replace(plan, decisions=plan.decisions[lo:hi])
+from repro.quant.compiler import compile_plan
 
 
 def fastewq_metadata_plan(cfg: ModelConfig, variant: str = "8bit-mixed",
@@ -78,46 +72,25 @@ def plan_for_variant(model: Model, params, variant: str,
 def apply_plan_to_params(model: Model, params, plan: QuantPlan,
                          group: int = 128):
     """Quantize a model's params per an EWQ plan (block order matches
-    Model.block_params: [embed] + layers [+ shared / enc+dec])."""
-    cfg = model.cfg
-    new = dict(params)
-    new["embed"] = quantize_tree(params["embed"],
-                                 plan.decisions[0].precision, group)
-    if cfg.family in ("dense", "moe", "ssm"):
-        lp = _subplan(plan, 1, 1 + cfg.num_layers)
-        new["layers"] = apply_plan_stacked(params["layers"], lp, group)
-    elif cfg.family == "hybrid":
-        lp = _subplan(plan, 1, 1 + cfg.num_layers)
-        seg = apply_plan_stacked(params["layers"], lp, group)
-        # hybrid exec interleaves shared attention inside the unit scan;
-        # mixed per-layer plans require a uniform segment per unit stack —
-        # enforce single-segment (uniform) for now (DESIGN.md §7).
-        if len(seg.segments) == 1:
-            new["layers"] = seg.segments[0].params
-        else:
-            new["layers"] = params["layers"]  # fall back to raw stack
-        new["shared"] = quantize_tree(params["shared"],
-                                      plan.decisions[-1].precision, group)
-    elif cfg.family == "encdec":
-        ne = cfg.num_encoder_layers
-        ep = _subplan(plan, 1, 1 + ne)
-        dp = _subplan(plan, 1 + ne, 1 + ne + cfg.num_layers)
-        enc = apply_plan_stacked(params["enc_layers"], ep, group)
-        dec = apply_plan_stacked(params["dec_layers"], dp, group)
-        new["enc_layers"] = (enc.segments[0].params
-                             if len(enc.segments) == 1 else
-                             params["enc_layers"])
-        new["dec_layers"] = (dec.segments[0].params
-                             if len(dec.segments) == 1 else
-                             params["dec_layers"])
-    return new
+    Model.block_params: [embed] + layers [+ shared / enc+dec]).
+
+    Thin wrapper over the family-universal plan compiler
+    (quant/compiler.py, docs/DESIGN.md §8): every family — including hybrid
+    and enc-dec under mixed per-layer plans — yields segmented quantized
+    stacks; there is no raw fallback."""
+    return compile_plan(model, params, plan, group).params
 
 
 def explicit_plan(cfg: ModelConfig, layer_precisions: list[str],
-                  variant: str = "8bit-mixed") -> QuantPlan:
+                  variant: str = "8bit-mixed",
+                  shared_precision: str = "raw") -> QuantPlan:
     """Plan with explicit per-layer precisions (embed stays raw) — used by
-    the dry-run's two-stack (raw/quant) affine cost extrapolation."""
-    assert len(layer_precisions) == cfg.num_layers
+    the dry-run's two-stack (raw/quant) affine cost extrapolation and the
+    compiler's parity tests. For enc-dec, ``layer_precisions`` covers the
+    encoder stack followed by the decoder stack; for hybrid, the trailing
+    shared block takes ``shared_precision``."""
+    n_layers = cfg.num_layers + (cfg.num_encoder_layers or 0)
+    assert len(layer_precisions) == n_layers
     ds = [BlockDecision(block_index=0, exec_index=1, entropy=float("nan"),
                         num_parameters=0, precision="raw")]
     for i, p in enumerate(layer_precisions):
@@ -127,7 +100,7 @@ def explicit_plan(cfg: ModelConfig, layer_precisions: list[str],
     if cfg.family == "hybrid":
         ds.append(BlockDecision(block_index=len(ds), exec_index=len(ds) + 1,
                                 entropy=float("nan"), num_parameters=0,
-                                precision="raw"))
+                                precision=shared_precision))
     return QuantPlan(decisions=ds, mu=float("nan"), sigma=float("nan"),
                      threshold=float("nan"), x_factor=1.0)
 

@@ -24,6 +24,7 @@ class Request:
     prompt: np.ndarray            # (P,) int32
     max_new_tokens: int
     arrival_step: int = 0         # decode-step clock at which it may be admitted
+    frames: Optional[np.ndarray] = None  # (S_enc, D) encoder frames (enc-dec)
 
 
 @dataclasses.dataclass
