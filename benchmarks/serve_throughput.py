@@ -20,6 +20,12 @@ Two sweeps over briefly-trained smoke-scale models:
      * artifact    — ``ServeEngine.from_artifact`` (quantized checkpoint +
        plan manifest) + engine warmup.
 
+3. **Mesh sweep** (docs/DESIGN.md §9) — when more than one device is
+   visible (CI forces 8 virtual CPU devices via
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``): fused decode
+   tok/s and **per-device weight bytes** for the single-device engine vs
+   1xN / 2x(N/2) (data, model) serving meshes, under the mixed plan.
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -177,16 +183,61 @@ def _family_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _mesh_rows(max_new: int, reps: int, steps: int | None,
+               summary: dict) -> list[tuple]:
+    """Sharded serving: tok/s + per-device weight bytes per mesh layout."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return [("serve/mesh/skipped", 0.0,
+                 f"1 device visible (set XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count=8 for mesh rows)")]
+    from repro.launch.mesh import make_mesh
+    shapes = [(1, n_dev)]
+    if n_dev % 2 == 0 and n_dev > 2:
+        shapes.append((2, n_dev // 2))
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    plan = plan_for_variant(model, params, FAMILY_VARIANT)
+    # quantize once; every engine below serves the same compiled weights
+    qparams = model.compile_plan(params, plan).params
+    prompts = _prompts(cfg, BATCH)
+    max_seq = PROMPT_LEN + max_new + 1
+    tokens = BATCH * max_new
+    rows = []
+
+    def bench(engine, name, baseline_bytes=None):
+        dt = _time(lambda: engine.generate(
+            prompts, max_new, chunk=min(CHUNK, max_new)).tokens, reps)
+        per_dev = engine.weight_bytes_per_device()
+        note = f"{tokens/dt:.1f} tok/s {per_dev/2**20:.2f} MiB/dev"
+        if baseline_bytes:
+            note += f" ({baseline_bytes/per_dev:.1f}x less than 1-dev)"
+        rows.append((f"serve/mesh/{name}/fused", dt / tokens * 1e6, note))
+        summary["mesh"][name] = {
+            "tok_s_fused": tokens / dt,
+            "weight_bytes_per_device": per_dev,
+            "devices": 1 if baseline_bytes is None else n_dev}
+        return per_dev
+
+    single = ServeEngine(model, qparams, max_seq=max_seq)
+    base = bench(single, "1dev")
+    for shape in shapes:
+        mesh = make_mesh(shape, ("data", "model"))
+        engine = ServeEngine(model, qparams, max_seq=max_seq, mesh=mesh)
+        bench(engine, f"{shape[0]}x{shape[1]}", baseline_bytes=base)
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     reps = 1 if smoke else 3
     steps = SMOKE_TRAIN_STEPS if smoke else None
-    summary: dict = {"variants": {}, "families": {}}
+    summary: dict = {"variants": {}, "families": {}, "mesh": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
     rows = _variant_rows(max_new, reps, summary, steps, variants)
     rows += _family_rows(max_new, reps, steps, summary)
+    rows += _mesh_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

@@ -156,6 +156,12 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
         meta = manifest["leaves"].get(key)
         if meta is None:
             raise KeyError(f"checkpoint missing leaf {key}")
+        want_kind = "qtensor" if isinstance(like, QTensor) else "array"
+        if meta["kind"] != want_kind:
+            raise ValueError(
+                f"{key}: checkpoint holds a {meta['kind']}, target expects "
+                f"a {want_kind} — quantization group/plan mismatch between "
+                f"the artifact manifest and the target model?")
         if meta["kind"] == "qtensor":
             leaf = QTensor(data=data[f"{key}.__qdata"],
                            scale=_from_storable(
@@ -168,6 +174,19 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
                 raise ValueError(f"{key}: checkpoint qtensor data shape "
                                  f"{leaf.data.shape} != expected "
                                  f"{tuple(like.data.shape)}")
+            if mesh is not None and spec_flat is not None and key in spec_flat:
+                # spec leaf is a QTensor whose data/scale children are
+                # PartitionSpecs (param_specs descends into QTensor nodes):
+                # payload and per-group scales land sharded straight from
+                # the host buffers — no replicated materialization.
+                spec = spec_flat[key]
+                leaf = QTensor(
+                    data=jax.device_put(
+                        leaf.data, NamedSharding(mesh, spec.data)),
+                    scale=jax.device_put(
+                        leaf.scale, NamedSharding(mesh, spec.scale)),
+                    precision=leaf.precision, shape=leaf.shape,
+                    group=leaf.group)
         else:
             arr = _from_storable(data[key], meta["dtype"])
             want = getattr(like, "shape", None)
@@ -218,7 +237,13 @@ def load_artifact_manifest(directory: str) -> dict:
         return json.load(f)
 
 
-def restore_artifact(directory: str, tree_like: Any) -> Any:
-    """Restore the compiled tree into a (segmented/quantized) skeleton."""
-    tree, _ = restore(directory, tree_like)
+def restore_artifact(directory: str, tree_like: Any, *, mesh=None,
+                     specs=None) -> Any:
+    """Restore the compiled tree into a (segmented/quantized) skeleton.
+
+    With ``mesh`` + ``specs`` (a PartitionSpec tree matching ``tree_like``,
+    e.g. ``param_specs(skeleton, mesh, serving=True)``), every leaf —
+    including QTensor payload/scale pairs — is device_put to its
+    NamedSharding as it is read, so a cold boot lands sharded."""
+    tree, _ = restore(directory, tree_like, mesh=mesh, specs=specs)
     return tree

@@ -31,5 +31,26 @@ def make_mesh(shape, axes):
                          **_axis_type_kwargs(len(axes)))
 
 
+def parse_mesh(axes: str, shape: str | None = None):
+    """CLI mesh spec -> Mesh (launch/serve.py ``--mesh``/``--mesh-shape``).
+
+    ``axes`` is comma-separated axis names ("data,model"); ``shape`` is
+    comma-separated sizes ("2,4"). When ``shape`` is omitted, all available
+    devices go on the LAST axis (so ``--mesh data,model`` on 8 devices is a
+    1x8 pure-TP serving mesh).
+    """
+    axis_names = tuple(a.strip() for a in axes.split(",") if a.strip())
+    if not axis_names:
+        raise ValueError(f"empty mesh axes spec {axes!r}")
+    if shape:
+        sizes = tuple(int(s) for s in shape.split(","))
+        if len(sizes) != len(axis_names):
+            raise ValueError(f"--mesh-shape {shape!r} has {len(sizes)} "
+                             f"entries for {len(axis_names)} axes {axis_names}")
+    else:
+        sizes = (1,) * (len(axis_names) - 1) + (len(jax.devices()),)
+    return make_mesh(sizes, axis_names)
+
+
 def data_axis_names(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -61,9 +61,24 @@ def main():
                     help="decode steps per jitted chunk")
     ap.add_argument("--num-slots", type=int, default=4,
                     help="concurrent decode slots")
+    # mesh-parallel serving (docs/DESIGN.md §9)
+    ap.add_argument("--mesh", default=None,
+                    help="comma-separated mesh axis names (e.g. data,model): "
+                         "shard weights/caches and serve mesh-parallel")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="comma-separated per-axis device counts (e.g. 1,8); "
+                         "default puts every device on the last axis")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh
+        mesh = parse_mesh(args.mesh, args.mesh_shape)
+        print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+    elif args.mesh_shape:
+        raise SystemExit("--mesh-shape requires --mesh")
 
     requests = None
     max_seq = args.prompt_len + args.max_new
@@ -82,10 +97,11 @@ def main():
         model = build(cfg)
         t0 = time.perf_counter()
         engine = ServeEngine.from_artifact(model, args.plan_artifact,
-                                           max_seq=max_seq)
+                                           max_seq=max_seq, mesh=mesh)
         plan = engine.plan
         print(f"booted from artifact {args.plan_artifact} in "
-              f"{time.perf_counter() - t0:.2f}s")
+              f"{time.perf_counter() - t0:.2f}s"
+              + (" (weights landed sharded)" if mesh is not None else ""))
     else:
         run = RunConfig(steps=args.train_steps, learning_rate=1e-3,
                         warmup_steps=3, remat=False)
@@ -94,19 +110,24 @@ def main():
         plan = plan_for_variant(model, params, args.variant, fast=args.fast)
         if plan is not None:
             compiled = model.compile_plan(params, plan)
-            engine = ServeEngine(model, compiled.params, max_seq=max_seq)
+            engine = ServeEngine(model, compiled.params, max_seq=max_seq,
+                                 mesh=mesh)
             engine.plan = plan
             if args.plan_artifact:
                 from repro.quant.compiler import save_artifact
-                path = save_artifact(args.plan_artifact, compiled)
+                path = save_artifact(args.plan_artifact, compiled, mesh=mesh)
                 print(f"saved compiled plan artifact to {path}")
         else:
-            engine = ServeEngine(model, params, max_seq=max_seq)
+            engine = ServeEngine(model, params, max_seq=max_seq, mesh=mesh)
 
     raw_bits = 32.0 if cfg.dtype == "float32" else 16.0
     raw_bytes = cfg.param_count() * raw_bits / 8.0
     print(f"weights: {engine.weight_bytes()/2**20:.1f} MiB effective "
           f"(raw {raw_bytes/2**20:.1f} MiB)")
+    if mesh is not None:
+        print(f"per-device weight bytes: "
+              f"{engine.weight_bytes_per_device()/2**20:.1f} MiB "
+              f"on {mesh.size} devices")
     if plan:
         print(f"plan: {plan.counts()}")
 

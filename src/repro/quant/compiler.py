@@ -162,33 +162,91 @@ def compile_plan(model, params, plan: QuantPlan,
 # persisted artifacts (compile once, serve many)
 # ---------------------------------------------------------------------------
 
-def save_artifact(directory: str, compiled: CompiledPlan) -> str:
-    """Persist a compiled plan: quantized params checkpoint + manifest."""
+def validate_manifest(manifest: dict, cfg: ModelConfig) -> None:
+    """Check an artifact manifest against a target model config up front.
+
+    Raises a ``ValueError`` naming the mismatch (family, config, plan
+    length, stack layout, group size) instead of letting the restore fail
+    deep inside per-leaf shape checks.
+    """
+    def bail(msg):
+        raise ValueError(f"artifact/model mismatch: {msg}")
+
+    if manifest.get("version") != ARTIFACT_VERSION:
+        bail(f"manifest version {manifest.get('version')!r}, this build "
+             f"reads version {ARTIFACT_VERSION}")
+    if manifest["family"] != cfg.family or manifest["config_name"] != cfg.name:
+        bail(f"artifact was compiled for {manifest['config_name']!r} "
+             f"({manifest['family']}); model is {cfg.name!r} ({cfg.family})")
+    expected = plan_length(cfg)
+    got = len(manifest["plan"]["decisions"])
+    if got != expected:
+        bail(f"plan carries {got} block decisions; family {cfg.family!r} "
+             f"config {cfg.name!r} needs {expected} (layer counts differ?)")
+    stacks, _ = family_layout(cfg)
+    want_stacks = {s.key: s.hi - s.lo for s in stacks}
+    got_stacks = manifest.get("stacks", {})
+    if set(got_stacks) != set(want_stacks):
+        bail(f"stack keys {sorted(got_stacks)} != expected "
+             f"{sorted(want_stacks)}")
+    for key, segs in got_stacks.items():
+        covered = sum(s["stop"] - s["start"] for s in segs)
+        if covered != want_stacks[key]:
+            bail(f"stack {key!r} segments cover {covered} layers; config "
+                 f"has {want_stacks[key]}")
+    group = manifest["group"]
+    if not isinstance(group, int) or group < 1:
+        bail(f"group size {group!r} is not a positive integer")
+    # A group that quantizes different leaves than the save-time compile
+    # (e.g. a tampered manifest) surfaces as a leaf-KIND mismatch between
+    # the rebuilt skeleton and the checkpoint — ckpt.restore names it.
+
+
+def save_artifact(directory: str, compiled: CompiledPlan,
+                  mesh=None) -> str:
+    """Persist a compiled plan: quantized params checkpoint + manifest.
+
+    Arrays are stored logically (shards are gathered to host buffers), so
+    the artifact is mesh-portable: it can be restored onto any mesh — or
+    none. ``mesh`` only stamps the save-time layout into the manifest for
+    provenance."""
     from repro.checkpoint import ckpt
-    return ckpt.save_artifact(directory, compiled.params, compiled.manifest())
+    manifest = compiled.manifest()
+    if mesh is not None:
+        manifest["saved_mesh"] = {
+            "axis_names": list(mesh.axis_names),
+            "shape": [int(mesh.shape[a]) for a in mesh.axis_names]}
+    return ckpt.save_artifact(directory, compiled.params, manifest)
 
 
-def load_artifact(directory: str, model) -> CompiledPlan:
+def load_artifact(directory: str, model, *, mesh=None) -> CompiledPlan:
     """Boot a CompiledPlan from disk without raw weights or entropy analysis.
 
     The manifest's plan is re-lowered through ``compile_plan`` under
     ``eval_shape`` to rebuild the exact (segmented, quantized) tree skeleton,
-    then the checkpointed leaves are restored into it.
+    then the checkpointed leaves are restored into it. With ``mesh``, every
+    leaf is device_put to its TP-only serving NamedSharding
+    (``param_specs(serving=True)``) straight from the checkpoint file —
+    weights land sharded, never materialized replicated.
     """
     from repro.checkpoint import ckpt
     manifest = ckpt.load_artifact_manifest(directory)
     cfg = model.cfg
-    if manifest["family"] != cfg.family or \
-            manifest["config_name"] != cfg.name:
-        raise ValueError(
-            f"artifact was compiled for {manifest['config_name']!r} "
-            f"({manifest['family']}); model is {cfg.name!r} ({cfg.family})")
+    validate_manifest(manifest, cfg)
     plan = QuantPlan.from_json(json.dumps(manifest["plan"]))
     group = manifest["group"]
     skeleton = jax.eval_shape(
         lambda p: compile_plan(model, p, plan, group).params,
         model.abstract_params())
-    params = ckpt.restore_artifact(directory, skeleton)
-    params = jax.tree.map(jnp.asarray, params)
+    if mesh is not None:
+        from repro.sharding.specs import param_specs
+        specs = param_specs(skeleton, mesh, serving=True)
+        # specs mirrors the skeleton leaf-for-leaf, so restore device_puts
+        # every leaf to its NamedSharding — already committed jax.Arrays.
+        params = ckpt.restore_artifact(directory, skeleton, mesh=mesh,
+                                       specs=specs)
+    else:
+        params = ckpt.restore_artifact(directory, skeleton)
+        params = jax.tree.map(jnp.asarray, params)
     return CompiledPlan(family=cfg.family, config_name=cfg.name, group=group,
                         plan=plan, params=params)

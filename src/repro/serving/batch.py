@@ -89,3 +89,38 @@ def release_slot(state: DecodeState, slot: jax.Array) -> DecodeState:
     """Evict a finished request: the slot becomes admissible again."""
     return state._replace(done=state.done.at[slot].set(True),
                           active=state.active.at[slot].set(False))
+
+
+# ---------------------------------------------------------------------------
+# mesh placement (docs/DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def state_specs(state: DecodeState, mesh) -> DecodeState:
+    """PartitionSpec tree for a DecodeState on ``mesh``.
+
+    The family cache follows ``sharding.specs.cache_specs`` (KV heads or the
+    GQA sequence-shard fallback over "model", slot/batch dim over the data
+    axes); the per-slot host-visible bookkeeping buffers (tokens, logprobs,
+    lengths, masks, PRNG key) are tiny and stay replicated so the scheduler
+    can read any slot without a cross-device gather.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.specs import cache_specs
+    rep = jax.tree.map(lambda _: P(), state._replace(cache=None))
+    return rep._replace(cache=cache_specs(state.cache, mesh))
+
+
+def shard_state(state: DecodeState, mesh) -> DecodeState:
+    """device_put a DecodeState to its mesh layout (engine entry point)."""
+    from repro.sharding.specs import to_shardings
+    return jax.device_put(state, to_shardings(state_specs(state, mesh), mesh))
+
+
+def constrain_state(state: DecodeState, mesh) -> DecodeState:
+    """with_sharding_constraint pinning a traced DecodeState to the same
+    layout ``shard_state`` commits — applied at the end of the jitted chunk
+    / insert bodies so the decode loop's carry layout reaches a fixed point
+    (one compile, no resharding between chunks)."""
+    from repro.sharding.specs import to_shardings
+    sh = to_shardings(state_specs(state, mesh), mesh)
+    return jax.tree.map(jax.lax.with_sharding_constraint, state, sh)

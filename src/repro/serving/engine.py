@@ -32,10 +32,20 @@ Quantized weights come either from an in-memory plan (compiled at engine
 construction via quant/compiler.py) or from a persisted artifact
 (``ServeEngine.from_artifact`` — cold start with no raw weights and no
 entropy analysis; docs/DESIGN.md §8).
+
+Mesh-parallel serving (docs/DESIGN.md §9): pass ``mesh=`` and the engine
+places the (quantized) weights with the TP-only serving specs
+(``param_specs(serving=True)`` — QTensor payload/scale leaves included),
+places the slotted decode caches with ``cache_specs`` (KV-head sharding or
+the GQA sequence-shard fallback), and traces every jitted path (fused
+prefill, chunked decode scan, slot insert/evict) under
+``activation_sharding(mesh)`` so the model-code constraints resolve. A
+mesh-less engine is byte-for-byte the old single-device path.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional, Sequence
 
@@ -73,34 +83,73 @@ class ServeStats:
 class ServeEngine:
     def __init__(self, model: Model, params, *, max_seq: int,
                  plan: Optional[QuantPlan] = None, group: int = 128,
-                 eos_id: Optional[int] = None, pad_id: int = 0):
+                 eos_id: Optional[int] = None, pad_id: int = 0,
+                 mesh=None):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
         self.plan = plan
         self.eos_id = eos_id
         self.pad_id = pad_id
+        self.mesh = mesh
         if plan is not None:
             params = apply_plan_to_params(model, params, plan, group)
+        if mesh is not None:
+            from repro.sharding.specs import serving_param_shardings
+            # TP-only placement (a no-op resharding when the params already
+            # arrived sharded, e.g. from_artifact(mesh=...)).
+            params = jax.device_put(params,
+                                    serving_param_shardings(params, mesh))
         self.params = params
-        self._decode = jax.jit(model.decode_step)
+        self._decode = self._traced(jax.jit(model.decode_step))
         # built once, cached (enc-dec prefill also takes encoder frames)
-        self._prefill = jax.jit(self._prefill_encdec
-                                if self.cfg.family == "encdec"
-                                else self._prefill_impl)
-        self._insert = jax.jit(self._insert_impl)
-        self._release = jax.jit(B.release_slot)
+        self._prefill = self._traced(jax.jit(self._prefill_encdec
+                                             if self.cfg.family == "encdec"
+                                             else self._prefill_impl))
+        self._insert = self._traced(jax.jit(self._insert_impl))
+        self._release = self._traced(jax.jit(self._release_impl))
         self._chunk_fns: dict = {}
+
+    # -- mesh plumbing -------------------------------------------------------
+    def _ctx(self):
+        """Mesh + activation-sharding context every jitted path traces (and
+        runs) under; a null context without a mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.sharding.ctx import activation_sharding
+        stack = contextlib.ExitStack()
+        stack.enter_context(self.mesh)
+        stack.enter_context(activation_sharding(self.mesh))
+        return stack
+
+    def _traced(self, fn):
+        """Wrap a jitted callable so tracing happens inside ``_ctx()``."""
+        if self.mesh is None:
+            return fn
+
+        def wrapped(*args, **kw):
+            with self._ctx():
+                return fn(*args, **kw)
+
+        return wrapped
+
+    def _shard_state(self, state: B.DecodeState) -> B.DecodeState:
+        return B.shard_state(state, self.mesh) if self.mesh is not None \
+            else state
 
     @classmethod
     def from_artifact(cls, model: Model, directory: str, *, max_seq: int,
-                      **kw) -> "ServeEngine":
+                      mesh=None, **kw) -> "ServeEngine":
         """Boot from a persisted compiled-plan artifact: quantized weights
         are restored directly — no raw weight loading, no entropy analysis,
-        no re-quantization (quant/compiler.py)."""
+        no re-quantization (quant/compiler.py). With ``mesh``, every leaf is
+        device_put to its serving NamedSharding straight from the checkpoint
+        file — a cold boot lands sharded without ever materializing a
+        replicated copy."""
         from repro.quant.compiler import load_artifact
-        compiled = load_artifact(directory, model)
-        engine = cls(model, compiled.params, max_seq=max_seq, plan=None, **kw)
+        compiled = load_artifact(directory, model, mesh=mesh)
+        engine = cls(model, compiled.params, max_seq=max_seq, plan=None,
+                     mesh=mesh, **kw)
         engine.plan = compiled.plan
         return engine
 
@@ -198,12 +247,17 @@ class ServeEngine:
                 tokens=tokens, lengths=lengths, max_len=st.max_len,
                 done=done, active=st.active, logprobs=logprobs, key=key), None
 
+        mesh = self.mesh
+
         def run(params, state):
             state, _ = jax.lax.scan(
                 lambda st, x: step(params, st, x), state, None, length=steps)
+            if mesh is not None:
+                # pin the carry layout so chunk N+1 reuses chunk N's compile
+                state = B.constrain_state(state, mesh)
             return state
 
-        return jax.jit(run)
+        return self._traced(jax.jit(run))
 
     def _chunk_fn(self, steps: int, temperature: float):
         key = (steps, float(temperature))
@@ -213,8 +267,17 @@ class ServeEngine:
 
     def _insert_impl(self, state, slot, prompt, prompt_cache, last_logits,
                      max_new):
-        return B.insert_request(self.model, state, slot, prompt,
-                                prompt_cache, last_logits, max_new)
+        state = B.insert_request(self.model, state, slot, prompt,
+                                 prompt_cache, last_logits, max_new)
+        if self.mesh is not None:
+            state = B.constrain_state(state, self.mesh)
+        return state
+
+    def _release_impl(self, state, slot):
+        state = B.release_slot(state, slot)
+        if self.mesh is not None:
+            state = B.constrain_state(state, self.mesh)
+        return state
 
     # -- generation (compat wrapper: single batch == one drain) ---------------
     def generate(self, prompts: jax.Array, max_new_tokens: int,
@@ -244,6 +307,7 @@ class ServeEngine:
             active=jnp.ones((b,), bool),
             logprobs=jnp.zeros((b, self.max_seq), jnp.float32),
             key=key if key is not None else jax.random.PRNGKey(0))
+        state = self._shard_state(state)
         chunk = max_new_tokens if chunk is None else min(chunk, max_new_tokens)
         fn = self._chunk_fn(chunk, temperature)
         steps = 0
@@ -309,9 +373,9 @@ class ServeEngine:
         for r in requests:
             assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
             sched.submit(r)
-        state = B.init_state(
+        state = self._shard_state(B.init_state(
             self.model, num_slots, self.max_seq,
-            key if key is not None else jax.random.PRNGKey(0))
+            key if key is not None else jax.random.PRNGKey(0)))
         fn = self._chunk_fn(chunk, temperature)
         clock = 0
         occupancy: list[float] = []
@@ -375,3 +439,21 @@ class ServeEngine:
             else:
                 total += tree_nbytes(v)
         return total
+
+    def weight_bytes_per_device(self) -> float:
+        """Max physical weight bytes resident on any single device.
+
+        Counts each leaf's addressable shards per device (a replicated leaf
+        contributes its full size to every device; a TP-sharded one only its
+        slice), so on a 1xN TP mesh this is what actually bounds HBM —
+        the deployment-memory number the mesh benchmark rows report."""
+        per_device: dict = {}
+        for leaf in jax.tree.leaves(self.params):
+            if isinstance(leaf, jax.Array):
+                for s in leaf.addressable_shards:
+                    dev = s.device.id
+                    per_device[dev] = per_device.get(dev, 0.0) + s.data.nbytes
+            else:
+                arr = np.asarray(leaf)
+                per_device[-1] = per_device.get(-1, 0.0) + arr.nbytes
+        return max(per_device.values()) if per_device else 0.0

@@ -49,16 +49,24 @@ def _rules():
 
 @contextlib.contextmanager
 def activation_sharding(mesh):
+    """Install the logical-dim -> mesh-axis mapping. Tolerates meshes
+    missing an axis (pure-DP serving mesh has no "model"; pure-TP no
+    "data"): the absent logical dim maps to no axis (size 1 — always
+    divides, always replicated)."""
     fsdp = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    fsdp_t = fsdp if isinstance(fsdp, tuple) else (fsdp,)
+    if not all(a in mesh.axis_names for a in fsdp_t):
+        fsdp, fsdp_t = None, ()
+    model_ax = "model" if "model" in mesh.axis_names else None
+    model_sz = mesh.shape["model"] if model_ax else 1
     sizes = {
-        "batch": int(np.prod([mesh.shape[a] for a in
-                              (fsdp if isinstance(fsdp, tuple) else (fsdp,))])),
-        "model": mesh.shape["model"],
-        "expert": mesh.shape["model"],
-        "seq": mesh.shape["model"],
+        "batch": int(np.prod([mesh.shape[a] for a in fsdp_t] or [1])),
+        "model": model_sz,
+        "expert": model_sz,
+        "seq": model_sz,
     }
-    axes = {"batch": fsdp, "model": "model", "expert": "model",
-            "seq": "model"}
+    axes = {"batch": fsdp, "model": model_ax, "expert": model_ax,
+            "seq": model_ax}
     old = _rules()
     _STATE.rules = {"axes": axes, "sizes": sizes, "mesh": mesh}
     try:

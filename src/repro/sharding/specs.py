@@ -38,9 +38,16 @@ EMBED = ("tok", "head")
 
 
 def _axis_size(mesh: Mesh, name) -> int:
-    if isinstance(name, tuple):
-        return int(np.prod([mesh.shape[n] for n in name]))
-    return mesh.shape[name]
+    """Product of the named axes' sizes; absent axes contribute 1 (a
+    pure-DP serving mesh has no "model" axis, a pure-TP mesh no "data")."""
+    names = name if isinstance(name, tuple) else (name,)
+    return int(np.prod([mesh.shape[n] for n in names
+                        if n in mesh.axis_names] or [1]))
+
+
+def _present(mesh: Mesh, name) -> bool:
+    names = name if isinstance(name, tuple) else (name,)
+    return all(n in mesh.axis_names for n in names)
 
 
 def fsdp_axes(mesh: Mesh):
@@ -62,8 +69,9 @@ def _path_names(path) -> list[str]:
 
 
 def _div(dim: int, mesh: Mesh, axis) -> Optional[Any]:
-    """axis if dim divisible by its size, else None (replicate)."""
-    if axis is None:
+    """axis if present in the mesh and dim divisible by its size, else None
+    (replicate)."""
+    if axis is None or not _present(mesh, axis):
         return None
     return axis if dim % _axis_size(mesh, axis) == 0 else None
 
@@ -95,7 +103,7 @@ def _weight_spec(names: list[str], shape: tuple, mesh: Mesh,
     if is_expert:
         # (L?, E, F/D, D/F): expert dim is the last stack dim.
         e = shape[n_stack - 1]
-        if e % _axis_size(mesh, "model") == 0:
+        if _div(e, mesh, "model") is not None:
             stack_spec[n_stack - 1] = "model"
             model_used = True
         else:
@@ -187,7 +195,7 @@ def cache_specs(cache: Any, mesh: Mesh) -> Any:
             # axis (GQA kv=8 on |model|=16, MHA kv=36), shard the SEQUENCE
             # dim instead — replicating a 32k-deep cache 16x is what blew
             # decode memory to >100GiB/dev in the baseline sweep.
-            if shape[3] % _axis_size(mesh, "model") == 0:
+            if _div(shape[3], mesh, "model") is not None:
                 return P(None, _div(shape[1], mesh, fsdp), None, "model",
                          None)
             return P(None, _div(shape[1], mesh, fsdp),
@@ -231,3 +239,9 @@ def opt_state_specs(opt_state, pspecs, mesh: Mesh):
 def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def serving_param_shardings(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree for TP-only serving placement of a (possibly
+    segmented/quantized) parameter tree (docs/DESIGN.md §9)."""
+    return to_shardings(param_specs(params, mesh, serving=True), mesh)

@@ -255,8 +255,71 @@ def test_artifact_rejects_wrong_model(tmp_path):
     plan = explicit_plan(cfg, ["int8"] * 4)
     save_artifact(str(tmp_path), compile_plan(model, params, plan))
     _, other, _ = _model("mamba2-780m")
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="compiled for"):
         load_artifact(str(tmp_path), other)
+
+
+def test_artifact_rejects_layer_count_mismatch(tmp_path):
+    """Same config name, different depth: the manifest validator must name
+    the plan-length mismatch up front instead of failing deep inside the
+    restore shape checks."""
+    cfg, model, params = _model("llama3.2-3b", num_layers=4)
+    save_artifact(str(tmp_path),
+                  compile_plan(model, params, explicit_plan(cfg, ["int8"] * 4)))
+    from repro.models.model import build
+    deeper = build(dataclasses.replace(cfg, num_layers=6))
+    with pytest.raises(ValueError, match="block decisions"):
+        load_artifact(str(tmp_path), deeper)
+
+
+def test_artifact_rejects_tampered_group(tmp_path):
+    """A manifest group that quantizes different leaves than the save-time
+    compile is rejected with a named leaf-kind ValueError, not a
+    stack-trace deep inside restore."""
+    import json as _json
+    cfg, model, params = _model("llama3.2-3b", num_layers=2)
+    save_artifact(str(tmp_path),
+                  compile_plan(model, params, explicit_plan(cfg, ["int8"] * 2)))
+    mpath = tmp_path / "plan_manifest.json"
+    manifest = _json.loads(mpath.read_text())
+    manifest["group"] = 100   # divides nothing: skeleton stays raw
+    mpath.write_text(_json.dumps(manifest))
+    with pytest.raises(ValueError, match="group/plan mismatch"):
+        load_artifact(str(tmp_path), model)
+    manifest["group"] = 0
+    mpath.write_text(_json.dumps(manifest))
+    with pytest.raises(ValueError, match="positive integer"):
+        load_artifact(str(tmp_path), model)
+
+
+def test_artifact_roundtrip_with_non_dividing_group(tmp_path):
+    """A group that skips some leaves (quantization passes them through
+    raw) must still round-trip — validation rejects only genuine
+    mismatches, not unusual-but-self-consistent artifacts."""
+    cfg, model, params = _model("llama3.2-3b", num_layers=2)
+    compiled = compile_plan(model, params, explicit_plan(cfg, ["int8"] * 2),
+                            group=33)
+    save_artifact(str(tmp_path), compiled)
+    loaded = load_artifact(str(tmp_path), model)
+    assert loaded.nbytes_effective() == compiled.nbytes_effective()
+
+
+def test_artifact_records_save_mesh():
+    """save_artifact(mesh=...) stamps the save-time layout; artifacts stay
+    mesh-portable (restorable without any mesh)."""
+    import json as _json
+    import tempfile
+    from repro.checkpoint.ckpt import load_artifact_manifest
+    from repro.launch.mesh import make_mesh
+    cfg, model, params = _model("llama3.2-3b", num_layers=2)
+    compiled = compile_plan(model, params, explicit_plan(cfg, ["int8", "raw"]))
+    d = tempfile.mkdtemp()
+    save_artifact(d, compiled, mesh=make_mesh((1, 1), ("data", "model")))
+    manifest = load_artifact_manifest(d)
+    assert manifest["saved_mesh"] == {"axis_names": ["data", "model"],
+                                      "shape": [1, 1]}
+    loaded = load_artifact(d, model)   # no mesh: plain single-device boot
+    assert loaded.plan.precisions() == ["raw", "int8", "raw"]
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,111 @@ def test_param_spec_rules():
     assert specs["layers"]["moe"]["w_gate"][1] == "model"
 
 
+def _abstract_mesh(**axes):
+    """Rule tests only need mesh.shape/axis_names — AbstractMesh lets us
+    exercise 8-way layouts without 8 devices."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh(tuple(axes.items()))
+
+
+def test_param_specs_serving_tp_only():
+    """serving=True keeps weights TP-sharded, replicated over data axes
+    (decode re-reads weights every step — FSDP would force per-step
+    gathers). Previously dead code; now the ServeEngine mesh path."""
+    from repro.sharding.specs import param_specs
+    mesh = _abstract_mesh(data=4, model=8)
+    params = {
+        "layers": {"attn": {"wq": np.zeros((4, 64, 32)),
+                            "wo": np.zeros((4, 32, 64))},
+                   "ln1": np.zeros((4, 32))},
+        "embed": {"tok": np.zeros((512, 32))},
+    }
+    specs = param_specs(params, mesh, serving=True)
+    assert specs["layers"]["attn"]["wq"] == P(None, "model", None)
+    assert specs["layers"]["attn"]["wo"] == P(None, None, "model")
+    assert specs["embed"]["tok"] == P("model", None)
+    assert specs["layers"]["ln1"] == P(None, None)
+    # no leaf references the data axes
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all("data" not in s and "pod" not in s for s in flat)
+    # contrast: training specs do use the data axis
+    train = param_specs(params, mesh)
+    assert train["layers"]["attn"]["wq"] == P(None, "model", "data")
+
+
+def test_param_specs_serving_qtensor_leaves():
+    """QTensor payload inherits the weight rule; per-group scales inherit
+    dims that still divide (the group axis usually does not)."""
+    from repro.quant.quantize import quantize
+    from repro.sharding.specs import param_specs
+    mesh = _abstract_mesh(data=2, model=8)
+    wq = quantize(np.float32(np.random.RandomState(0).randn(256, 256)),
+                  "int8", group=128)
+    specs = param_specs({"layers": {"attn": {"wq": wq}}}, mesh, serving=True)
+    qspec = specs["layers"]["attn"]["wq"]
+    assert qspec.data == P("model", None)
+    # scale (256, 2): out dim inherits "model", 2 groups don't divide 8
+    assert qspec.scale == P("model", None)
+
+
+def test_specs_tolerate_mesh_without_model_axis():
+    """Pure-DP serving mesh: no KeyError, everything model-wise replicated
+    (regression: mesh.shape["model"] used to raise)."""
+    from repro.sharding.specs import cache_specs, param_specs
+    mesh = _abstract_mesh(data=8)
+    params = {"layers": {"attn": {"wq": np.zeros((4, 64, 32)),
+                                  "wo": np.zeros((4, 32, 64))},
+                         "moe": {"w_gate": np.zeros((4, 8, 64, 32))}},
+              "embed": {"tok": np.zeros((512, 32))}}
+    specs = param_specs(params, mesh, serving=True)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(ax is None for s in flat for ax in s)
+    cache = {"k": np.zeros((2, 8, 32, 4, 16)), "v": np.zeros((2, 8, 32, 4, 16))}
+    cspecs = cache_specs(cache, mesh)
+    assert cspecs["k"] == P(None, "data", None, None, None)
+
+
+def test_activation_ctx_tolerates_mesh_without_model_axis():
+    """activation_sharding / model_shards on a data-only mesh (regression:
+    KeyError: 'model'). Runs on the real 1-device mesh."""
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.ctx import (activation_sharding, constrain,
+                                    data_shards, model_shards)
+    mesh = make_mesh((1,), ("data",))
+    with mesh, activation_sharding(mesh):
+        assert model_shards() == 1
+        assert data_shards() == 1
+        x = jax.numpy.zeros((2, 4, 8))
+        y = constrain(x, ("batch", None, "model"))
+        assert y.shape == x.shape
+
+
+def test_cache_specs_gqa_fallback():
+    """KV-head sharding when heads divide the model axis; sequence-dim
+    fallback when they don't (replicating a deep cache 8x is what blew
+    decode memory in the baseline sweep); full replication when neither
+    divides."""
+    from repro.sharding.specs import cache_specs
+    mesh = _abstract_mesh(data=1, model=8)
+
+    def kv(h, s):
+        z = np.zeros((2, 4, s, h, 16))
+        return {"k": z, "v": z}
+
+    head = cache_specs(kv(h=8, s=30), mesh)
+    assert head["k"] == P(None, "data", None, "model", None)
+    fallback = cache_specs(kv(h=2, s=32), mesh)
+    assert fallback["k"] == P(None, "data", "model", None, None)
+    assert fallback["v"] == fallback["k"]
+    neither = cache_specs(kv(h=2, s=30), mesh)
+    assert neither["k"] == P(None, "data", None, None, None)
+    # SSM fields: conv (L,B,W-1,C) channels over model, state heads over model
+    ssm = cache_specs({"conv": np.zeros((4, 2, 3, 64)),
+                       "state": np.zeros((4, 2, 8, 16, 16))}, mesh)
+    assert ssm["conv"] == P(None, "data", None, "model")
+    assert ssm["state"] == P(None, "data", "model", None, None)
+
+
 def test_small_mesh_train_lowering():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp
