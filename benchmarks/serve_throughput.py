@@ -26,6 +26,14 @@ Two sweeps over briefly-trained smoke-scale models:
    tok/s and **per-device weight bytes** for the single-device engine vs
    1xN / 2x(N/2) (data, model) serving meshes, under the mixed plan.
 
+4. **KV-cache sweep** (docs/DESIGN.md §10) — decode-attention
+   microbenchmark at a deeper ``max_seq``: fused decode tok/s and
+   **KV MiB/slot** for the bf16 cache (materialized-score decode path) vs
+   the int8 / int4 quantized cache (fused streaming decode attention; on
+   CPU this runs the ``grouped`` online-softmax fallback — the tok/s rows
+   are the CPU-fallback numbers CI sees, alongside greedy-token agreement
+   vs the bf16 baseline).
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -227,17 +235,58 @@ def _mesh_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _kv_rows(max_new: int, reps: int, steps: int | None,
+             summary: dict) -> list[tuple]:
+    """Quantized-KV-cache decode microbenchmark: tok/s + KV MiB/slot for
+    bf16 vs int8 vs int4 caches at a serving-depth max_seq."""
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    max_seq = 512            # deep enough that the cache dominates state
+    prompts = _prompts(cfg, BATCH)
+    tokens = BATCH * max_new
+    rows = []
+    base_bytes = None
+    base_tokens = None
+    for kvp in ("bf16", "int8", "int4"):
+        engine = ServeEngine(model, params, max_seq=max_seq,
+                             kv_precision=kvp)
+        out = engine.generate(prompts, max_new, chunk=min(CHUNK, max_new))
+        dt = _time(lambda: engine.generate(
+            prompts, max_new, chunk=min(CHUNK, max_new)).tokens, reps)
+        tps = tokens / dt
+        bps = engine.kv_bytes_per_slot()
+        if kvp == "bf16":
+            base_bytes, base_tokens = bps, out.tokens
+            note = (f"{tps:.1f} tok/s kv {bps/2**20:.3f} MiB/slot "
+                    f"(materialized-score baseline)")
+        else:
+            agree = float((out.tokens[:, PROMPT_LEN:]
+                           == base_tokens[:, PROMPT_LEN:]).mean())
+            note = (f"{tps:.1f} tok/s (grouped cpu fallback) kv "
+                    f"{bps/2**20:.3f} MiB/slot ({base_bytes/bps:.2f}x less) "
+                    f"greedy agree {agree:.2f}")
+        rows.append((f"serve/kv/{kvp}/fused", dt / tokens * 1e6, note))
+        summary["kv_cache"][kvp] = {
+            "tok_s_fused": tps,
+            "kv_bytes_per_slot": bps,
+            "kv_reduction_vs_bf16": (base_bytes / bps) if base_bytes else 1.0,
+            "max_seq": max_seq,
+        }
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     reps = 1 if smoke else 3
     steps = SMOKE_TRAIN_STEPS if smoke else None
-    summary: dict = {"variants": {}, "families": {}, "mesh": {}}
+    summary: dict = {"variants": {}, "families": {}, "mesh": {},
+                     "kv_cache": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
     rows = _variant_rows(max_new, reps, summary, steps, variants)
     rows += _family_rows(max_new, reps, steps, summary)
     rows += _mesh_rows(max_new, reps, steps, summary)
+    rows += _kv_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

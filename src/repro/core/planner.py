@@ -59,3 +59,20 @@ def plan_model(model, params, *, variant: str = "4bit/8bit",
     """Convenience: EWQ plan for a Model instance (see models/model.py)."""
     return plan(model.block_params(params), variant=variant,
                 x_factor=x_factor, mode=mode, eps=eps)
+
+
+def plan_kv(cfg, plan: "P.QuantPlan | None" = None, *,
+            kv_precision: str = "auto", group: int | None = None):
+    """KV-cache precision plan for a model config (docs/DESIGN.md §10).
+
+    Extends the block-entropy decision from weights to the serving KV
+    cache: with ``kv_precision="auto"`` each attention layer's cache
+    precision is derived from that layer's existing entropy decision in
+    ``plan`` (low entropy -> int4 cache, mid -> int8, high/raw -> bf16);
+    "int8"/"int4" force a uniform cache; "bf16" returns None. The result
+    feeds ``ServeEngine(kv_precision=...)`` and is stamped into compiled
+    artifacts by quant/compiler.py."""
+    from repro.quant.compiler import compile_kv_plan
+    from repro.quant.kvcache import DEFAULT_KV_GROUP
+    return compile_kv_plan(cfg, plan, kv_precision,
+                           group or DEFAULT_KV_GROUP)

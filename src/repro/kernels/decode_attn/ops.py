@@ -1,0 +1,195 @@
+"""Public entry point for fused decode attention over a (quantized) KV cache.
+
+``decode_attention(q, k, v, valid_len=...)`` is what the model stack calls
+on the decode hot path. ``k``/``v`` may be:
+
+* ``quant.kvcache.KVPage``   (int8 / packed int4 / bf16 + per-group scales)
+* plain jax.Array            (raw bf16 cache, (B, S, Hkv, hd))
+
+Backend selection mirrors ``qdot`` (kernels/qmatmul/ops.py):
+
+* ``auto``    — (default) the Pallas kernel on TPU, else the ``grouped``
+  jnp fallback. Both stream the cache in KV chunks with an online softmax
+  and dequantize in-register — no (…, S_max) score tensor is ever
+  materialized on the decode path.
+* ``pallas``  — force the Pallas kernel (raises off-TPU rather than
+  silently degrading).
+* ``grouped`` — jnp fallback with the kernel's exact math (chunked online
+  softmax; temp memory O(kv_chunk) per step).
+* ``simple``  — dequantize-the-cache + dense-softmax oracle (materializes
+  the (…, S) scores; parity baseline only).
+
+Set process-wide via ``set_decode_attn_backend`` or the
+``REPRO_DECODE_ATTN_BACKEND`` env var; the KV chunk width comes from
+``REPRO_DECODE_KV_CHUNK`` (any width works for any cache length: a
+non-dividing final chunk is read clamped/padded and the extra rows are
+masked out). Both fallbacks are validated against ref.py
+(tests/test_decode_attn.py).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attn_pallas
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.quant.kvcache import KVPage, dequantize_kv
+
+BACKENDS = ("auto", "pallas", "grouped", "simple")
+NEG_INF = -1e30
+_backend = os.environ.get("REPRO_DECODE_ATTN_BACKEND", "auto")
+_kv_chunk = int(os.environ.get("REPRO_DECODE_KV_CHUNK", "256"))
+
+
+def set_decode_attn_backend(name: str) -> None:
+    """Select the process-wide decode-attention backend (read at TRACE
+    time — rebuild jitted executables, or pass ``backend=`` per call, to
+    switch after tracing)."""
+    if name not in BACKENDS:
+        raise ValueError(f"unknown decode-attn backend {name!r}; "
+                         f"one of {BACKENDS}")
+    global _backend
+    _backend = name
+
+
+def get_decode_attn_backend() -> str:
+    return _backend
+
+
+def set_decode_kv_chunk(n: int) -> None:
+    if n < 1:
+        raise ValueError(f"kv chunk must be >= 1, got {n}")
+    global _kv_chunk
+    _kv_chunk = n
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _page_of(x) -> KVPage:
+    """Normalize a cache operand to a KVPage (raw arrays become bf16-style
+    pages with no scales)."""
+    if isinstance(x, KVPage):
+        return x
+    return KVPage(data=x, scale=None, precision="bf16",
+                  head_dim=x.shape[-1], group=x.shape[-1])
+
+
+def _valid_vec(valid_len, b: int, s: int) -> jax.Array:
+    if valid_len is None:
+        return jnp.full((b,), s, jnp.int32)
+    return jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+
+
+def _simple(q, kp: KVPage, vp: KVPage, valid) -> jax.Array:
+    return decode_attn_ref(q, dequantize_kv(kp), dequantize_kv(vp), valid)
+
+
+def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int) -> jax.Array:
+    """Chunked online-softmax decode attention — the kernel's exact math in
+    jnp. Chunks are carved out of the cache in place with dynamic slices
+    (no reshaped/transposed copy of the full cache), so temp memory is
+    O(B * Hkv * rep * kv_chunk), never O(S) — for ANY cache length: a
+    non-dividing final chunk is read with a clamped start and the
+    re-visited rows are masked out, so every row contributes exactly
+    once."""
+    b, s, h, d = q.shape
+    t, hkv = kp.data.shape[1], kp.num_kv_heads
+    rep = h // hkv
+    chunk = min(kv_chunk, t)
+    nc = -(-t // chunk)                              # ceil-div
+    qh = q.reshape(b, hkv, rep, d).astype(jnp.float32)
+    inv_sqrt = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    def take(page, start):
+        return jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
+            x, start, chunk, axis=1), page)
+
+    def body(ci, carry):
+        m, l, acc = carry
+        start = jnp.minimum(ci * chunk, t - chunk)   # clamp the last chunk
+        kf = dequantize_kv(take(kp, start))          # (B, C, Hkv, hd) f32
+        vf = dequantize_kv(take(vp, start))
+        scores = jnp.einsum("bhrd,bchd->bhrc", qh, kf,
+                            preferred_element_type=jnp.float32) * inv_sqrt
+        pos = start + jnp.arange(chunk)
+        # rows re-read by a clamped start were handled by a prior chunk
+        fresh = pos >= ci * chunk
+        mask = fresh[None, :] & (pos[None, :] < valid[:, None])   # (B, C)
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhrc,bchd->bhrd", p, vf,
+                        preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc * corr[..., None] + pv)
+
+    m0 = jnp.full((b, hkv, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nc, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
+            interpret: bool = False) -> jax.Array:
+    b, s, h, d = q.shape
+    t, hkv = kp.data.shape[1], kp.num_kv_heads
+    rep = h // hkv
+
+    def flat(page):
+        data = page.data.reshape(b, t, -1)
+        if page.scale is None:  # bf16 page: dummy unit scales, never read
+            scale = jnp.ones((b, t, 1), jnp.bfloat16)
+        else:
+            scale = page.scale
+        return data, scale
+
+    kd, ks = flat(kp)
+    vd, vs = flat(vp)
+    out = decode_attn_pallas(
+        q.reshape(b, hkv, rep, d), kd, ks, vd, vs, valid[:, None],
+        precision=kp.precision, group=kp.group, head_dim=d,
+        kv_chunk=kv_chunk, interpret=interpret)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k, v, *,
+                     valid_len: Optional[jax.Array] = None,
+                     backend: Optional[str] = None,
+                     kv_chunk: Optional[int] = None) -> jax.Array:
+    """Single-query GQA attention of q (B, 1, H, hd) against a cached
+    K/V (KVPage or raw (B, S, Hkv, hd)); rows >= ``valid_len`` (scalar or
+    per-slot (B,)) are masked. ``backend`` overrides the process-wide
+    selection for this call. Returns (B, 1, H, hd) in q's dtype."""
+    backend = _backend if backend is None else backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown decode-attn backend {backend!r}; "
+                         f"one of {BACKENDS}")
+    if kv_chunk is None:
+        kv_chunk = _kv_chunk
+    elif kv_chunk < 1:
+        raise ValueError(f"kv_chunk must be >= 1, got {kv_chunk}")
+    kp, vp = _page_of(k), _page_of(v)
+    assert kp.precision == vp.precision and kp.group == vp.group, \
+        "K and V cache pages must share precision/group"
+    b, s, h, d = q.shape
+    assert s == 1, f"decode attention is single-query, got s={s}"
+    valid = _valid_vec(valid_len, b, kp.data.shape[1])
+    if backend == "pallas" or (backend == "auto" and _use_pallas()):
+        if backend == "pallas" and not _use_pallas():
+            raise ValueError(
+                f"decode-attn backend 'pallas' needs a TPU; running on "
+                f"{jax.default_backend()!r} (use 'grouped' for the "
+                f"identical-math jnp fallback)")
+        return _pallas(q, kp, vp, valid, kv_chunk)
+    if backend == "simple":
+        return _simple(q, kp, vp, valid)
+    return _grouped(q, kp, vp, valid, kv_chunk)

@@ -1,0 +1,38 @@
+"""Dense-math oracle for single-query GQA decode attention.
+
+Materializes the full (B, Hkv, rep, 1, S) score tensor — the thing the
+fused kernel and its chunked fallback exist to avoid — so it is the
+ground truth the backends are validated against (tests/test_decode_attn.py).
+Operates on raw (dequantized) caches only.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    valid_len: Optional[jax.Array] = None) -> jax.Array:
+    """q: (B, 1, H, hd); k/v: (B, S, Hkv, hd); valid_len: scalar or (B,)
+    count of valid cache rows (None = all S). Returns (B, 1, H, hd)."""
+    b, s, h, d = q.shape
+    assert s == 1, "decode attention is single-query"
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    qh = q.reshape(b, s, hkv, rep, d)
+    scores = jnp.einsum("bshrd,bthd->bhrst", qh.astype(jnp.float32),
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    if valid_len is not None:
+        vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
+        valid = jnp.arange(t)[None, :] < vl[:, None]
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrst,bthd->bshrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

@@ -60,8 +60,15 @@ def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pallas_aligned(m: int, n: int, k: int) -> bool:
-    return m % 128 == 0 and n % 128 == 0 and k % 512 == 0
+def _pallas_aligned(m: int, n: int, k: int, precision: str = "int8") -> bool:
+    """Tile alignment for the Pallas kernel.
+
+    ``k`` is the UNPACKED activation contraction dim; int4 payloads pack
+    two nibbles per byte, so the weight's physical lane dim is k/2 and must
+    itself satisfy the 512-lane block alignment (k % 1024) — checking the
+    unpacked k alone would admit shapes whose packed tiles misalign."""
+    lane = k // 2 if precision == "int4" else k
+    return m % 128 == 0 and n % 128 == 0 and lane % 512 == 0
 
 
 def _dequant_fused(x2d: jax.Array, w: QTensor) -> jax.Array:
@@ -114,14 +121,16 @@ def qdot(x: jax.Array, w, out_dtype=None, backend: str | None = None
     x2d = x.reshape(-1, k)
     if isinstance(w, QTensor):
         m, n = x2d.shape[0], w.data.shape[0]
+        aligned = _pallas_aligned(m, n, k, w.precision)
         if backend == "pallas" or (backend == "auto" and _use_pallas()
-                                   and _pallas_aligned(m, n, k)):
-            if backend == "pallas" and not (_use_pallas()
-                                            and _pallas_aligned(m, n, k)):
+                                   and aligned):
+            if backend == "pallas" and not (_use_pallas() and aligned):
                 raise ValueError(
                     f"qdot backend 'pallas' needs a TPU and tile-aligned "
-                    f"shapes (m%128, n%128, k%512); got m={m} n={n} k={k} "
-                    f"on {jax.default_backend()!r}")
+                    f"shapes (m%128, n%128, payload-lane%512 — k%1024 for "
+                    f"packed int4); got m={m} n={n} k={k} "
+                    f"precision={w.precision!r} on "
+                    f"{jax.default_backend()!r}")
             y = qmatmul_pallas(x2d, w.data, w.scale, group=w.group,
                                precision=w.precision)
         elif backend == "grouped":

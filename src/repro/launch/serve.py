@@ -44,6 +44,14 @@ def main():
                              "4bit/8bit"])
     ap.add_argument("--fast", action="store_true",
                     help="FastEWQ metadata plan (no weight analysis)")
+    ap.add_argument("--kv-precision", default=None,
+                    choices=["bf16", "int8", "int4", "auto"],
+                    help="KV-cache precision: int8/int4 quantize every "
+                         "layer's cache; auto derives per-layer precision "
+                         "from the plan's entropy decisions "
+                         "(docs/DESIGN.md §10). Default: bf16, or the "
+                         "policy stamped into --plan-artifact; pass bf16 "
+                         "explicitly to override a quantized artifact")
     ap.add_argument("--train-steps", type=int, default=30,
                     help="brief training so weights are non-degenerate")
     ap.add_argument("--batch", type=int, default=4)
@@ -96,8 +104,13 @@ def main():
         from repro.models.model import build
         model = build(cfg)
         t0 = time.perf_counter()
+        # None = not specified -> the artifact's stamped kv policy governs;
+        # an explicit value (including bf16) overrides it
+        kv_kw = ({} if args.kv_precision is None
+                 else {"kv_precision": args.kv_precision})
         engine = ServeEngine.from_artifact(model, args.plan_artifact,
-                                           max_seq=max_seq, mesh=mesh)
+                                           max_seq=max_seq, mesh=mesh,
+                                           **kv_kw)
         plan = engine.plan
         print(f"booted from artifact {args.plan_artifact} in "
               f"{time.perf_counter() - t0:.2f}s"
@@ -108,17 +121,25 @@ def main():
         result = train(cfg, run, batch=args.batch, seq=args.prompt_len * 2)
         model, params = result["model"], result["params"]
         plan = plan_for_variant(model, params, args.variant, fast=args.fast)
+        kv_precision = args.kv_precision or "bf16"
+        if kv_precision == "auto" and plan is None:
+            raise SystemExit("--kv-precision auto derives per-layer cache "
+                             "precision from the weight plan; it cannot be "
+                             "combined with --variant raw")
         if plan is not None:
-            compiled = model.compile_plan(params, plan)
+            compiled = model.compile_plan(params, plan,
+                                          kv_precision=kv_precision)
             engine = ServeEngine(model, compiled.params, max_seq=max_seq,
-                                 mesh=mesh)
+                                 mesh=mesh,
+                                 kv_precision=compiled.kv_plan or "bf16")
             engine.plan = plan
             if args.plan_artifact:
                 from repro.quant.compiler import save_artifact
                 path = save_artifact(args.plan_artifact, compiled, mesh=mesh)
                 print(f"saved compiled plan artifact to {path}")
         else:
-            engine = ServeEngine(model, params, max_seq=max_seq, mesh=mesh)
+            engine = ServeEngine(model, params, max_seq=max_seq, mesh=mesh,
+                                 kv_precision=kv_precision)
 
     raw_bits = 32.0 if cfg.dtype == "float32" else 16.0
     raw_bytes = cfg.param_count() * raw_bits / 8.0
@@ -130,6 +151,12 @@ def main():
               f"on {mesh.size} devices")
     if plan:
         print(f"plan: {plan.counts()}")
+    if engine.kv_plan is not None:
+        kv_counts: dict = {}
+        for p in engine.kv_plan.precisions:
+            kv_counts[p] = kv_counts.get(p, 0) + 1
+        print(f"kv cache: {engine.kv_bytes_per_slot()/2**20:.2f} MiB/slot "
+              f"at max_seq={max_seq} ({kv_counts})")
 
     if requests is not None:
         t0 = time.perf_counter()

@@ -9,23 +9,47 @@ Optionally q_norm / k_norm RMS weights (chameleon-style QK-norm).
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attn.ops import decode_attention
 from repro.models.common import qdot, rms_norm, rope
+from repro.quant import kvcache as KV
 from repro.sharding.ctx import constrain, model_shards, unroll_flag
 
 NEG_INF = -1e30
-CHUNK_THRESHOLD = 8192   # sequences longer than this use chunked attention
-Q_CHUNK = 2048
-KV_CHUNK = 2048
+# Chunked-attention knobs, overridable per process via env
+# (REPRO_CHUNK_THRESHOLD / REPRO_Q_CHUNK / REPRO_KV_CHUNK) or
+# ``configure_chunking`` — read at TRACE time, so set them before jitting.
+CHUNK_THRESHOLD = int(os.environ.get("REPRO_CHUNK_THRESHOLD", "8192"))
+Q_CHUNK = int(os.environ.get("REPRO_Q_CHUNK", "2048"))
+KV_CHUNK = int(os.environ.get("REPRO_KV_CHUNK", "2048"))
+
+
+def configure_chunking(chunk_threshold: Optional[int] = None,
+                       q_chunk: Optional[int] = None,
+                       kv_chunk: Optional[int] = None) -> None:
+    """Override the chunked-attention thresholds process-wide (functions
+    jitted before the call keep the values they were traced with)."""
+    global CHUNK_THRESHOLD, Q_CHUNK, KV_CHUNK
+    for name, val in (("CHUNK_THRESHOLD", chunk_threshold),
+                      ("Q_CHUNK", q_chunk), ("KV_CHUNK", kv_chunk)):
+        if val is not None:
+            if val < 1:
+                raise ValueError(f"{name} must be >= 1, got {val}")
+            globals()[name] = val
 
 
 class KVCache(NamedTuple):
-    k: jax.Array  # (B, S_max, Hkv, hd)
-    v: jax.Array  # (B, S_max, Hkv, hd)
+    """Per-layer attention cache. ``k``/``v`` are raw (B, S_max, Hkv, hd)
+    arrays on the bf16 path, or ``quant.kvcache.KVPage``s (int8 / packed
+    int4 payload + per-group scales) when serving with a quantized KV
+    cache (docs/DESIGN.md §10)."""
+    k: jax.Array
+    v: jax.Array
 
 
 def init_kv_cache(batch: int, max_seq: int, num_kv_heads: int, head_dim: int,
@@ -80,6 +104,29 @@ def _flatten_gqa_for_sharding(q, k, v):
     k = constrain(k, ("batch", None, "model", None))
     v = constrain(v, ("batch", None, "model", None))
     return q, k, v, h
+
+
+def decode_valid_bias(cache_pos, s: int, t: int):
+    """Additive decode mask marking cache rows past ``cache_pos + s - 1``
+    invalid; broadcastable against (B, Hkv, rep, S, T) scores.
+
+    Identical for every layer of a decode step, so families compute it ONCE
+    per step (``decode_step_bias``) and pass it down instead of rebuilding
+    the (T,) iota-compare in each of L layers."""
+    if getattr(cache_pos, "ndim", 0) == 1:
+        valid = jnp.arange(t)[None, :] <= (cache_pos[:, None] + s - 1)
+        return jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+    valid = jnp.arange(t) <= (cache_pos + s - 1)
+    return jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+
+
+def decode_step_bias(cache_k_field, cache_pos):
+    """Per-step hoisted validity bias for a family's stacked cache field
+    ((L, B, S_max, Hkv, hd)). Quantized caches return None — the fused
+    decode kernel masks by position arithmetic instead of a bias tensor."""
+    if KV.is_kv_page(cache_k_field):
+        return None
+    return decode_valid_bias(cache_pos, 1, cache_k_field.shape[2])
 
 
 def _gqa_scores(q, k):
@@ -179,14 +226,20 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
               cache: Optional[KVCache] = None,
               cache_pos: Optional[jax.Array] = None,
               cached_kv: Optional[KVCache] = None,
+              valid_bias: Optional[jax.Array] = None,
               emit_kv: bool = False):
     """General attention entry point.
 
     Modes:
       * prefill/train: cache=None — full or chunked causal attention.
       * decode: cache given, x is (B, 1, D); k/v written at cache_pos and
-        attention runs against the cache with a position mask.
-      * cross-attention decode: cached_kv given (precomputed encoder K/V).
+        attention runs against the cache. A raw cache masks with
+        ``valid_bias`` (hoisted once per step by the family decode loop,
+        rebuilt inline for direct callers); a quantized cache (KVPage)
+        quantizes-on-insert and runs the fused streaming kernel —
+        no (…, S_max) score tensor is materialized.
+      * cross-attention decode: cached_kv given (precomputed encoder K/V,
+        raw or quantized).
     Returns (out, new_cache_or_None).
     """
     b, s, _ = x.shape
@@ -196,7 +249,10 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
         q = qdot(x, p["wq"]).reshape(b, s, num_heads, head_dim)
         if qk_norm:
             q = rms_norm(q, p["q_norm"], norm_eps)
-        out = _full_attention(q, cached_kv.k, cached_kv.v, 0.0)
+        if KV.is_kv_page(cached_kv.k):
+            out = decode_attention(q, cached_kv.k, cached_kv.v)
+        else:
+            out = _full_attention(q, cached_kv.k, cached_kv.v, 0.0)
         return qdot(out.reshape(b, s, num_heads * head_dim), p["wo"]), None
 
     q, k, v = _project_qkv(p, x, kv_x, num_heads, num_kv_heads, head_dim,
@@ -209,23 +265,27 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
         # Decode: insert new k/v at cache_pos, attend over the cache.
         # cache_pos is a scalar (whole batch at one position) or a (B,)
         # vector (continuous batching: per-slot positions).
-        if getattr(cache_pos, "ndim", 0) == 1:
-            write = jax.vmap(
-                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))
-            k_cache = write(cache.k, k.astype(cache.k.dtype), cache_pos)
-            v_cache = write(cache.v, v.astype(cache.v.dtype), cache_pos)
-            t = k_cache.shape[1]
-            valid = jnp.arange(t)[None, :] <= (cache_pos[:, None] + s - 1)
-            bias = jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+        if KV.is_kv_page(cache.k):
+            # Quantized KV cache: quantize-on-insert, then stream the int8
+            # / int4 pages through the fused online-softmax decode kernel.
+            k_cache = KV.update_page(cache.k, k, cache_pos)
+            v_cache = KV.update_page(cache.v, v, cache_pos)
+            out = decode_attention(q, k_cache, v_cache,
+                                   valid_len=cache_pos + s)
         else:
-            k_cache = jax.lax.dynamic_update_slice(
-                cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
-            t = k_cache.shape[1]
-            valid = jnp.arange(t) <= (cache_pos + s - 1)
-            bias = jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
-        out = _full_attention(q, k_cache, v_cache, bias)
+            if getattr(cache_pos, "ndim", 0) == 1:
+                write = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(
+                    c, n, (p, 0, 0)))
+                k_cache = write(cache.k, k.astype(cache.k.dtype), cache_pos)
+                v_cache = write(cache.v, v.astype(cache.v.dtype), cache_pos)
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, cache_pos, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, cache_pos, 0, 0))
+            bias = valid_bias if valid_bias is not None else \
+                decode_valid_bias(cache_pos, s, k_cache.shape[1])
+            out = _full_attention(q, k_cache, v_cache, bias)
         new_cache = KVCache(k=k_cache, v=v_cache)
     elif causal:
         new_cache = KVCache(k=k, v=v) if emit_kv else None

@@ -27,13 +27,15 @@ from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 
 class EncDecCache(NamedTuple):
     k: jax.Array        # (Ld, B, S_max, Hkv, hd) decoder self-attn
-    v: jax.Array
+    v: jax.Array        #   raw, or KVPage(s) (quantized serving cache)
     cross_k: jax.Array  # (Ld, B, S_enc, Hkv, hd) precomputed encoder K/V
-    cross_v: jax.Array
+    cross_v: jax.Array  #   quantized once at admission (always fully valid)
     pos: jax.Array      # int32 — scalar, or (B,) per-slot
 
 
 CACHE_BATCH_AXES = EncDecCache(k=1, v=1, cross_k=1, cross_v=1, pos=0)
+# fields the engine may replace with quantized KVPages (quant/kvcache.py)
+KV_CACHE_FIELDS = ("k", "v", "cross_k", "cross_v")
 
 
 def _ln(x, w, cfg):
@@ -106,14 +108,14 @@ def encode(params, frames: jax.Array, cfg, *, remat: bool = True):
 
 
 def _dec_layer(p, h, enc_out, cfg, cache_kv=None, cache_pos=None,
-               cross_kv=None):
+               cross_kv=None, valid_bias=None):
     p = unshard_fsdp(p)
     a, new_kv = A.attention(p["self_attn"], _ln(h, p["ln1"], cfg),
                             num_heads=cfg.num_heads,
                             num_kv_heads=cfg.num_kv_heads,
                             head_dim=cfg.head_dim, causal=True,
                             norm_eps=cfg.norm_eps, cache=cache_kv,
-                            cache_pos=cache_pos)
+                            cache_pos=cache_pos, valid_bias=valid_bias)
     h = h + a
     if cross_kv is not None:
         x, _ = A.attention(p["cross_attn"], _ln(h, p["ln_x"], cfg),
@@ -205,25 +207,31 @@ def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
     pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)[:, None]
     h = h + pos_emb.astype(dtype)
 
+    valid_bias = A.decode_step_bias(cache.k, cache.pos)
+
     def body(h, xs):
         p, k_l, v_l, ck_l, cv_l = xs
         h2, new_kv = _dec_layer(p, h, None, cfg,
                                 cache_kv=A.KVCache(k=k_l, v=v_l),
                                 cache_pos=cache.pos,
-                                cross_kv=A.KVCache(k=ck_l, v=cv_l))
+                                cross_kv=A.KVCache(k=ck_l, v=cv_l),
+                                valid_bias=valid_bias)
         return h2, (new_kv.k, new_kv.v)
 
     from repro.quant.apply import segment_slices
+    from repro.quant.kvcache import kv_rejoin, kv_segment
     ks, vs = [], []
-    for part, lo, hi in segment_slices(params["dec_layers"]):
+    for si, (part, lo, hi) in enumerate(segment_slices(params["dec_layers"])):
         h, (nk, nv) = jax.lax.scan(
-            body, h, (part, cache.k[lo:hi], cache.v[lo:hi],
-                      cache.cross_k[lo:hi], cache.cross_v[lo:hi]),
+            body, h, (part, kv_segment(cache.k, si, lo, hi),
+                      kv_segment(cache.v, si, lo, hi),
+                      kv_segment(cache.cross_k, si, lo, hi),
+                      kv_segment(cache.cross_v, si, lo, hi)),
             unroll=unroll_flag())
         ks.append(nk)
         vs.append(nv)
-    new_k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
-    new_v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+    new_k = kv_rejoin(cache.k, ks)
+    new_v = kv_rejoin(cache.v, vs)
     h = _ln(h, params["final"]["norm"], cfg)
     logits = lm_head(h, embed_w)
     return logits, EncDecCache(k=new_k, v=new_v, cross_k=cache.cross_k,

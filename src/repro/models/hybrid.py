@@ -32,12 +32,14 @@ from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 class HybridCache(NamedTuple):
     conv: jax.Array    # (L, B, W-1, conv_dim)
     state: jax.Array   # (L, B, H, P, N) f32
-    k: jax.Array       # (U, B, S_max, Hkv, hd) — U shared-attn sites
-    v: jax.Array
+    k: jax.Array       # (U, B, S_max, Hkv, hd) — U shared-attn sites;
+    v: jax.Array       #   raw, or a single KVPage (one shared-block decision)
     pos: jax.Array     # int32 — scalar, or (B,) per-slot
 
 
 CACHE_BATCH_AXES = HybridCache(conv=1, state=1, k=1, v=1, pos=0)
+# fields the engine may replace with quantized KVPages (quant/kvcache.py)
+KV_CACHE_FIELDS = ("k", "v")
 
 
 def _num_units(cfg) -> int:
@@ -72,13 +74,14 @@ def init(key, cfg):
     }
 
 
-def _shared_block(shared, h, positions, cfg, cache_kv=None, cache_pos=None):
+def _shared_block(shared, h, positions, cfg, cache_kv=None, cache_pos=None,
+                  valid_bias=None):
     a, new_kv = A.attention(
         shared["attn"], norm(h, shared["ln1"], cfg),
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.head_dim, positions=positions,
         rope_theta=cfg.rope_theta, causal=True, norm_eps=cfg.norm_eps,
-        cache=cache_kv, cache_pos=cache_pos)
+        cache=cache_kv, cache_pos=cache_pos, valid_bias=valid_bias)
     h = h + a
     h = h + M.mlp(shared["mlp"], norm(h, shared["ln2"], cfg), cfg.mlp_act)
     return h, new_kv
@@ -176,6 +179,8 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
     u, period = _num_units(cfg), cfg.shared_attn_period
     shared = unshard_fsdp(params["shared"])
     stacked, by_unit = _layer_stack(params["layers"], cfg)
+    from repro.quant.kvcache import kv_layer, kv_stack
+    valid_bias = A.decode_step_bias(cache.k, cache.pos)
 
     def mamba_body(h, xs_inner):
         p_layer, c_l, s_l = xs_inner
@@ -193,8 +198,9 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
             h3 = h2d[:, None, :]  # (B, 1, D) for attention
             h3, new_kv = _shared_block(
                 shared, h3, positions, cfg,
-                cache_kv=A.KVCache(k=cache.k[ui], v=cache.v[ui]),
-                cache_pos=cache.pos)
+                cache_kv=A.KVCache(k=kv_layer(cache.k, ui),
+                                   v=kv_layer(cache.v, ui)),
+                cache_pos=cache.pos, valid_bias=valid_bias)
             h2d = h3[:, 0, :]
             new_ks.append(new_kv.k)
             new_vs.append(new_kv.v)
@@ -209,7 +215,8 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
         new_cache = HybridCache(
             conv=jnp.concatenate(convs, axis=0),
             state=jnp.concatenate(states, axis=0),
-            k=jnp.stack(new_ks), v=jnp.stack(new_vs), pos=cache.pos + 1)
+            k=kv_stack(cache.k, new_ks), v=kv_stack(cache.v, new_vs),
+            pos=cache.pos + 1)
     else:
         units = _unit_stack(stacked, cfg)
         conv_u = cache.conv.reshape((u, period) + cache.conv.shape[1:])
@@ -220,7 +227,8 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
             h3 = h[:, None, :]  # (B, 1, D) for attention
             h3, new_kv = _shared_block(shared, h3, positions, cfg,
                                        cache_kv=A.KVCache(k=k_l, v=v_l),
-                                       cache_pos=cache.pos)
+                                       cache_pos=cache.pos,
+                                       valid_bias=valid_bias)
             h = h3[:, 0, :]
             h, (nc, ns) = jax.lax.scan(mamba_body, h,
                                        (unit_layers, conv_l, state_l),

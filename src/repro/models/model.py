@@ -61,6 +61,11 @@ class Model:
         layout (``pos`` held as a (B,) per-slot vector)."""
         return self.module.CACHE_BATCH_AXES
 
+    @property
+    def kv_cache_fields(self) -> tuple:
+        """Cache fields the engine may replace with quantized KVPages."""
+        return getattr(self.module, "KV_CACHE_FIELDS", ())
+
     def slotted_cache(self, num_slots: int, max_seq: int):
         """init_cache with per-slot positions — serving/batch.py layout."""
         cache = self.init_cache(num_slots, max_seq)
@@ -69,9 +74,17 @@ class Model:
     def insert_cache_slot(self, cache, one, slot):
         """Write a single-request cache (batch=1 leaves, scalar or (1,) pos)
         into slot ``slot`` of a slotted batch cache. Traceable (``slot`` may
-        be a traced index)."""
+        be a traced index).
+
+        Prefill always produces a raw bf16 cache; when the destination
+        field holds quantized KVPages the prompt K/V are quantized here, at
+        admission — the decode scan's steady-state carry never sees a raw
+        copy (quantize-on-insert, docs/DESIGN.md §10)."""
+        from repro.quant import kvcache as KV
 
         def leaf(dst, src, axis):
+            if KV.is_kv_page(dst):
+                return KV.insert_slot(dst, jnp.asarray(src), slot)
             src = jnp.asarray(src)
             if src.ndim < dst.ndim:           # scalar pos -> (1,) vector
                 src = src[None]
@@ -88,13 +101,15 @@ class Model:
     def block_params(self, params) -> list:
         return self.module.block_params(params)
 
-    def compile_plan(self, params, plan, group: int = 128):
+    def compile_plan(self, params, plan, group: int = 128, **kw):
         """Lower a QuantPlan onto this model's parameter layout — segmented
         quantized stacks for every family (quant/compiler.py,
         docs/DESIGN.md §8). Returns a CompiledPlan; its ``.params`` slot in
-        for raw params everywhere (apply / decode_step / serving)."""
+        for raw params everywhere (apply / decode_step / serving).
+        ``kv_precision=``/``kv_group=`` additionally compile a KV-cache
+        plan (docs/DESIGN.md §10)."""
         from repro.quant.compiler import compile_plan
-        return compile_plan(self, params, plan, group)
+        return compile_plan(self, params, plan, group, **kw)
 
 
 def build(cfg: ModelConfig) -> Model:

@@ -20,6 +20,8 @@ class SSMLMCache(NamedTuple):
 
 
 CACHE_BATCH_AXES = SSMLMCache(conv=1, state=1, pos=0)
+# attention-free: no KV cache for the engine's kv_precision knob to quantize
+KV_CACHE_FIELDS = ()
 
 
 def _init_layer(key, cfg, dtype):

@@ -24,7 +24,7 @@ from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 
 
 class DecodeCache(NamedTuple):
-    k: jax.Array    # (L, B, S_max, Hkv, hd)
+    k: jax.Array    # (L, B, S_max, Hkv, hd) — raw, or KVPage(s) (quantized)
     v: jax.Array    # (L, B, S_max, Hkv, hd)
     pos: jax.Array  # int32 next write position — scalar, or (B,) per-slot
 
@@ -32,6 +32,8 @@ class DecodeCache(NamedTuple):
 # batch axis of each cache field once ``pos`` is a (B,) vector
 # (serving/batch.py slotted layout; model.insert_cache_slot)
 CACHE_BATCH_AXES = DecodeCache(k=1, v=1, pos=0)
+# fields the engine may replace with quantized KVPages (quant/kvcache.py)
+KV_CACHE_FIELDS = ("k", "v")
 
 
 # ---------------------------------------------------------------------------
@@ -80,7 +82,8 @@ def init(key, cfg):
 # layer body
 # ---------------------------------------------------------------------------
 
-def _layer(p, h, positions, cfg, cache_kv=None, cache_pos=None):
+def _layer(p, h, positions, cfg, cache_kv=None, cache_pos=None,
+           valid_bias=None):
     p = unshard_fsdp(p)
     ln1 = p.get("ln1")
     ln2 = p.get("ln2")
@@ -89,7 +92,8 @@ def _layer(p, h, positions, cfg, cache_kv=None, cache_pos=None):
         num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.head_dim, positions=positions,
         rope_theta=cfg.rope_theta, causal=True, qk_norm=cfg.qk_norm,
-        norm_eps=cfg.norm_eps, cache=cache_kv, cache_pos=cache_pos)
+        norm_eps=cfg.norm_eps, cache=cache_kv, cache_pos=cache_pos,
+        valid_bias=valid_bias)
     h = h + a
     hn = norm(h, ln2, cfg)
     aux = {}
@@ -200,24 +204,29 @@ def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
     h = constrain(embed_lookup(embed_w, tokens, dtype),
                   ("batch", None, None))
     positions = decode_positions(cache.pos, b, s)
+    # validity mask is layer-invariant: hoist it out of the per-layer
+    # attention (None for quantized caches — the kernel masks by position)
+    valid_bias = A.decode_step_bias(cache.k, cache.pos)
 
     def body(h, xs):
         p_layer, k_l, v_l = xs
         h2, _, new_kv = _layer(p_layer, h, positions, cfg,
                                cache_kv=A.KVCache(k=k_l, v=v_l),
-                               cache_pos=cache.pos)
+                               cache_pos=cache.pos, valid_bias=valid_bias)
         return h2, (new_kv.k, new_kv.v)
 
     from repro.quant.apply import segment_slices
+    from repro.quant.kvcache import kv_rejoin, kv_segment
     ks, vs = [], []
-    for part, lo, hi in segment_slices(params["layers"]):
+    for si, (part, lo, hi) in enumerate(segment_slices(params["layers"])):
         h, (nk, nv) = jax.lax.scan(
-            body, h, (part, cache.k[lo:hi], cache.v[lo:hi]),
+            body, h, (part, kv_segment(cache.k, si, lo, hi),
+                      kv_segment(cache.v, si, lo, hi)),
             unroll=unroll_flag())
         ks.append(nk)
         vs.append(nv)
-    new_k = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
-    new_v = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+    new_k = kv_rejoin(cache.k, ks)
+    new_v = kv_rejoin(cache.v, vs)
     h = norm(h, params["final"].get("norm"), cfg)
     head_w = unshard_fsdp(params["final"]).get("head", embed_w)
     logits = constrain(lm_head(h, head_w), ("batch", None, "model"))

@@ -3,6 +3,9 @@ from repro.quant.quantize import (  # noqa: F401
     quantize, dequantize, quantize_int8, quantize_int4, quantize_ternary,
 )
 from repro.quant.compiler import (  # noqa: F401
-    CompiledPlan, compile_plan, family_layout, load_artifact, plan_length,
-    save_artifact,
+    CompiledPlan, compile_kv_plan, compile_plan, family_layout,
+    load_artifact, plan_length, save_artifact,
+)
+from repro.quant.kvcache import (  # noqa: F401
+    KVPage, KVPlan, dequantize_kv, is_kv_page, quantize_kv,
 )

@@ -34,8 +34,15 @@ from repro.configs.base import ModelConfig
 from repro.core.policy import QuantPlan
 from repro.quant.apply import (SegmentedParams, apply_plan_stacked,
                                quantize_tree, tree_nbytes)
+from repro.quant.kvcache import DEFAULT_KV_GROUP, KVPlan
 
 ARTIFACT_VERSION = 1
+
+# Entropy-weighted weight decision -> KV-cache precision (docs/DESIGN.md
+# §10): layers whose weights tolerate aggressive quantization (low entropy)
+# also take the int4 cache; sensitive (raw-weight) layers keep bf16 K/V.
+KV_OF_WEIGHT = {"ternary": "int4", "int3": "int4", "int4": "int4",
+                "int8": "int8", "raw": "bf16"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +94,57 @@ def _subplan(plan: QuantPlan, lo: int, hi: int) -> QuantPlan:
     return dataclasses.replace(plan, decisions=plan.decisions[lo:hi])
 
 
+def kv_cache_layers(cfg: ModelConfig) -> int:
+    """Leading-axis length of the family's attention cache (0: no cache)."""
+    if cfg.family in ("dense", "moe"):
+        return cfg.num_layers
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.shared_attn_period  # U shared sites
+    if cfg.family == "encdec":
+        return cfg.num_layers                            # decoder stack
+    return 0                                             # ssm
+
+
+def compile_kv_plan(cfg: ModelConfig, plan: Optional[QuantPlan],
+                    kv_precision: str = "auto",
+                    group: int = DEFAULT_KV_GROUP) -> Optional[KVPlan]:
+    """Lower a KV-cache precision policy onto a family's cache layout.
+
+    ``kv_precision``:
+      "bf16"          — no quantized cache (None)
+      "int8" / "int4" — uniform across all cache layers
+      "auto"          — entropy-weighted: each cache layer inherits its
+        block's weight decision via ``KV_OF_WEIGHT`` (hybrid's shared-site
+        cache follows the shared block's single decision; enc-dec follows
+        the decoder stack). Requires ``plan``.
+    """
+    if kv_precision in (None, "bf16"):
+        return None
+    n = kv_cache_layers(cfg)
+    if n == 0:          # attention-free (ssm): nothing to plan
+        return None
+    if kv_precision in ("int8", "int4"):
+        return KVPlan(precisions=(kv_precision,) * n, group=group)
+    if kv_precision != "auto":
+        raise ValueError(f"unknown kv_precision {kv_precision!r}; one of "
+                         f"('bf16', 'int8', 'int4', 'auto')")
+    if plan is None:
+        raise ValueError("kv_precision='auto' derives per-layer cache "
+                         "precision from the weight plan's entropy "
+                         "decisions — pass a QuantPlan")
+    if cfg.family == "hybrid":
+        shared = plan.decisions[1 + cfg.num_layers].precision
+        prec = (KV_OF_WEIGHT[shared],) * n
+    elif cfg.family == "encdec":
+        ne = cfg.num_encoder_layers
+        prec = tuple(KV_OF_WEIGHT[d.precision]
+                     for d in plan.decisions[1 + ne:1 + ne + cfg.num_layers])
+    else:
+        prec = tuple(KV_OF_WEIGHT[d.precision]
+                     for d in plan.decisions[1:1 + cfg.num_layers])
+    return KVPlan(precisions=prec, group=group)
+
+
 @dataclasses.dataclass
 class CompiledPlan:
     """A QuantPlan lowered onto one model's parameters.
@@ -94,13 +152,17 @@ class CompiledPlan:
     ``params`` is the full parameter tree ready for the model/serving stack:
     every scanned stack is a ``SegmentedParams`` (even uniform/raw plans —
     one segment), per-block extras are quantized trees, and untouched keys
-    ("final", ...) pass through.
+    ("final", ...) pass through. ``kv_plan`` (optional) records the
+    KV-cache precision policy compiled alongside the weights; it is
+    stamped into the artifact manifest so a cold boot serves with the same
+    cache quantization without re-analysis.
     """
     family: str
     config_name: str
     group: int
     plan: QuantPlan
     params: Any
+    kv_plan: Optional[KVPlan] = None
 
     def stack_keys(self) -> list[str]:
         return [k for k, v in self.params.items()
@@ -119,7 +181,7 @@ class CompiledPlan:
             seg = self.params[key]
             stacks[key] = [{"precision": s.precision, "start": s.start,
                             "stop": s.stop} for s in seg.segments]
-        return {
+        out = {
             "version": ARTIFACT_VERSION,
             "family": self.family,
             "config_name": self.config_name,
@@ -128,14 +190,20 @@ class CompiledPlan:
             "stacks": stacks,
             "effective_bytes": float(self.nbytes_effective()),
         }
+        if self.kv_plan is not None:
+            out["kv_plan"] = self.kv_plan.to_dict()
+        return out
 
 
-def compile_plan(model, params, plan: QuantPlan,
-                 group: int = 128) -> CompiledPlan:
+def compile_plan(model, params, plan: QuantPlan, group: int = 128,
+                 kv_precision: str = "bf16",
+                 kv_group: int = DEFAULT_KV_GROUP) -> CompiledPlan:
     """Lower ``plan`` onto ``params`` for any model family.
 
-    Traceable (pure jnp + static python control flow), so it runs under
-    ``jax.eval_shape`` for abstract/dry-run inputs.
+    ``kv_precision`` additionally compiles a KV-cache plan
+    (``compile_kv_plan``) carried on the result and stamped into artifact
+    manifests. Traceable (pure jnp + static python control flow), so it
+    runs under ``jax.eval_shape`` for abstract/dry-run inputs.
     """
     cfg = model.cfg
     expected = plan_length(cfg)
@@ -155,7 +223,9 @@ def compile_plan(model, params, plan: QuantPlan,
         new[spec.key] = quantize_tree(
             params[spec.key], plan.decisions[spec.index].precision, group)
     return CompiledPlan(family=cfg.family, config_name=cfg.name, group=group,
-                        plan=plan, params=new)
+                        plan=plan, params=new,
+                        kv_plan=compile_kv_plan(cfg, plan, kv_precision,
+                                                kv_group))
 
 
 # ---------------------------------------------------------------------------
@@ -248,5 +318,7 @@ def load_artifact(directory: str, model, *, mesh=None) -> CompiledPlan:
     else:
         params = ckpt.restore_artifact(directory, skeleton)
         params = jax.tree.map(jnp.asarray, params)
+    kv_plan = (KVPlan.from_dict(manifest["kv_plan"])
+               if manifest.get("kv_plan") else None)
     return CompiledPlan(family=cfg.family, config_name=cfg.name, group=group,
-                        plan=plan, params=params)
+                        plan=plan, params=params, kv_plan=kv_plan)

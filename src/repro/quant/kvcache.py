@@ -1,0 +1,328 @@
+"""Entropy-weighted quantized KV cache (docs/DESIGN.md §10).
+
+The serving KV cache dominates decode memory at ``num_slots x max_seq`` and
+is re-read in full every token step. ``KVPage`` extends the paper's
+layer-level entropy argument from weights to that cache: each attention
+layer's K/V buffers are stored int8 or packed int4 with per-group scales,
+the per-layer precision chosen by a ``KVPlan`` (uniform, or derived from
+the layer's existing entropy decision — quant/compiler.compile_kv_plan).
+
+Layout
+------
+A page covers a contiguous run of cache layers at ONE precision:
+
+  data  : (L?, B, S, Hkv, hd)      int8   ("int8")
+          (L?, B, S, Hkv, hd//2)   int8   ("int4", two nibbles per byte)
+          (L?, B, S, Hkv, hd)      bf16   ("bf16", scale is None)
+  scale : (L?, B, S, F // group)   bf16   — F = Hkv * hd, groups along the
+          FLATTENED head axis so small head dims still amortize one bf16
+          scale over ``group`` elements (bytes/slot stays ~bits/8 per elem).
+
+Pages are registered pytrees, so they ride through jit / lax.scan (the
+leading layer axis is scanned over exactly like a raw stacked cache) and
+through ``serving/batch.DecodeState`` as the decode-loop carry.
+
+Quantize-on-insert invariant: prefill runs in bf16; K/V enter a page only
+through ``update_page`` (per-token decode write) or ``insert_slot``
+(admitting a prefilled request into a slot), both of which quantize at the
+write. The steady-state carry of the jitted decode scan is therefore
+always quantized — decode never holds a bf16 copy of the cache.
+
+Mixed per-layer plans cut the cache into a tuple of pages whose boundaries
+are forced to the parameter-stack segment boundaries (``cuts``), so page i
+lines up 1:1 with ``quant.apply.segment_slices`` segment i and each model
+scan sees a single-precision page.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_KV_GROUP = 64
+KV_PRECISIONS = ("bf16", "int8", "int4")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPlan:
+    """Per-cache-layer precision plan for a family's KV cache.
+
+    ``precisions`` carries one entry per element of the cache's leading
+    layer axis (L decoder layers; U shared-attention sites for hybrid).
+    ``group`` is the scale-group size along the flattened (Hkv*hd) axis.
+    """
+    precisions: tuple[str, ...]
+    group: int = DEFAULT_KV_GROUP
+
+    def __post_init__(self):
+        for p in self.precisions:
+            if p not in KV_PRECISIONS:
+                raise ValueError(f"unknown KV precision {p!r}; "
+                                 f"one of {KV_PRECISIONS}")
+
+    def pages(self, cuts: Sequence[int] = ()) -> list[tuple[str, int, int]]:
+        """Maximal equal-precision runs, additionally cut at ``cuts`` (the
+        parameter-stack segment boundaries) so pages align 1:1 with the
+        segments the model scans."""
+        cutset = set(cuts)
+        runs: list[tuple[str, int, int]] = []
+        start = 0
+        n = len(self.precisions)
+        for i in range(1, n + 1):
+            if (i == n or self.precisions[i] != self.precisions[start]
+                    or i in cutset):
+                runs.append((self.precisions[start], start, i))
+                start = i
+        return runs
+
+    def to_dict(self) -> dict:
+        return {"precisions": list(self.precisions), "group": self.group}
+
+    @staticmethod
+    def from_dict(d: dict) -> "KVPlan":
+        return KVPlan(precisions=tuple(d["precisions"]), group=int(d["group"]))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVPage:
+    """One contiguous run of cache layers at a single precision.
+
+    Shapes are derived from ``data`` (not static metadata) so pages stay
+    valid under scan/vmap slicing of the leading layer axis.
+    """
+    data: Any                 # see module docstring
+    scale: Any                # bf16 per-group scales, or None for "bf16"
+    precision: str            # static
+    head_dim: int             # static logical hd (int4 stores hd//2 bytes)
+    group: int                # static, divides Hkv*hd
+
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.precision, self.head_dim,
+                                         self.group)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        precision, head_dim, group = aux
+        return cls(data=data, scale=scale, precision=precision,
+                   head_dim=head_dim, group=group)
+
+    @property
+    def num_kv_heads(self) -> int:
+        return self.data.shape[-2]
+
+    @property
+    def seq_len(self) -> int:
+        return self.data.shape[-4]
+
+
+def is_kv_page(x: Any) -> bool:
+    """True for a KVPage or a (non-empty) tuple of KVPages."""
+    if isinstance(x, KVPage):
+        return True
+    return (isinstance(x, tuple) and len(x) > 0
+            and all(isinstance(p, KVPage) for p in x))
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize (flat-head grouping)
+# ---------------------------------------------------------------------------
+
+def _flat_groups(x: jax.Array, group: int) -> jax.Array:
+    """(..., Hkv, hd) -> (..., F//group, group) over the flattened heads."""
+    *lead, hkv, hd = x.shape
+    f = hkv * hd
+    assert f % group == 0, f"Hkv*hd={f} not divisible by kv group {group}"
+    return x.reshape(*lead, f // group, group)
+
+
+def quantize_kv(x: jax.Array, precision: str, group: int
+                ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """x: (..., Hkv, hd) float -> (data, scale) in the page layout."""
+    *lead, hkv, hd = x.shape
+    if precision == "bf16":
+        return x.astype(jnp.bfloat16), None
+    g = _flat_groups(x.astype(jnp.float32), group)
+    absmax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    qmax = 127.0 if precision == "int8" else 7.0
+    scale = absmax / qmax
+    q = jnp.round(g / jnp.where(scale == 0, 1.0, scale))
+    q = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
+    scale = scale[..., 0].astype(jnp.bfloat16)
+    if precision == "int8":
+        return q.reshape(*lead, hkv, hd), scale
+    if precision == "int4":
+        assert hd % 2 == 0, f"int4 KV packing needs an even head dim, {hd}"
+        flat = q.reshape(*lead, hkv * hd // 2, 2)
+        packed = ((flat[..., 0] & 0x0F)
+                  | ((flat[..., 1] & 0x0F) << 4)).astype(jnp.int8)
+        return packed.reshape(*lead, hkv, hd // 2), scale
+    raise ValueError(f"cannot quantize KV to {precision!r}")
+
+
+def _unpack_kv_int4(data: jax.Array) -> jax.Array:
+    lo = (data & 0x0F).astype(jnp.int8)
+    hi = ((data >> 4) & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        *data.shape[:-1], data.shape[-1] * 2)
+
+
+def dequantize_kv(page: KVPage, dtype=jnp.float32) -> jax.Array:
+    """Page -> (..., Hkv, hd) in ``dtype`` (bf16 pages: a plain cast)."""
+    if page.precision == "bf16":
+        return page.data.astype(dtype)
+    data = page.data
+    if page.precision == "int4":
+        data = _unpack_kv_int4(data)
+    *lead, hkv, hd = data.shape
+    g = data.astype(jnp.float32).reshape(*lead, hkv * hd // page.group,
+                                         page.group)
+    out = g * page.scale.astype(jnp.float32)[..., None]
+    return out.reshape(*lead, hkv, hd).astype(dtype)
+
+
+def make_page(raw: jax.Array, precision: str, group: int) -> KVPage:
+    """Quantize a raw (..., S, Hkv, hd) cache buffer into one page."""
+    data, scale = quantize_kv(raw, precision, group)
+    return KVPage(data=data, scale=scale, precision=precision,
+                  head_dim=raw.shape[-1], group=group)
+
+
+# ---------------------------------------------------------------------------
+# page writes (quantize-on-insert)
+# ---------------------------------------------------------------------------
+
+def update_page(page: KVPage, new: jax.Array, pos: jax.Array) -> KVPage:
+    """Decode-step write: quantize ``new`` (B, s, Hkv, hd) and store it at
+    sequence position ``pos`` (scalar, or (B,) per-slot vector)."""
+    data_n, scale_n = quantize_kv(new, page.precision, page.group)
+    data_n = data_n.astype(page.data.dtype)
+
+    def write(dst, src, p):
+        if getattr(p, "ndim", 0) == 1:  # per-slot positions
+            return jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+                c, n, (i,) + (0,) * (c.ndim - 1)))(dst, src, p)
+        start = (jnp.int32(0), p) + (0,) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src, start)
+
+    data = write(page.data, data_n, pos)
+    scale = (None if scale_n is None
+             else write(page.scale, scale_n.astype(page.scale.dtype), pos))
+    return dataclasses.replace(page, data=data, scale=scale)
+
+
+def _page_lengths(field) -> list[int]:
+    pages = field if isinstance(field, tuple) else (field,)
+    return [p.data.shape[0] for p in pages]
+
+
+def insert_slot(field, src: jax.Array, slot) -> Any:
+    """Admit a prefilled request: quantize the raw batch=1 cache ``src``
+    ((L, 1, S, Hkv, hd)) into slot ``slot`` of a slotted page field (batch
+    axis 1). ``field`` is a KVPage or tuple of KVPages over layer runs."""
+    pages = field if isinstance(field, tuple) else (field,)
+    out, lo = [], 0
+    for page in pages:
+        hi = lo + page.data.shape[0]
+        data_n, scale_n = quantize_kv(src[lo:hi], page.precision, page.group)
+
+        def write(dst, new):
+            start = (0, slot) + (0,) * (dst.ndim - 2)
+            return jax.lax.dynamic_update_slice(dst, new.astype(dst.dtype),
+                                                start)
+
+        out.append(dataclasses.replace(
+            page, data=write(page.data, data_n),
+            scale=None if scale_n is None else write(page.scale, scale_n)))
+        lo = hi
+    return tuple(out) if isinstance(field, tuple) else out[0]
+
+
+# ---------------------------------------------------------------------------
+# model-cache conversion and per-segment access helpers
+# ---------------------------------------------------------------------------
+
+def quantize_cache_field(raw: jax.Array, plan: KVPlan,
+                         cuts: Sequence[int] = ()) -> Any:
+    """Raw stacked (L, B, S, Hkv, hd) cache buffer -> page container.
+
+    Single-run plans yield a bare KVPage; mixed plans a tuple of pages cut
+    at ``cuts`` so page i aligns with parameter segment i."""
+    runs = plan.pages(cuts)
+    assert runs and runs[-1][2] == raw.shape[0], \
+        (f"KV plan covers {runs[-1][2] if runs else 0} layers; cache has "
+         f"{raw.shape[0]}")
+    pages = tuple(make_page(raw[lo:hi], prec, plan.group)
+                  for prec, lo, hi in runs)
+    return pages if len(pages) > 1 else pages[0]
+
+
+def quantize_model_cache(cache, plan: KVPlan, cuts: Sequence[int],
+                         fields: Sequence[str]):
+    """Replace each named KV field of a family cache with quantized pages
+    (no-op for families without attention caches)."""
+    reps = {}
+    for name in fields:
+        raw = getattr(cache, name)
+        if is_kv_page(raw):
+            reps[name] = raw  # already quantized
+        else:
+            reps[name] = quantize_cache_field(raw, plan, cuts)
+    return cache._replace(**reps) if reps else cache
+
+
+def kv_segment(field, si: int, lo: int, hi: int):
+    """Slice a cache field for parameter segment ``si`` covering layers
+    [lo, hi). Quantized fields are page-aligned 1:1 with segments."""
+    if isinstance(field, tuple):
+        page = field[si]
+        assert page.data.shape[0] == hi - lo, \
+            (f"KV page {si} holds {page.data.shape[0]} layers; segment "
+             f"[{lo},{hi}) expects {hi - lo} — cache pages must be built "
+             f"with the parameter segmentation's cuts")
+        return page
+    if isinstance(field, KVPage):
+        assert si == 0, "single-page cache with a multi-segment stack"
+        return field
+    return field[lo:hi]
+
+
+def kv_rejoin(field, parts: list):
+    """Rebuild a cache field from per-segment scan outputs, preserving the
+    original container type."""
+    if isinstance(field, tuple):
+        return tuple(parts)
+    if isinstance(field, KVPage):
+        return parts[0]
+    return jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+
+def kv_layer(field, i: int):
+    """Index one layer/site of a cache field (hybrid's unrolled units)."""
+    if isinstance(field, KVPage):
+        return jax.tree.map(lambda x: x[i], field)
+    assert not isinstance(field, tuple), \
+        "per-layer indexing expects a single-page (uniform) hybrid cache"
+    return field[i]
+
+
+def kv_stack(field, parts: list):
+    """Stack per-layer results back into the original container layout."""
+    if isinstance(field, KVPage):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+    return jnp.stack(parts)
+
+
+def kv_field_nbytes(field) -> float:
+    """Physical bytes of a cache field (pages count data + scales)."""
+    total = 0.0
+    for leaf in jax.tree.leaves(field):
+        total += float(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total

@@ -8,7 +8,9 @@ most one in-flight request. All per-slot bookkeeping lives in ``DecodeState``
 * ``tokens`` / ``logprobs`` are (B, S_max) ring-free buffers written at
   ``lengths[slot]`` via a masked scatter (done/empty slots never advance);
 * ``cache`` is the model family's KV/SSM cache in the *slotted* layout
-  (``pos`` is a (B,) per-slot vector — see Model.slotted_cache);
+  (``pos`` is a (B,) per-slot vector — see Model.slotted_cache); under
+  ``ServeEngine(kv_precision=...)`` its K/V fields are quantized KVPages
+  (quant/kvcache.py) and admission quantizes the prefilled K/V on insert;
 * admission (``insert_request``) overwrites one slot with a freshly
   prefilled request; eviction (``release_slot``) just drops the slot's
   active flag — the next insert overwrites every per-slot buffer.

@@ -84,7 +84,8 @@ class ServeEngine:
     def __init__(self, model: Model, params, *, max_seq: int,
                  plan: Optional[QuantPlan] = None, group: int = 128,
                  eos_id: Optional[int] = None, pad_id: int = 0,
-                 mesh=None):
+                 mesh=None, kv_precision="bf16",
+                 kv_group: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
@@ -101,6 +102,7 @@ class ServeEngine:
             params = jax.device_put(params,
                                     serving_param_shardings(params, mesh))
         self.params = params
+        self.kv_plan = self._resolve_kv_plan(kv_precision, kv_group)
         self._decode = self._traced(jax.jit(model.decode_step))
         # built once, cached (enc-dec prefill also takes encoder frames)
         self._prefill = self._traced(jax.jit(self._prefill_encdec
@@ -108,7 +110,44 @@ class ServeEngine:
                                              else self._prefill_impl))
         self._insert = self._traced(jax.jit(self._insert_impl))
         self._release = self._traced(jax.jit(self._release_impl))
+        self._kv_wrap = self._traced(jax.jit(self._wrap_cache))
         self._chunk_fns: dict = {}
+
+    # -- quantized KV cache (docs/DESIGN.md §10) -----------------------------
+    def _resolve_kv_plan(self, kv_precision, kv_group):
+        from repro.quant.kvcache import DEFAULT_KV_GROUP, KVPlan
+        if isinstance(kv_precision, KVPlan):
+            if kv_group is not None and kv_group != kv_precision.group:
+                raise ValueError(
+                    f"kv_group={kv_group} conflicts with the provided "
+                    f"KVPlan's group={kv_precision.group}; the plan's "
+                    f"group is part of the (possibly artifact-stamped) "
+                    f"policy — rebuild the plan to change it")
+            return kv_precision
+        from repro.quant.compiler import compile_kv_plan
+        return compile_kv_plan(self.cfg, self.plan, kv_precision,
+                               kv_group or DEFAULT_KV_GROUP)
+
+    def _kv_cuts(self) -> tuple:
+        """Page boundaries = the weight stack's segment boundaries, so each
+        cache page aligns 1:1 with a model scan segment."""
+        key = {"dense": "layers", "moe": "layers",
+               "encdec": "dec_layers"}.get(self.cfg.family)
+        if key is None:
+            return ()
+        from repro.quant.apply import segment_slices
+        return tuple(lo for _, lo, _ in
+                     segment_slices(self.params[key])[1:])
+
+    def _wrap_cache(self, cache):
+        """Raw (bf16) family cache -> quantized-page layout per the KV
+        plan; identity when serving with a bf16 cache. Traceable — the
+        engine jits it once per cache shape (``self._kv_wrap``)."""
+        if self.kv_plan is None:
+            return cache
+        from repro.quant.kvcache import quantize_model_cache
+        return quantize_model_cache(cache, self.kv_plan, self._kv_cuts(),
+                                    self.model.kv_cache_fields)
 
     # -- mesh plumbing -------------------------------------------------------
     def _ctx(self):
@@ -146,8 +185,19 @@ class ServeEngine:
         device_put to its serving NamedSharding straight from the checkpoint
         file — a cold boot lands sharded without ever materializing a
         replicated copy."""
-        from repro.quant.compiler import load_artifact
+        from repro.quant.compiler import compile_kv_plan, load_artifact
+        from repro.quant.kvcache import DEFAULT_KV_GROUP
         compiled = load_artifact(directory, model, mesh=mesh)
+        if compiled.kv_plan is not None:
+            # serve with the KV-cache policy stamped at compile time unless
+            # the caller explicitly overrides it
+            kw.setdefault("kv_precision", compiled.kv_plan)
+        if kw.get("kv_precision") == "auto":
+            # entropy-weighted selection needs the weight plan, which the
+            # engine ctor doesn't see on this path (params arrive compiled)
+            kw["kv_precision"] = compile_kv_plan(
+                model.cfg, compiled.plan, "auto",
+                kw.pop("kv_group", None) or DEFAULT_KV_GROUP)
         engine = cls(model, compiled.params, max_seq=max_seq, plan=None,
                      mesh=mesh, **kw)
         engine.plan = compiled.plan
@@ -295,6 +345,8 @@ class ServeEngine:
         assert total <= self.max_seq, (total, self.max_seq)
         cache, last_logits = self.prefill(prompts, frames)
         cache = cache._replace(pos=jnp.full((b,), p, jnp.int32))
+        # quantize-on-insert: prefill ran bf16; the decode carry is pages
+        cache = self._kv_wrap(cache)
         tokens = jnp.zeros((b, self.max_seq), jnp.int32)
         tokens = jax.lax.dynamic_update_slice(
             tokens, prompts.astype(jnp.int32), (0, 0))
@@ -373,9 +425,11 @@ class ServeEngine:
         for r in requests:
             assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
             sched.submit(r)
-        state = self._shard_state(B.init_state(
+        state = B.init_state(
             self.model, num_slots, self.max_seq,
-            key if key is not None else jax.random.PRNGKey(0)))
+            key if key is not None else jax.random.PRNGKey(0))
+        state = self._shard_state(state._replace(
+            cache=self._kv_wrap(state.cache)))
         fn = self._chunk_fn(chunk, temperature)
         clock = 0
         occupancy: list[float] = []
@@ -427,6 +481,21 @@ class ServeEngine:
         return outputs, stats
 
     # -- diagnostics -----------------------------------------------------------
+    def kv_bytes_per_slot(self) -> float:
+        """Physical attention-cache bytes one decode slot holds at
+        ``max_seq`` (K/V payloads + per-group scales; enc-dec includes the
+        cross-attention cache; 0.0 for attention-free families).
+
+        This is the per-request HBM cost that scales with
+        ``num_slots x max_seq`` — the number the KV-cache quantization
+        shrinks (docs/DESIGN.md §10)."""
+        from repro.quant.kvcache import kv_field_nbytes
+        cache = jax.eval_shape(
+            lambda: self._wrap_cache(self.model.slotted_cache(1,
+                                                              self.max_seq)))
+        return float(sum(kv_field_nbytes(getattr(cache, name))
+                         for name in self.model.kv_cache_fields))
+
     def weight_bytes(self) -> float:
         from repro.quant.apply import tree_nbytes
         from repro.quant.apply import SegmentedParams

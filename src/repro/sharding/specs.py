@@ -177,10 +177,14 @@ def cache_specs(cache: Any, mesh: Mesh) -> Any:
     """KV/SSM caches: batch dim over fsdp axes, head/state dims over model.
 
     Layouts handled (by rank + position conventions):
-      KV:      (L, B, S, Hkv, hd)
-      conv:    (L, B, W-1, C)
-      state:   (L, B, H, P, N)
-      pos:     scalar
+      KV:       (L, B, S, Hkv, hd)   — raw, or a KVPage's int8/int4 payload
+                (same rank; the packed last dim is never sharded anyway)
+      KV scale: (L, B, S, F/G)       — per-group scales of a quantized page:
+                tiny (~1/group of the payload), so only the slot dim shards
+                and the group dim stays replicated
+      conv:     (L, B, W-1, C)
+      state:    (L, B, H, P, N)
+      pos:      scalar
     """
     fsdp = fsdp_axes(mesh)
 
@@ -189,8 +193,14 @@ def cache_specs(cache: Any, mesh: Mesh) -> Any:
         shape = leaf.shape
         if len(shape) == 0:
             return P()
-        field = names[-1] if names else ""
-        if field in ("k", "v", "cross_k", "cross_v") and len(shape) == 5:
+        # KVPage payload/scale leaves appear as "#0"/"#1" (optionally below
+        # a "[i]" page-tuple index) under the cache field's name.
+        field = next((n for n in reversed(names)
+                      if not (n.startswith("#") or n.startswith("["))), "")
+        is_scale = bool(names) and names[-1] == "#1"
+        if field in ("k", "v", "cross_k", "cross_v"):
+            if is_scale or len(shape) == 4:
+                return P(None, _div(shape[1], mesh, fsdp), None, None)
             # Prefer KV-head sharding; when heads don't divide the model
             # axis (GQA kv=8 on |model|=16, MHA kv=36), shard the SEQUENCE
             # dim instead — replicating a 32k-deep cache 16x is what blew
