@@ -34,6 +34,13 @@ Two sweeps over briefly-trained smoke-scale models:
    are the CPU-fallback numbers CI sees, alongside greedy-token agreement
    vs the bf16 baseline).
 
+5. **Spec-decode sweep** (docs/DESIGN.md §11) — self-speculative serving
+   at k in {2, 4} vs the single-query non-spec engine under the mixed
+   plan: continuous-batching tok/s uplift, draft acceptance rate,
+   accepted tokens per verify round, draft-only weight overhead, and
+   greedy-token agreement (must be 1.0 — the spec path is token-identical
+   by construction).
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -124,7 +131,11 @@ def _variant_rows(max_new: int, reps: int, summary: dict,
         rows.append((f"serve/{tag}/stream", dt_stream / max(
             stats.generated_tokens, 1) * 1e6,
             f"{tps_stream:.1f} tok/s occupancy {stats.occupancy:.2f} "
-            f"admissions {stats.admissions}"))
+            f"admissions {stats.admissions} "
+            f"ttft p50/p95 {stats.ttft_p50_s*1e3:.0f}/"
+            f"{stats.ttft_p95_s*1e3:.0f}ms "
+            f"tpot p50/p95 {stats.tpot_p50_s*1e3:.1f}/"
+            f"{stats.tpot_p95_s*1e3:.1f}ms"))
         summary["variants"][variant] = {
             "weight_mib": engine.weight_bytes() / 2**20,
             "tok_s_stepwise": tps_step, "tok_s_fused": tps_fused,
@@ -132,6 +143,8 @@ def _variant_rows(max_new: int, reps: int, summary: dict,
             "tok_s_stream": tps_stream, "occupancy": stats.occupancy,
             "mid_run_admissions": stats.admissions,
             "decode_steps": stats.decode_steps,
+            "ttft_p50_s": stats.ttft_p50_s, "ttft_p95_s": stats.ttft_p95_s,
+            "tpot_p50_s": stats.tpot_p50_s, "tpot_p95_s": stats.tpot_p95_s,
         }
     return rows
 
@@ -274,12 +287,84 @@ def _kv_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _spec_rows(max_new: int, reps: int, steps: int | None,
+               summary: dict) -> list[tuple]:
+    """Self-speculative serving vs the non-spec engine: tok/s uplift +
+    acceptance at k in {2, 4} (docs/DESIGN.md §11)."""
+    from repro.serving.spec import SpecConfig
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    plan = plan_for_variant(model, params, FAMILY_VARIANT)
+    qparams = model.compile_plan(params, plan).params
+    ks = (2, 4)
+    requests = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
+    # generated lengths vary +-25%; size the cache for the deepest request
+    # plus the verify-window headroom (engine asserts)
+    max_seq = max(len(r.prompt) + r.max_new_tokens
+                  for r in requests) + max(ks)
+    rows = []
+
+    def timed_serve(engine):
+        engine.serve(requests[:2], num_slots=NUM_SLOTS, chunk=2)  # warm
+        t0 = time.perf_counter()
+        outputs, stats = engine.serve(requests, num_slots=NUM_SLOTS, chunk=2)
+        return outputs, stats, time.perf_counter() - t0
+
+    base = ServeEngine(model, qparams, max_seq=max_seq)
+    base.plan = plan
+    base_out, base_stats, base_dt = timed_serve(base)
+    base_tps = base_stats.generated_tokens / base_dt
+    rows.append(("serve/spec/baseline/stream",
+                 base_dt / max(base_stats.generated_tokens, 1) * 1e6,
+                 f"{base_tps:.1f} tok/s (single-query engine)"))
+    summary["spec"]["baseline"] = {"tok_s_stream": base_tps}
+
+    for k in ks:
+        engine = ServeEngine(model, qparams, max_seq=max_seq,
+                             spec=SpecConfig(k=k))
+        engine.plan = plan
+        outputs, stats, dt = timed_serve(engine)
+        tps = stats.generated_tokens / dt
+        agree = float(all(
+            (a.tokens == b.tokens).all() for a, b in zip(base_out, outputs)))
+        acc_per_round = (stats.draft_accepted / max(stats.spec_rounds, 1))
+        # decode is weight-bytes-bound (README §Serving): the deployment
+        # uplift is bytes-read-per-committed-token — one target read plus k
+        # int4-draft reads amortized over tokens_per_round. CPU smoke is
+        # FLOPs-bound, so the wall-clock column understates this.
+        w_t, w_d = engine.weight_bytes(), engine.draft_weight_bytes()
+        bw_ratio = ((w_t + k * w_d)
+                    / max(stats.tokens_per_round, 1e-9)) / w_t
+        rows.append((f"serve/spec/k{k}/stream",
+                     dt / max(stats.generated_tokens, 1) * 1e6,
+                     f"{tps:.1f} tok/s ({tps/base_tps:.2f}x vs non-spec "
+                     f"cpu-flops-bound; weight-bytes/token "
+                     f"{bw_ratio:.2f}x of baseline) "
+                     f"acceptance {stats.acceptance_rate:.2f} "
+                     f"{stats.tokens_per_round:.2f} tok/round "
+                     f"greedy agree {agree:.2f}"))
+        summary["spec"][f"k{k}"] = {
+            "tok_s_stream": tps,
+            "uplift_vs_baseline": tps / base_tps,
+            "weight_bytes_per_token_vs_baseline": bw_ratio,
+            "acceptance_rate": stats.acceptance_rate,
+            "tokens_per_round": stats.tokens_per_round,
+            "accepted_tokens_per_round": acc_per_round,
+            "draft_overhead_mib": engine.draft_overhead_bytes() / 2**20,
+            "greedy_agree": agree,
+            "ttft_p50_s": stats.ttft_p50_s, "ttft_p95_s": stats.ttft_p95_s,
+            "tpot_p50_s": stats.tpot_p50_s, "tpot_p95_s": stats.tpot_p95_s,
+        }
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     reps = 1 if smoke else 3
     steps = SMOKE_TRAIN_STEPS if smoke else None
     summary: dict = {"variants": {}, "families": {}, "mesh": {},
-                     "kv_cache": {}}
+                     "kv_cache": {}, "spec": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
@@ -287,6 +372,7 @@ def run(smoke: bool = False) -> list[tuple]:
     rows += _family_rows(max_new, reps, steps, summary)
     rows += _mesh_rows(max_new, reps, steps, summary)
     rows += _kv_rows(max_new, reps, steps, summary)
+    rows += _spec_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

@@ -1,13 +1,20 @@
-"""Pallas TPU kernel: fused single-query GQA decode attention over a
+"""Pallas TPU kernel: fused (multi-)query GQA decode attention over a
 quantized KV cache.
 
-Computes, for one decode step per batch slot,
+Computes, for one decode step (or a short speculative verify window of
+``qs`` token positions) per batch slot,
 
-  out[b, h, r] = softmax_t( q[b, h, r] . K[b, t, h] / sqrt(hd) ) . V[b, t, h]
+  out[b, h, r, i] = softmax_t( q[b, h, r, i] . K[b, t, h] / sqrt(hd) )
+                    . V[b, t, h]
 
-with t masked to each slot's valid cache length, where K/V are stored
-int8 / packed-int4 with per-group scales (quant/kvcache.py layout) or
-bf16. Design for TPU (validated on CPU via interpret=True, like qmatmul):
+with t masked per query: with ``causal=True`` query i sits at absolute
+cache position ``valid_len - qs + i`` and sees rows ``<= valid_len - qs
++ i`` (qs=1 recovers the plain decode mask; qs=K+1 is the speculative
+verify window — all draft positions scored in ONE streaming pass,
+docs/DESIGN.md §11); ``causal=False`` (cross-attention verify) lets
+every query see all ``valid_len`` rows. K/V are stored int8 /
+packed-int4 with per-group scales (quant/kvcache.py layout) or bf16.
+Design for TPU (validated on CPU via interpret=True, like qmatmul):
 
 * Grid (B, S/C) with the KV-chunk dimension innermost: the online-softmax
   running max / normalizer / accumulator live in VMEM scratch and are
@@ -17,14 +24,15 @@ bf16. Design for TPU (validated on CPU via interpret=True, like qmatmul):
   (B, S, F/G): one chunk dequantizes in-register as a single
   (C, F/G, G) * scale broadcast-multiply (int4 is nibble-unpacked with
   shifts/masks first, so HBM traffic is half of int8), then each head's
-  (C, hd) slab feeds a (rep, hd) x (hd, C) MXU dot. The per-head loop is
-  a static python unroll (Hkv is small).
+  (C, hd) slab feeds a (rep*qs, hd) x (hd, C) MXU dot. The per-head loop
+  is a static python unroll (Hkv is small).
 * Per-slot validity: ``valid_len`` (B, 1) int32 rides in SMEM; chunk
-  positions are compared against it so freshly-admitted slots with short
-  prompts never attend to stale cache rows.
+  positions are compared against each query's causal limit so
+  freshly-admitted slots with short prompts never attend to stale cache
+  rows and verify queries never see their own future.
 
 VMEM @ C=256, F=Hkv*hd=4096: data 2x256x4096 = 2MB (int8), scales 32KB,
-scratch (Hkv, rep, hd) f32 ~64KB — well under the ~16MB/core of v5e.
+scratch (Hkv, rep, qs, hd) f32 ~64KB*qs — well under ~16MB/core of v5e.
 """
 
 from __future__ import annotations
@@ -59,7 +67,7 @@ def _dequant(data, scale, *, precision: str, group: int) -> jax.Array:
 def _decode_attn_kernel(valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
                         o_ref, m_ref, l_ref, acc_ref, *, precision: str,
                         group: int, num_kv_heads: int, head_dim: int,
-                        chunk: int, num_chunks: int):
+                        qs: int, causal: bool, chunk: int, num_chunks: int):
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
@@ -71,28 +79,38 @@ def _decode_attn_kernel(valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
     kf = _dequant(kd_ref[0], ks_ref[0], precision=precision, group=group)
     vf = _dequant(vd_ref[0], vs_ref[0], precision=precision, group=group)
     pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
-    mask = pos < valid_ref[0, 0]                               # (1, C)
+    valid = valid_ref[0, 0]
+    if causal:
+        # query i sees rows < valid - qs + 1 + i
+        limit = (valid - qs + 1
+                 + jax.lax.broadcasted_iota(jnp.int32, (qs, 1), 0))
+    else:
+        limit = jnp.full((qs, 1), valid, jnp.int32)
+    mask = pos < limit                                        # (qs, C)
     # zero invalid V rows: their probability is exactly 0, but a padded
     # tail block (ceil-div grid) may hold NaN/garbage and 0 * NaN = NaN
-    vf = jnp.where(mask.reshape(chunk, 1), vf, 0.0)
+    row_valid = (pos < valid).reshape(chunk, 1)
+    vf = jnp.where(row_valid, vf, 0.0)
     inv_sqrt = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
 
-    for h in range(num_kv_heads):                              # static unroll
-        q_h = q_ref[0, h].astype(jnp.float32)                  # (rep, hd)
-        k_h = kf[:, h * head_dim:(h + 1) * head_dim]           # (C, hd)
+    for h in range(num_kv_heads):                             # static unroll
+        q_h = q_ref[0, h].astype(jnp.float32)                 # (rep, qs, hd)
+        rep = q_h.shape[0]
+        k_h = kf[:, h * head_dim:(h + 1) * head_dim]          # (C, hd)
         v_h = vf[:, h * head_dim:(h + 1) * head_dim]
         s_h = jax.lax.dot_general(
-            q_h, k_h, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * inv_sqrt     # (rep, C)
-        s_h = jnp.where(mask, s_h, NEG_INF)
-        m_prev = m_ref[h]                                      # (rep,)
+            q_h.reshape(rep * qs, head_dim), k_h, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * inv_sqrt
+        s_h = s_h.reshape(rep, qs, chunk)
+        s_h = jnp.where(mask[None], s_h, NEG_INF)
+        m_prev = m_ref[h]                                     # (rep, qs)
         m_new = jnp.maximum(m_prev, jnp.max(s_h, axis=-1))
-        p = jnp.exp(s_h - m_new[:, None])                      # (rep, C)
+        p = jnp.exp(s_h - m_new[..., None])                   # (rep, qs, C)
         corr = jnp.exp(m_prev - m_new)
         l_ref[h] = l_ref[h] * corr + jnp.sum(p, axis=-1)
-        acc_ref[h] = acc_ref[h] * corr[:, None] + jax.lax.dot_general(
-            p, v_h, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)                # (rep, hd)
+        acc_ref[h] = acc_ref[h] * corr[..., None] + jax.lax.dot_general(
+            p.reshape(rep * qs, chunk), v_h, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).reshape(rep, qs, head_dim)
         m_ref[h] = m_new
 
     @pl.when(ci == num_chunks - 1)
@@ -103,17 +121,19 @@ def _decode_attn_kernel(valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
 
 @functools.partial(jax.jit, static_argnames=("precision", "group",
                                              "head_dim", "kv_chunk",
-                                             "interpret"))
+                                             "causal", "interpret"))
 def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
                        v_data: jax.Array, v_scale: jax.Array,
                        valid_len: jax.Array, *, precision: str = "int8",
                        group: int = 64, head_dim: int,
                        kv_chunk: int = DEFAULT_KV_CHUNK,
+                       causal: bool = True,
                        interpret: bool = False) -> jax.Array:
-    """q: (B, Hkv, rep, hd) f32/bf16; k/v data: (B, S, F_store) int8 or
+    """q: (B, Hkv, rep, Qs, hd) f32/bf16; k/v data: (B, S, F_store) int8 or
     bf16 (F_store = Hkv*hd, int4: Hkv*hd//2); k/v scale: (B, S, F//group)
-    bf16; valid_len: (B, 1) int32. Returns (B, Hkv, rep, hd) f32."""
-    b, hkv, rep, hd = q.shape
+    bf16; valid_len: (B, 1) int32 rows valid AFTER the Qs query rows were
+    written. Returns (B, Hkv, rep, Qs, hd) f32."""
+    b, hkv, rep, qs, hd = q.shape
     assert hd == head_dim, (q.shape, head_dim)
     s = k_data.shape[1]
     chunk = min(kv_chunk, s)
@@ -125,13 +145,14 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
 
     kernel = functools.partial(
         _decode_attn_kernel, precision=precision, group=group,
-        num_kv_heads=hkv, head_dim=hd, chunk=chunk, num_chunks=nc)
+        num_kv_heads=hkv, head_dim=hd, qs=qs, causal=causal, chunk=chunk,
+        num_chunks=nc)
     return pl.pallas_call(
         kernel,
         grid=(b, nc),
         in_specs=[
             pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
-            pl.BlockSpec((1, hkv, rep, hd), lambda i, c: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hkv, rep, qs, hd), lambda i, c: (i, 0, 0, 0, 0)),
             pl.BlockSpec((1, chunk, k_data.shape[-1]),
                          lambda i, c: (i, c, 0)),
             pl.BlockSpec((1, chunk, ng), lambda i, c: (i, c, 0)),
@@ -139,12 +160,13 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
                          lambda i, c: (i, c, 0)),
             pl.BlockSpec((1, chunk, ng), lambda i, c: (i, c, 0)),
         ],
-        out_specs=pl.BlockSpec((1, hkv, rep, hd), lambda i, c: (i, 0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, hd), jnp.float32),
+        out_specs=pl.BlockSpec((1, hkv, rep, qs, hd),
+                               lambda i, c: (i, 0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, qs, hd), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((hkv, rep), jnp.float32),
-            pltpu.VMEM((hkv, rep), jnp.float32),
-            pltpu.VMEM((hkv, rep, hd), jnp.float32),
+            pltpu.VMEM((hkv, rep, qs), jnp.float32),
+            pltpu.VMEM((hkv, rep, qs), jnp.float32),
+            pltpu.VMEM((hkv, rep, qs, hd), jnp.float32),
         ],
         interpret=interpret,
     )(valid_len, q, k_data, k_scale, v_data, v_scale)

@@ -1,7 +1,10 @@
 """Public entry point for fused decode attention over a (quantized) KV cache.
 
 ``decode_attention(q, k, v, valid_len=...)`` is what the model stack calls
-on the decode hot path. ``k``/``v`` may be:
+on the decode hot path. ``q`` is a single decode token (B, 1, H, hd) or a
+short multi-query verify window (B, K+1, H, hd) — speculative decoding
+scores all draft positions in one streaming pass with per-query causal
+offset masking (docs/DESIGN.md §11). ``k``/``v`` may be:
 
 * ``quant.kvcache.KVPage``   (int8 / packed int4 / bf16 + per-group scales)
 * plain jax.Array            (raw bf16 cache, (B, S, Hkv, hd))
@@ -24,7 +27,7 @@ Set process-wide via ``set_decode_attn_backend`` or the
 ``REPRO_DECODE_KV_CHUNK`` (any width works for any cache length: a
 non-dividing final chunk is read clamped/padded and the extra rows are
 masked out). Both fallbacks are validated against ref.py
-(tests/test_decode_attn.py).
+(tests/test_decode_attn.py, tests/test_spec_decode.py).
 """
 
 from __future__ import annotations
@@ -86,25 +89,33 @@ def _valid_vec(valid_len, b: int, s: int) -> jax.Array:
     return jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
 
 
-def _simple(q, kp: KVPage, vp: KVPage, valid) -> jax.Array:
-    return decode_attn_ref(q, dequantize_kv(kp), dequantize_kv(vp), valid)
+def _simple(q, kp: KVPage, vp: KVPage, valid, causal: bool) -> jax.Array:
+    return decode_attn_ref(q, dequantize_kv(kp), dequantize_kv(vp), valid,
+                           causal=causal)
 
 
-def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int) -> jax.Array:
+def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
+             causal: bool) -> jax.Array:
     """Chunked online-softmax decode attention — the kernel's exact math in
     jnp. Chunks are carved out of the cache in place with dynamic slices
     (no reshaped/transposed copy of the full cache), so temp memory is
-    O(B * Hkv * rep * kv_chunk), never O(S) — for ANY cache length: a
-    non-dividing final chunk is read with a clamped start and the
-    re-visited rows are masked out, so every row contributes exactly
+    O(B * Hkv * rep * S * kv_chunk), never O(S_max) — for ANY cache
+    length: a non-dividing final chunk is read with a clamped start and
+    the re-visited rows are masked out, so every row contributes exactly
     once."""
     b, s, h, d = q.shape
     t, hkv = kp.data.shape[1], kp.num_kv_heads
     rep = h // hkv
     chunk = min(kv_chunk, t)
     nc = -(-t // chunk)                              # ceil-div
-    qh = q.reshape(b, hkv, rep, d).astype(jnp.float32)
+    qh = jnp.moveaxis(q.reshape(b, s, hkv, rep, d), 1, 3)  # (B,Hkv,rep,S,d)
+    qh = qh.astype(jnp.float32)
     inv_sqrt = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    if causal:
+        # query i sees rows < valid - s + 1 + i
+        limit = valid[:, None] - s + 1 + jnp.arange(s)[None, :]   # (B, S)
+    else:
+        limit = jnp.broadcast_to(valid[:, None], (b, s))
 
     def take(page, start):
         return jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
@@ -115,30 +126,31 @@ def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int) -> jax.Array:
         start = jnp.minimum(ci * chunk, t - chunk)   # clamp the last chunk
         kf = dequantize_kv(take(kp, start))          # (B, C, Hkv, hd) f32
         vf = dequantize_kv(take(vp, start))
-        scores = jnp.einsum("bhrd,bchd->bhrc", qh, kf,
+        scores = jnp.einsum("bhrsd,bchd->bhrsc", qh, kf,
                             preferred_element_type=jnp.float32) * inv_sqrt
         pos = start + jnp.arange(chunk)
         # rows re-read by a clamped start were handled by a prior chunk
         fresh = pos >= ci * chunk
-        mask = fresh[None, :] & (pos[None, :] < valid[:, None])   # (B, C)
-        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+        mask = (fresh[None, None, :]
+                & (pos[None, None, :] < limit[:, :, None]))       # (B, S, C)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
         p = jnp.exp(scores - m_new[..., None])
         corr = jnp.exp(m - m_new)
         l_new = l * corr + jnp.sum(p, axis=-1)
-        pv = jnp.einsum("bhrc,bchd->bhrd", p, vf,
+        pv = jnp.einsum("bhrsc,bchd->bhrsd", p, vf,
                         preferred_element_type=jnp.float32)
         return (m_new, l_new, acc * corr[..., None] + pv)
 
-    m0 = jnp.full((b, hkv, rep), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, hkv, rep), jnp.float32)
-    a0 = jnp.zeros((b, hkv, rep, d), jnp.float32)
+    m0 = jnp.full((b, hkv, rep, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, s, d), jnp.float32)
     m, l, acc = jax.lax.fori_loop(0, nc, body, (m0, l0, a0))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)
 
 
-def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
+def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int, causal: bool,
             interpret: bool = False) -> jax.Array:
     b, s, h, d = q.shape
     t, hkv = kp.data.shape[1], kp.num_kv_heads
@@ -154,21 +166,27 @@ def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
 
     kd, ks = flat(kp)
     vd, vs = flat(vp)
+    qk = jnp.moveaxis(q.reshape(b, s, hkv, rep, d), 1, 3)  # (B,Hkv,rep,S,d)
     out = decode_attn_pallas(
-        q.reshape(b, hkv, rep, d), kd, ks, vd, vs, valid[:, None],
+        qk, kd, ks, vd, vs, valid[:, None],
         precision=kp.precision, group=kp.group, head_dim=d,
-        kv_chunk=kv_chunk, interpret=interpret)
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+        kv_chunk=kv_chunk, causal=causal, interpret=interpret)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)
 
 
 def decode_attention(q: jax.Array, k, v, *,
                      valid_len: Optional[jax.Array] = None,
+                     causal: bool = True,
                      backend: Optional[str] = None,
                      kv_chunk: Optional[int] = None) -> jax.Array:
-    """Single-query GQA attention of q (B, 1, H, hd) against a cached
-    K/V (KVPage or raw (B, S, Hkv, hd)); rows >= ``valid_len`` (scalar or
-    per-slot (B,)) are masked. ``backend`` overrides the process-wide
-    selection for this call. Returns (B, 1, H, hd) in q's dtype."""
+    """(Multi-)query GQA attention of q (B, S, H, hd) against a cached
+    K/V (KVPage or raw (B, T, Hkv, hd)). ``valid_len`` (scalar or per-slot
+    (B,)) counts valid cache rows INCLUDING the S freshly-written query
+    rows; with ``causal=True`` query i additionally only sees rows
+    ``< valid_len - S + 1 + i`` (S=1 reduces to the plain decode mask),
+    with ``causal=False`` every query sees all valid rows (cross-attention
+    over precomputed encoder K/V). ``backend`` overrides the process-wide
+    selection for this call. Returns (B, S, H, hd) in q's dtype."""
     backend = _backend if backend is None else backend
     if backend not in BACKENDS:
         raise ValueError(f"unknown decode-attn backend {backend!r}; "
@@ -181,7 +199,7 @@ def decode_attention(q: jax.Array, k, v, *,
     assert kp.precision == vp.precision and kp.group == vp.group, \
         "K and V cache pages must share precision/group"
     b, s, h, d = q.shape
-    assert s == 1, f"decode attention is single-query, got s={s}"
+    assert s >= 1, f"decode attention needs at least one query, got s={s}"
     valid = _valid_vec(valid_len, b, kp.data.shape[1])
     if backend == "pallas" or (backend == "auto" and _use_pallas()):
         if backend == "pallas" and not _use_pallas():
@@ -189,7 +207,7 @@ def decode_attention(q: jax.Array, k, v, *,
                 f"decode-attn backend 'pallas' needs a TPU; running on "
                 f"{jax.default_backend()!r} (use 'grouped' for the "
                 f"identical-math jnp fallback)")
-        return _pallas(q, kp, vp, valid, kv_chunk)
+        return _pallas(q, kp, vp, valid, kv_chunk, causal)
     if backend == "simple":
-        return _simple(q, kp, vp, valid)
-    return _grouped(q, kp, vp, valid, kv_chunk)
+        return _simple(q, kp, vp, valid, causal)
+    return _grouped(q, kp, vp, valid, kv_chunk, causal)

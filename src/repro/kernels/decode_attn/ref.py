@@ -1,9 +1,16 @@
-"""Dense-math oracle for single-query GQA decode attention.
+"""Dense-math oracle for (multi-)query GQA decode attention.
 
-Materializes the full (B, Hkv, rep, 1, S) score tensor — the thing the
+Materializes the full (B, Hkv, rep, S, T) score tensor — the thing the
 fused kernel and its chunked fallback exist to avoid — so it is the
 ground truth the backends are validated against (tests/test_decode_attn.py).
 Operates on raw (dequantized) caches only.
+
+Queries may be a single decode token (S=1) or a short verify window
+(S = K+1 for speculative decoding, docs/DESIGN.md §11). With
+``causal=True`` query i sits at absolute cache position
+``valid_len - S + i`` and attends to rows ``<= valid_len - S + i``;
+with ``causal=False`` (cross-attention verify) every query sees all
+``valid_len`` rows.
 """
 
 from __future__ import annotations
@@ -17,11 +24,12 @@ NEG_INF = -1e30
 
 
 def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
-                    valid_len: Optional[jax.Array] = None) -> jax.Array:
-    """q: (B, 1, H, hd); k/v: (B, S, Hkv, hd); valid_len: scalar or (B,)
-    count of valid cache rows (None = all S). Returns (B, 1, H, hd)."""
+                    valid_len: Optional[jax.Array] = None,
+                    causal: bool = True) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, T, Hkv, hd); valid_len: scalar or (B,)
+    count of valid cache rows INCLUDING the S freshly-written query rows
+    (None = all T). Returns (B, S, H, hd)."""
     b, s, h, d = q.shape
-    assert s == 1, "decode attention is single-query"
     t, hkv = k.shape[1], k.shape[2]
     rep = h // hkv
     qh = q.reshape(b, s, hkv, rep, d)
@@ -29,10 +37,15 @@ def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         k.astype(jnp.float32),
                         preferred_element_type=jnp.float32)
     scores = scores / jnp.sqrt(d).astype(jnp.float32)
-    if valid_len is not None:
-        vl = jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
-        valid = jnp.arange(t)[None, :] < vl[:, None]
-        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    vl = (jnp.full((b,), t, jnp.int32) if valid_len is None
+          else jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,)))
+    if causal:
+        # row limit per query: query i sees rows < vl - s + 1 + i
+        limit = vl[:, None] - s + 1 + jnp.arange(s)[None, :]     # (B, S)
+    else:
+        limit = jnp.broadcast_to(vl[:, None], (b, s))
+    valid = jnp.arange(t)[None, None, :] < limit[:, :, None]     # (B, S, T)
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhrst,bthd->bshrd", probs, v.astype(jnp.float32))
     return out.reshape(b, s, h, d).astype(q.dtype)

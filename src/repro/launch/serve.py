@@ -17,6 +17,12 @@ Compiled-plan artifacts (compile once, serve many — docs/DESIGN.md §8):
   # later runs boot from the artifact: no weight load, no entropy analysis
   python -m repro.launch.serve --arch zamba2-2.7b --smoke \
       --plan-artifact /tmp/zamba_plan
+
+Self-speculative decoding (docs/DESIGN.md §11): ``--spec-k 4`` serves with
+draft-propose/verify rounds — the entropy-ordered all-int4 draft shares
+payloads with the target; ``--check-greedy-parity`` additionally runs the
+non-spec engine on the same requests and asserts token-identical greedy
+output (the CI anchor).
 """
 
 from __future__ import annotations
@@ -69,6 +75,15 @@ def main():
                     help="decode steps per jitted chunk")
     ap.add_argument("--num-slots", type=int, default=4,
                     help="concurrent decode slots")
+    # self-speculative decoding (docs/DESIGN.md §11)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens per round "
+                         "(0 disables; the all-int4 draft is derived from "
+                         "the plan and shares payloads with the target)")
+    ap.add_argument("--check-greedy-parity", action="store_true",
+                    help="with --spec-k: also run the non-spec engine on "
+                         "the same requests and assert token-identical "
+                         "greedy output")
     # mesh-parallel serving (docs/DESIGN.md §9)
     ap.add_argument("--mesh", default=None,
                     help="comma-separated mesh axis names (e.g. data,model): "
@@ -88,6 +103,13 @@ def main():
     elif args.mesh_shape:
         raise SystemExit("--mesh-shape requires --mesh")
 
+    spec = None
+    if args.spec_k > 0:
+        from repro.serving.spec import SpecConfig
+        spec = SpecConfig(k=args.spec_k)
+    elif args.check_greedy_parity:
+        raise SystemExit("--check-greedy-parity requires --spec-k")
+
     requests = None
     max_seq = args.prompt_len + args.max_new
     if args.num_requests > 0:
@@ -96,6 +118,8 @@ def main():
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
             arrival_rate=args.arrival_rate)
         max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    if spec is not None:
+        max_seq += spec.k   # verify-window headroom (engine asserts)
 
     from repro.checkpoint import ckpt
     if args.plan_artifact and ckpt.is_artifact(args.plan_artifact):
@@ -110,7 +134,7 @@ def main():
                  else {"kv_precision": args.kv_precision})
         engine = ServeEngine.from_artifact(model, args.plan_artifact,
                                            max_seq=max_seq, mesh=mesh,
-                                           **kv_kw)
+                                           spec=spec, **kv_kw)
         plan = engine.plan
         print(f"booted from artifact {args.plan_artifact} in "
               f"{time.perf_counter() - t0:.2f}s"
@@ -131,15 +155,20 @@ def main():
                                           kv_precision=kv_precision)
             engine = ServeEngine(model, compiled.params, max_seq=max_seq,
                                  mesh=mesh,
-                                 kv_precision=compiled.kv_plan or "bf16")
+                                 kv_precision=compiled.kv_plan or "bf16",
+                                 spec=spec)
             engine.plan = plan
             if args.plan_artifact:
                 from repro.quant.compiler import save_artifact
+                if spec is not None:
+                    # stamp the draft derivation into the manifest so cold
+                    # boots re-derive the identical draft
+                    compiled.draft = engine._ensure_draft().to_manifest()
                 path = save_artifact(args.plan_artifact, compiled, mesh=mesh)
                 print(f"saved compiled plan artifact to {path}")
         else:
             engine = ServeEngine(model, params, max_seq=max_seq, mesh=mesh,
-                                 kv_precision=kv_precision)
+                                 kv_precision=kv_precision, spec=spec)
 
     raw_bits = 32.0 if cfg.dtype == "float32" else 16.0
     raw_bytes = cfg.param_count() * raw_bits / 8.0
@@ -158,6 +187,12 @@ def main():
         print(f"kv cache: {engine.kv_bytes_per_slot()/2**20:.2f} MiB/slot "
               f"at max_seq={max_seq} ({kv_counts})")
 
+    if spec is not None:
+        print(f"spec decode: k={spec.k}, draft overhead "
+              f"{engine.draft_overhead_bytes()/2**20:.2f} MiB "
+              f"({engine._ensure_draft().shared_blocks} blocks shared, "
+              f"{engine._ensure_draft().requantized_blocks} re-quantized)")
+
     if requests is not None:
         t0 = time.perf_counter()
         outputs, stats = engine.serve(requests, num_slots=args.num_slots,
@@ -167,7 +202,29 @@ def main():
               f"({stats.generated_tokens/dt:.1f} tok/s): "
               f"{stats.num_chunks} chunks x {args.chunk} steps, "
               f"occupancy {stats.occupancy:.1%}, "
-              f"{stats.admissions} mid-run admissions")
+              f"{stats.admissions} mid-run admissions, "
+              f"ttft p50 {stats.ttft_p50_s*1e3:.0f}ms / "
+              f"p95 {stats.ttft_p95_s*1e3:.0f}ms, "
+              f"tpot p50 {stats.tpot_p50_s*1e3:.1f}ms")
+        if spec is not None:
+            print(f"spec: acceptance {stats.acceptance_rate:.1%} "
+                  f"({stats.draft_accepted}/{stats.draft_proposed}), "
+                  f"{stats.tokens_per_round:.2f} tokens/round over "
+                  f"{stats.spec_rounds} rounds")
+        if args.check_greedy_parity:
+            import numpy as np
+            base = ServeEngine(model, engine.params, max_seq=max_seq,
+                               kv_precision=engine.kv_plan or "bf16")
+            base.plan = engine.plan
+            base_outputs, _ = base.serve(requests,
+                                         num_slots=args.num_slots,
+                                         chunk=args.chunk)
+            agree = all(np.array_equal(a.tokens, b.tokens)
+                        for a, b in zip(base_outputs, outputs))
+            print(f"greedy-agree vs non-spec engine: {float(agree):.1f}")
+            if not agree:
+                raise SystemExit("speculative greedy output DIVERGED from "
+                                 "the non-spec engine")
         print("sample:", outputs[0].generated.tolist())
         return
 
@@ -177,6 +234,18 @@ def main():
     out = engine.generate(prompts, args.max_new, chunk=args.chunk)
     print(f"generated {out.tokens.shape[1] - args.prompt_len} tokens/seq; "
           f"mean logprob {float(out.logprobs.mean()):.3f}")
+    if args.check_greedy_parity:
+        import numpy as np
+        base = ServeEngine(model, engine.params, max_seq=max_seq,
+                           kv_precision=engine.kv_plan or "bf16")
+        base.plan = engine.plan
+        ref = base.generate(prompts, args.max_new, chunk=args.chunk)
+        agree = bool(np.array_equal(np.asarray(ref.tokens),
+                                    np.asarray(out.tokens)))
+        print(f"greedy-agree vs non-spec engine: {float(agree):.1f}")
+        if not agree:
+            raise SystemExit("speculative greedy output DIVERGED from the "
+                             "non-spec engine")
     print("sample:", out.tokens[0, -args.max_new:].tolist())
 
 

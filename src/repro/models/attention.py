@@ -107,26 +107,34 @@ def _flatten_gqa_for_sharding(q, k, v):
 
 
 def decode_valid_bias(cache_pos, s: int, t: int):
-    """Additive decode mask marking cache rows past ``cache_pos + s - 1``
-    invalid; broadcastable against (B, Hkv, rep, S, T) scores.
+    """Additive decode mask for ``s`` query positions written at
+    ``cache_pos``: query i (absolute position ``cache_pos + i``) sees cache
+    rows ``<= cache_pos + i`` — per-query causal offset masking, so a
+    speculative verify window (s = K+1, docs/DESIGN.md §11) never attends
+    to its own future. s=1 reduces to the plain decode validity mask.
+    Broadcastable against (B, Hkv, rep, S, T) scores.
 
     Identical for every layer of a decode step, so families compute it ONCE
     per step (``decode_step_bias``) and pass it down instead of rebuilding
     the (T,) iota-compare in each of L layers."""
+    rows = jnp.arange(t)
+    qi = jnp.arange(s)
     if getattr(cache_pos, "ndim", 0) == 1:
-        valid = jnp.arange(t)[None, :] <= (cache_pos[:, None] + s - 1)
-        return jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
-    valid = jnp.arange(t) <= (cache_pos + s - 1)
-    return jnp.where(valid, 0.0, NEG_INF)[None, None, None, None, :]
+        valid = (rows[None, None, :]
+                 <= cache_pos[:, None, None] + qi[None, :, None])  # (B, S, T)
+        return jnp.where(valid, 0.0, NEG_INF)[:, None, None, :, :]
+    valid = rows[None, :] <= (cache_pos + qi[:, None])             # (S, T)
+    return jnp.where(valid, 0.0, NEG_INF)[None, None, None, :, :]
 
 
-def decode_step_bias(cache_k_field, cache_pos):
+def decode_step_bias(cache_k_field, cache_pos, s: int = 1):
     """Per-step hoisted validity bias for a family's stacked cache field
-    ((L, B, S_max, Hkv, hd)). Quantized caches return None — the fused
-    decode kernel masks by position arithmetic instead of a bias tensor."""
+    ((L, B, S_max, Hkv, hd)) and ``s`` query positions. Quantized caches
+    return None — the fused decode kernel masks by position arithmetic
+    instead of a bias tensor."""
     if KV.is_kv_page(cache_k_field):
         return None
-    return decode_valid_bias(cache_pos, 1, cache_k_field.shape[2])
+    return decode_valid_bias(cache_pos, s, cache_k_field.shape[2])
 
 
 def _gqa_scores(q, k):
@@ -250,7 +258,8 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
         if qk_norm:
             q = rms_norm(q, p["q_norm"], norm_eps)
         if KV.is_kv_page(cached_kv.k):
-            out = decode_attention(q, cached_kv.k, cached_kv.v)
+            # non-causal: every (verify) query sees the whole encoder cache
+            out = decode_attention(q, cached_kv.k, cached_kv.v, causal=False)
         else:
             out = _full_attention(q, cached_kv.k, cached_kv.v, 0.0)
         return qdot(out.reshape(b, s, num_heads * head_dim), p["wo"]), None

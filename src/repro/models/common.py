@@ -34,6 +34,24 @@ def decode_positions(pos: jax.Array, b: int, s: int) -> jax.Array:
     return jnp.broadcast_to(pos.astype(jnp.int32)[None, None] + step, (b, s))
 
 
+def select_snapshot(snaps: jax.Array, idx: jax.Array,
+                    batch_axis: int = 2) -> jax.Array:
+    """Per-slot gather over stacked sequential-state snapshots.
+
+    ``snaps`` holds N checkpoints stacked on a new leading axis, so the
+    slot/batch dim sits at ``batch_axis`` of ``snaps`` (2 for the usual
+    (N, L, B, ...) state stack); ``idx`` is a (B,) per-slot snapshot index
+    in [0, N). Returns the un-stacked layout (batch back at
+    ``batch_axis - 1``) with each slot's rows taken from its own
+    snapshot — the SSM-state rollback primitive for speculative decoding
+    (conv/state are O(1) summaries that cannot be rewound by position
+    arithmetic, so the verify scan checkpoints them per step and commit
+    selects per slot; docs/DESIGN.md §11)."""
+    moved = jnp.moveaxis(snaps, batch_axis, 0)       # (B, N, ...)
+    out = jax.vmap(lambda sn, i: sn[i])(moved, idx)  # (B, ...)
+    return jnp.moveaxis(out, 0, batch_axis - 1)
+
+
 # --------------------------------------------------------------------------
 # Initializers
 # --------------------------------------------------------------------------

@@ -20,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.models import attention as A
 from repro.models import mlp as M
-from repro.models.common import (dtype_of, embed_init, embed_lookup, dense_init,
-                                 layer_norm, lm_head, sinusoidal_positions)
+from repro.models.common import (decode_positions, dtype_of, embed_init,
+                                 embed_lookup, dense_init, layer_norm,
+                                 lm_head, sinusoidal_positions)
 from repro.sharding.ctx import constrain, unroll_flag, unshard_fsdp
 
 
@@ -198,16 +199,16 @@ def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
     b, s = tokens.shape
     embed_w = unshard_fsdp(params["embed"])["tok"]
     h = embed_lookup(embed_w, tokens, dtype)
-    # sinusoidal position at cache.pos (scalar, or (B,) per-slot vector)
+    # sinusoidal positions from cache.pos (scalar, or (B,) per-slot vector);
+    # s > 1 is a speculative verify window at consecutive positions
     half = cfg.d_model // 2
     freqs = 1.0 / (10000 ** (jnp.arange(half, dtype=jnp.float32) / half))
-    pos = cache.pos if getattr(cache.pos, "ndim", 0) == 1 \
-        else jnp.broadcast_to(cache.pos, (b,))
-    ang = pos.astype(jnp.float32)[:, None] * freqs[None]        # (B, half)
-    pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)[:, None]
+    pos = decode_positions(cache.pos, b, s)                     # (B, s)
+    ang = pos.astype(jnp.float32)[..., None] * freqs[None, None]
+    pos_emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)  # (B, s, D)
     h = h + pos_emb.astype(dtype)
 
-    valid_bias = A.decode_step_bias(cache.k, cache.pos)
+    valid_bias = A.decode_step_bias(cache.k, cache.pos, s)
 
     def body(h, xs):
         p, k_l, v_l, ck_l, cv_l = xs
@@ -236,6 +237,19 @@ def decode_step(params, cache: EncDecCache, tokens: jax.Array, cfg):
     logits = lm_head(h, embed_w)
     return logits, EncDecCache(k=new_k, v=new_v, cross_k=cache.cross_k,
                                cross_v=cache.cross_v, pos=cache.pos + s)
+
+
+def spec_verify(params, cache: EncDecCache, tokens: jax.Array, cfg):
+    """Fused multi-query verify over the decoder stack (cross-attention is
+    non-causal over the fixed encoder K/V). Same contract as
+    transformer.spec_verify — rollback is position arithmetic."""
+    logits, new_cache = decode_step(params, cache, tokens, cfg)
+    return logits, (new_cache, tokens.shape[1])
+
+
+def spec_commit(snap, committed: jax.Array) -> EncDecCache:
+    cache, s = snap
+    return cache._replace(pos=cache.pos - s + committed)
 
 
 def block_params(params) -> list[Any]:

@@ -248,6 +248,32 @@ def decode_step(params, cache: HybridCache, tokens: jax.Array, cfg):
     return logits, new_cache
 
 
+def spec_verify(params, cache: HybridCache, tokens: jax.Array, cfg):
+    """Score a verify window of ``tokens`` (B, K+1) by scanning single-token
+    decode steps. Rollback is split by state kind (docs/DESIGN.md §11):
+    the shared-attention K/V rows written past the commit point are rolled
+    back by position arithmetic (they stay in memory, masked invalid),
+    while the sequential Mamba2 (conv, state) summaries are checkpointed
+    per step and selected per slot in ``spec_commit``."""
+
+    def body(c, tok):
+        logits, c2 = decode_step(params, c, tok[:, None], cfg)
+        return c2, (logits[:, 0], c2.conv, c2.state)
+
+    final, (lgs, convs, states) = jax.lax.scan(body, cache, tokens.T)
+    convs = jnp.concatenate([cache.conv[None], convs])    # (K+2, L, B, ...)
+    states = jnp.concatenate([cache.state[None], states])
+    return jnp.moveaxis(lgs, 0, 1), (cache, final, convs, states)
+
+
+def spec_commit(snap, committed: jax.Array) -> HybridCache:
+    from repro.models.common import select_snapshot
+    cache0, final, convs, states = snap
+    return final._replace(conv=select_snapshot(convs, committed),
+                          state=select_snapshot(states, committed),
+                          pos=cache0.pos + committed)
+
+
 def block_params(params) -> list[Any]:
     layers = params["layers"]
     num_layers = jax.tree.leaves(layers)[0].shape[0]

@@ -54,6 +54,22 @@ class Model:
     def decode_step(self, params, cache, tokens):
         return self.module.decode_step(params, cache, tokens, self.cfg)
 
+    # ---- speculative verify (docs/DESIGN.md §11) ---------------------------
+    def spec_verify(self, params, cache, tokens):
+        """Score a (B, K+1) verify window against the cache: attention
+        families run ONE fused multi-query decode pass; SSM/hybrid scan
+        single-token steps while checkpointing their sequential state.
+        Returns (logits (B, K+1, V_pad), snap) — pass the snap plus the
+        per-slot committed length to ``spec_commit`` to roll the cache
+        back (position arithmetic over KV rows, snapshot selection over
+        SSM summaries)."""
+        return self.module.spec_verify(params, cache, tokens, self.cfg)
+
+    def spec_commit(self, snap, committed):
+        """Commit ``committed`` (B,) tokens out of a verify window; 0 rolls
+        a slot fully back to its pre-verify cache."""
+        return self.module.spec_commit(snap, committed)
+
     # ---- slotted decode (continuous batching) -----------------------------
     @property
     def cache_batch_axes(self):

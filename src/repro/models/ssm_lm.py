@@ -114,6 +114,32 @@ def decode_step(params, cache: SSMLMCache, tokens: jax.Array, cfg):
                               pos=cache.pos + 1)
 
 
+def spec_verify(params, cache: SSMLMCache, tokens: jax.Array, cfg):
+    """Score a verify window of ``tokens`` (B, K+1) by scanning single-token
+    decode steps, checkpointing the sequential (conv, state) summaries
+    after every step (snapshot 0 = the pre-verify state). The SSM state is
+    O(1) and cannot be rewound by position arithmetic, so ``spec_commit``
+    rolls back by SELECTING each slot's snapshot at its accepted length
+    (docs/DESIGN.md §11). Returns (logits (B, K+1, V_pad), snap)."""
+
+    def body(c, tok):
+        logits, c2 = decode_step(params, c, tok[:, None], cfg)
+        return c2, (logits[:, 0], c2.conv, c2.state)
+
+    _, (lgs, convs, states) = jax.lax.scan(body, cache, tokens.T)
+    convs = jnp.concatenate([cache.conv[None], convs])    # (K+2, L, B, ...)
+    states = jnp.concatenate([cache.state[None], states])
+    return jnp.moveaxis(lgs, 0, 1), (cache, convs, states)
+
+
+def spec_commit(snap, committed: jax.Array) -> SSMLMCache:
+    from repro.models.common import select_snapshot
+    cache, convs, states = snap
+    return SSMLMCache(conv=select_snapshot(convs, committed),
+                      state=select_snapshot(states, committed),
+                      pos=cache.pos + committed)
+
+
 def block_params(params) -> list[Any]:
     layers = params["layers"]
     num_layers = jax.tree.leaves(layers)[0].shape[0]

@@ -205,8 +205,9 @@ def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
                   ("batch", None, None))
     positions = decode_positions(cache.pos, b, s)
     # validity mask is layer-invariant: hoist it out of the per-layer
-    # attention (None for quantized caches — the kernel masks by position)
-    valid_bias = A.decode_step_bias(cache.k, cache.pos)
+    # attention (None for quantized caches — the kernel masks by position;
+    # s > 1 is the speculative verify window with per-query causal offsets)
+    valid_bias = A.decode_step_bias(cache.k, cache.pos, s)
 
     def body(h, xs):
         p_layer, k_l, v_l = xs
@@ -231,6 +232,27 @@ def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
     head_w = unshard_fsdp(params["final"]).get("head", embed_w)
     logits = constrain(lm_head(h, head_w), ("batch", None, "model"))
     return logits, DecodeCache(k=new_k, v=new_v, pos=cache.pos + s)
+
+
+# ---------------------------------------------------------------------------
+# speculative verify (docs/DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def spec_verify(params, cache: DecodeCache, tokens: jax.Array, cfg):
+    """Score a verify window of ``tokens`` (B, K+1) in ONE fused multi-query
+    decode pass. Returns (logits (B, K+1, V_pad), snap); the snap rolls the
+    cache back to any per-slot accepted length via ``spec_commit`` —
+    rollback is pure position arithmetic over the (quantized) KV cache:
+    rows past the commit point stay in memory but are masked invalid."""
+    logits, new_cache = decode_step(params, cache, tokens, cfg)
+    return logits, (new_cache, tokens.shape[1])
+
+
+def spec_commit(snap, committed: jax.Array) -> DecodeCache:
+    """``committed`` (B,) tokens kept out of the verify window (0 rolls a
+    slot all the way back to its pre-verify position)."""
+    cache, s = snap
+    return cache._replace(pos=cache.pos - s + committed)
 
 
 # ---------------------------------------------------------------------------

@@ -32,11 +32,16 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.policy import QuantPlan
-from repro.quant.apply import (SegmentedParams, apply_plan_stacked,
-                               quantize_tree, tree_nbytes)
+from repro.quant.apply import (Segment, SegmentedParams, _quantizable,
+                               apply_plan_stacked, quantize_tree, tree_nbytes)
 from repro.quant.kvcache import DEFAULT_KV_GROUP, KVPlan
 
 ARTIFACT_VERSION = 1
+
+# Block decisions at (or below) these precisions already carry int4-or-lower
+# payloads — a self-speculative draft (docs/DESIGN.md §11) shares them
+# byte-for-byte with the target instead of storing a copy.
+DRAFT_SHARED = ("int4", "int3", "ternary")
 
 # Entropy-weighted weight decision -> KV-cache precision (docs/DESIGN.md
 # §10): layers whose weights tolerate aggressive quantization (low entropy)
@@ -163,6 +168,11 @@ class CompiledPlan:
     plan: QuantPlan
     params: Any
     kv_plan: Optional[KVPlan] = None
+    # self-speculative draft stamp (DraftPlan.to_manifest()): recorded so a
+    # cold boot re-derives the identical draft without re-deciding anything
+    # (the derivation is deterministic given plan + params); the stamped
+    # overhead_bytes is the deployment-memory number (docs/DESIGN.md §11)
+    draft: Optional[dict] = None
 
     def stack_keys(self) -> list[str]:
         return [k for k, v in self.params.items()
@@ -192,6 +202,8 @@ class CompiledPlan:
         }
         if self.kv_plan is not None:
             out["kv_plan"] = self.kv_plan.to_dict()
+        if self.draft is not None:
+            out["draft"] = self.draft
         return out
 
 
@@ -226,6 +238,146 @@ def compile_plan(model, params, plan: QuantPlan, group: int = 128,
                         plan=plan, params=new,
                         kv_plan=compile_kv_plan(cfg, plan, kv_precision,
                                                 kv_group))
+
+
+# ---------------------------------------------------------------------------
+# self-speculative draft plans (docs/DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DraftPlan:
+    """An entropy-ordered all-int4 draft derived from a compiled target.
+
+    ``params`` is a full parameter tree executable by the same model code
+    as the target: blocks the entropy plan already pushed to int4 (or
+    lower) REFERENCE the target's QTensor payloads — the same jax.Arrays,
+    zero extra HBM — while raw/int8 blocks carry a draft-only int4
+    requantization. ``overhead_bytes`` is exactly those draft-only
+    payloads (the manifest number; by construction it is bounded by the
+    int4 size of the blocks it re-quantizes)."""
+    params: Any
+    precisions: tuple[str, ...]     # per-block draft decision (plan order)
+    shared_blocks: int              # decisions sharing target payloads
+    requantized_blocks: int         # decisions with a draft-only int4 copy
+    overhead_bytes: float
+    group: int
+
+    def to_manifest(self) -> dict:
+        return {"precisions": list(self.precisions),
+                "shared_blocks": self.shared_blocks,
+                "requantized_blocks": self.requantized_blocks,
+                "overhead_bytes": float(self.overhead_bytes),
+                "group": self.group}
+
+
+def _draft_tree(tree: Any, group: int, min_ndim: int) -> tuple[Any, float]:
+    """Requantize one block's tree to int4, dequantizing int8 QTensors
+    first; already-aggressive QTensors and ineligible leaves are shared.
+    Returns (draft_tree, draft_only_bytes)."""
+    from repro.quant.qtypes import QTensor
+    from repro.quant.quantize import dequantize, quantize
+    overhead = [0.0]
+
+    def leaf(x):
+        if isinstance(x, QTensor):
+            if x.precision in DRAFT_SHARED:
+                return x                       # shared payload, zero bytes
+            q = quantize(dequantize(x, jnp.float32), "int4", x.group)
+            overhead[0] += q.nbytes_effective()
+            return q
+        if _quantizable(x, group, min_ndim):
+            q = quantize(x, "int4", group)
+            overhead[0] += q.nbytes_effective()
+            return q
+        return x                               # norms/biases: shared raw
+
+    out = jax.tree.map(leaf, tree,
+                       is_leaf=lambda x: isinstance(x, QTensor))
+    return out, overhead[0]
+
+
+def compile_draft_plan(model, params, plan: Optional[QuantPlan],
+                       group: int = 128) -> DraftPlan:
+    """Derive the self-speculative all-int4 draft from a served model.
+
+    ``params`` is the tree the engine serves (compiled: segmented stacks +
+    quantized extras; or raw when ``plan`` is None). The draft derivation
+    rule follows the plan's entropy ordering: every block decision maps to
+    ``min(decision, int4)`` — blocks the entropy analysis already marked
+    aggressive keep their exact payloads (shared, no copy), higher-entropy
+    raw/int8 blocks get a draft-only int4 requantization. With no plan
+    (raw serving) the draft is a uniform int4 copy of every eligible
+    block. Segment boundaries are preserved 1:1 with the target, so the
+    draft executes through the identical segmented scan paths (hybrid unit
+    cuts included) and shares the target's KV-cache layout."""
+    cfg = model.cfg
+    new = dict(params)
+    stacks, extras = family_layout(cfg)
+    overhead = 0.0
+    shared = requant = 0
+    n_blocks = plan_length(cfg)
+    precisions = ["int4"] * n_blocks
+
+    if plan is None:
+        for key, val in params.items():
+            if isinstance(val, SegmentedParams):
+                segs = []
+                for seg in val.segments:
+                    t, ob = _draft_tree(seg.params, group, min_ndim=3)
+                    segs.append(Segment(precision="int4", start=seg.start,
+                                        stop=seg.stop, params=t))
+                    overhead += ob
+                new[key] = SegmentedParams(segments=segs,
+                                           num_layers=val.num_layers)
+            elif key in ("embed", "shared") or any(s.key == key
+                                                   for s in stacks):
+                new[key], ob = _draft_tree(val, group,
+                                           min_ndim=3 if any(
+                                               s.key == key for s in stacks)
+                                           else 2)
+                overhead += ob
+        requant = n_blocks
+        return DraftPlan(params=new, precisions=tuple(precisions),
+                         shared_blocks=0, requantized_blocks=requant,
+                         overhead_bytes=overhead, group=group)
+
+    assert len(plan.decisions) == n_blocks, \
+        (f"plan has {len(plan.decisions)} decisions; family {cfg.family!r} "
+         f"needs {n_blocks}")
+    for spec in stacks:
+        layers = params[spec.key]
+        assert isinstance(layers, SegmentedParams), \
+            (f"draft derivation expects compiled (segmented) stacks; "
+             f"{spec.key!r} is {type(layers).__name__} — compile the plan "
+             f"first (quant/compiler.compile_plan)")
+        segs = []
+        for seg in layers.segments:
+            if seg.precision in DRAFT_SHARED:
+                segs.append(seg)               # payloads shared verbatim
+                shared += seg.stop - seg.start
+                for i in range(seg.start, seg.stop):
+                    precisions[spec.lo + i] = seg.precision
+            else:
+                t, ob = _draft_tree(seg.params, group, min_ndim=3)
+                segs.append(Segment(precision="int4", start=seg.start,
+                                    stop=seg.stop, params=t))
+                overhead += ob
+                requant += seg.stop - seg.start
+        new[spec.key] = SegmentedParams(segments=segs,
+                                        num_layers=layers.num_layers)
+    for spec in extras:
+        prec = plan.decisions[spec.index].precision
+        if prec in DRAFT_SHARED:
+            shared += 1
+            precisions[spec.index] = prec
+        else:
+            new[spec.key], ob = _draft_tree(params[spec.key], group,
+                                            min_ndim=2)
+            overhead += ob
+            requant += 1
+    return DraftPlan(params=new, precisions=tuple(precisions),
+                     shared_blocks=shared, requantized_blocks=requant,
+                     overhead_bytes=overhead, group=group)
 
 
 # ---------------------------------------------------------------------------
@@ -321,4 +473,5 @@ def load_artifact(directory: str, model, *, mesh=None) -> CompiledPlan:
     kv_plan = (KVPlan.from_dict(manifest["kv_plan"])
                if manifest.get("kv_plan") else None)
     return CompiledPlan(family=cfg.family, config_name=cfg.name, group=group,
-                        plan=plan, params=params, kv_plan=kv_plan)
+                        plan=plan, params=params, kv_plan=kv_plan,
+                        draft=manifest.get("draft"))

@@ -39,6 +39,11 @@ class DecodeState(NamedTuple):
     active: jax.Array       # (B,) bool — slot holds a live request
     logprobs: jax.Array     # (B, S_max) f32 — chosen-token logprob per position
     key: jax.Array          # PRNG carry for temperature sampling
+    # per-slot sampling controls — TRACED, so changing them never recompiles
+    # the chunk fn (serving/sampling.py)
+    temperature: jax.Array  # (B,) f32 — 0 = greedy
+    top_k: jax.Array        # (B,) int32 — 0 = disabled
+    top_p: jax.Array        # (B,) f32 — >= 1 = disabled
 
     @property
     def num_slots(self) -> int:
@@ -58,23 +63,29 @@ def init_state(model: Model, num_slots: int, max_seq: int,
         done=jnp.ones((num_slots,), bool),
         active=jnp.zeros((num_slots,), bool),
         logprobs=jnp.zeros((num_slots, max_seq), jnp.float32),
-        key=key)
+        key=key,
+        temperature=jnp.zeros((num_slots,), jnp.float32),
+        top_k=jnp.zeros((num_slots,), jnp.int32),
+        top_p=jnp.ones((num_slots,), jnp.float32))
 
 
 def insert_request(model: Model, state: DecodeState, slot: jax.Array,
                    prompt: jax.Array, prompt_cache: Any,
-                   last_logits: jax.Array, max_new: jax.Array) -> DecodeState:
+                   last_logits: jax.Array, max_new: jax.Array,
+                   temperature=jnp.float32(0.0), top_k=jnp.int32(0),
+                   top_p=jnp.float32(1.0)) -> DecodeState:
     """Admit one prefilled request into ``slot``.
 
     ``prompt``: (P,) int32; ``prompt_cache``/``last_logits`` come from a
     batch=1 prefill (scalar cache pos == P). The whole slot row is reset so
-    nothing leaks from the previous occupant.
+    nothing leaks from the previous occupant. Sampling controls are traced
+    scalars recorded per slot.
     """
     p = prompt.shape[0]
     tokens = state.tokens.at[slot].set(0)
     tokens = jax.lax.dynamic_update_slice(
         tokens, prompt[None].astype(jnp.int32), (slot, 0))
-    return DecodeState(
+    return state._replace(
         cache=model.insert_cache_slot(state.cache, prompt_cache, slot),
         last_logits=state.last_logits.at[slot].set(
             last_logits.reshape(-1).astype(jnp.float32)),
@@ -84,7 +95,34 @@ def insert_request(model: Model, state: DecodeState, slot: jax.Array,
         done=state.done.at[slot].set(False),
         active=state.active.at[slot].set(True),
         logprobs=state.logprobs.at[slot].set(0.0),
-        key=state.key)
+        temperature=state.temperature.at[slot].set(temperature),
+        top_k=state.top_k.at[slot].set(top_k),
+        top_p=state.top_p.at[slot].set(top_p))
+
+
+def commit_tokens(state: DecodeState, cand: jax.Array, cand_lp: jax.Array,
+                  counts: jax.Array) -> DecodeState:
+    """Append up to K+1 tokens per slot in one shot (spec-decode commit).
+
+    ``cand``/``cand_lp``: (B, K+1) candidate tokens and their chosen-token
+    logprobs; ``counts``: (B,) how many leading candidates each slot
+    commits (0 = none — done/empty slots). Candidates land at
+    ``lengths[slot] + j`` via a masked scatter; ``lengths`` advances by
+    ``counts``. The caller handles done flags and cache rollback.
+    """
+    b, kp1 = cand.shape
+    s_max = state.tokens.shape[1]
+    jidx = jnp.arange(kp1)
+    wpos = state.lengths[:, None] + jidx[None, :]              # (B, K+1)
+    write = jidx[None, :] < counts[:, None]
+    tokens, logprobs = state.tokens, state.logprobs
+    for j in range(kp1):                                       # static, small
+        at = jnp.arange(s_max)[None, :] == wpos[:, j][:, None]
+        w = at & write[:, j][:, None]
+        tokens = jnp.where(w, cand[:, j][:, None], tokens)
+        logprobs = jnp.where(w, cand_lp[:, j][:, None], logprobs)
+    return state._replace(tokens=tokens, logprobs=logprobs,
+                          lengths=state.lengths + counts.astype(jnp.int32))
 
 
 def release_slot(state: DecodeState, slot: jax.Array) -> DecodeState:

@@ -13,7 +13,9 @@ Engine structure:
   * the decode loop is ONE jitted ``lax.scan`` over a chunk of token steps
     (``_make_chunk_fn``): masked sampling, per-slot stop conditions (EOS /
     max-new-tokens), per-slot cache positions. No per-token Python
-    dispatch; one compile per (chunk, num_slots, temperature).
+    dispatch; one compile per (chunk, num_slots) — sampling controls
+    (temperature / top-k / top-p) are traced per-slot state, never
+    compile keys.
   * ``serve`` runs continuous batching: between chunks the host-side
     Scheduler admits queued requests into freed slots (each admission is a
     batch=1 prefill + jitted slot insert) and harvests finished ones.
@@ -41,12 +43,22 @@ the GQA sequence-shard fallback), and traces every jitted path (fused
 prefill, chunked decode scan, slot insert/evict) under
 ``activation_sharding(mesh)`` so the model-code constraints resolve. A
 mesh-less engine is byte-for-byte the old single-device path.
+
+Self-speculative decoding (docs/DESIGN.md §11): pass
+``spec=SpecConfig(k=...)`` and decode runs draft-propose / target-verify
+rounds instead of single-token steps — the entropy-ordered all-int4 draft
+(compile_draft_plan; payloads shared with the target for blocks the plan
+already quantized aggressively) proposes k tokens, the target scores the
+whole window in one fused multi-query pass, and the per-slot cache
+position rolls back to the accepted prefix inside the jitted scan. Greedy
+spec serving is token-identical to the non-spec engine.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -56,8 +68,10 @@ import numpy as np
 from repro.core.policy import QuantPlan
 from repro.models.model import Model
 from repro.serving import batch as B
+from repro.serving import sampling as S
 from repro.serving.quantized import apply_plan_to_params
 from repro.serving.scheduler import Request, RequestOutput, Scheduler
+from repro.serving.spec import SpecConfig
 
 DEFAULT_CHUNK = 8
 
@@ -78,6 +92,17 @@ class ServeStats:
     num_chunks: int
     admissions: int            # continuous-batching refills: requests
                                # admitted while others were mid-decode
+    # request latency (wall-clock; chunk-granular attribution)
+    ttft_p50_s: float = 0.0    # time to first token, admission -> first chunk
+    ttft_p95_s: float = 0.0    #   that contains a generated token
+    tpot_p50_s: float = 0.0    # per-output-token latency after the first
+    tpot_p95_s: float = 0.0
+    # speculative decoding (spec=SpecConfig(...) engines only)
+    spec_rounds: int = 0       # draft-propose/verify rounds executed
+    draft_proposed: int = 0    # draft tokens proposed to live slots
+    draft_accepted: int = 0    # draft tokens verified AND committed
+    acceptance_rate: float = 0.0   # accepted / proposed (realized uplift)
+    tokens_per_round: float = 0.0  # committed tokens per live round
 
 
 class ServeEngine:
@@ -85,7 +110,8 @@ class ServeEngine:
                  plan: Optional[QuantPlan] = None, group: int = 128,
                  eos_id: Optional[int] = None, pad_id: int = 0,
                  mesh=None, kv_precision="bf16",
-                 kv_group: Optional[int] = None):
+                 kv_group: Optional[int] = None,
+                 spec: Optional[SpecConfig] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
@@ -93,6 +119,9 @@ class ServeEngine:
         self.eos_id = eos_id
         self.pad_id = pad_id
         self.mesh = mesh
+        self.spec = spec
+        self._draft = None         # compiled lazily (plan may be set late)
+        self._draft_stamp = None   # artifact manifest "draft" (from_artifact)
         if plan is not None:
             params = apply_plan_to_params(model, params, plan, group)
         if mesh is not None:
@@ -201,6 +230,7 @@ class ServeEngine:
         engine = cls(model, compiled.params, max_seq=max_seq, plan=None,
                      mesh=mesh, **kw)
         engine.plan = compiled.plan
+        engine._draft_stamp = compiled.draft   # validated by _ensure_draft
         return engine
 
     # -- prefill -------------------------------------------------------------
@@ -260,13 +290,18 @@ class ServeEngine:
         return self._prefill(prompts)
 
     # -- fused chunked decode loop -------------------------------------------
-    def _make_chunk_fn(self, steps: int, temperature: float):
+    def _make_chunk_fn(self, steps: int):
         """One jitted scan over ``steps`` token positions.
 
         Per step: masked sampling from each slot's last logits (done or
         empty slots emit pad and do not advance), scatter the chosen token
         and its logprob at ``lengths[slot]``, update per-slot stop
         conditions, then one batched decode_step for the next logits.
+
+        Sampling controls (temperature / top-k / top-p) ride in the state
+        as TRACED per-slot vectors (serving/sampling.py), so there is
+        exactly one compile per (chunk, num_slots) — changing sampling
+        params never retriggers XLA compilation.
         """
         vocab = self.cfg.vocab_size
         eos_id, pad_id = self.eos_id, self.pad_id
@@ -276,10 +311,8 @@ class ServeEngine:
             lp = jax.nn.log_softmax(
                 st.last_logits[:, :vocab].astype(jnp.float32), -1)
             key, sub = jax.random.split(st.key)
-            if temperature > 0:
-                nxt = jax.random.categorical(sub, lp / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(lp, axis=-1)
+            dist = S.masked_dist(lp, st.temperature, st.top_k, st.top_p)
+            nxt = S.sample(sub, dist, st.temperature)
             chosen_lp = jnp.take_along_axis(lp, nxt[:, None], 1)[:, 0]
             advance = st.active & ~st.done
             nxt = jnp.where(advance, nxt, pad_id).astype(jnp.int32)
@@ -292,10 +325,10 @@ class ServeEngine:
             if eos_id is not None:
                 done = done | (advance & (nxt == eos_id))
             logits, cache = model.decode_step(params, st.cache, nxt[:, None])
-            return B.DecodeState(
+            return st._replace(
                 cache=cache, last_logits=logits[:, 0].astype(jnp.float32),
-                tokens=tokens, lengths=lengths, max_len=st.max_len,
-                done=done, active=st.active, logprobs=logprobs, key=key), None
+                tokens=tokens, lengths=lengths, done=done,
+                logprobs=logprobs, key=key), None
 
         mesh = self.mesh
 
@@ -309,16 +342,73 @@ class ServeEngine:
 
         return self._traced(jax.jit(run))
 
-    def _chunk_fn(self, steps: int, temperature: float):
-        key = (steps, float(temperature))
+    def _chunk_fn(self, steps: int):
+        if steps not in self._chunk_fns:
+            self._chunk_fns[steps] = self._make_chunk_fn(steps)
+        return self._chunk_fns[steps]
+
+    # -- self-speculative decoding (docs/DESIGN.md §11) ----------------------
+    def _ensure_draft(self):
+        """Compile the all-int4 draft lazily (engine.plan may be assigned
+        after construction, e.g. ``from_artifact``)."""
+        if self._draft is None:
+            from repro.quant.compiler import compile_draft_plan
+            draft = compile_draft_plan(self.model, self.params, self.plan,
+                                       self.spec.draft_group)
+            stamp = self._draft_stamp
+            if stamp and stamp.get("group") == self.spec.draft_group:
+                # cold boot must re-derive the exact stamped draft; a
+                # different draft_group is an explicit operator override
+                if list(draft.precisions) != stamp.get("precisions"):
+                    raise ValueError(
+                        "artifact draft stamp mismatch: re-derived draft "
+                        f"precisions {list(draft.precisions)} != stamped "
+                        f"{stamp.get('precisions')} — the artifact's plan "
+                        "and the serving engine's plan disagree")
+            if self.mesh is not None:
+                from repro.sharding.specs import serving_param_shardings
+                # shared leaves are already placed (no-op); only the
+                # draft-only int4 copies actually move
+                draft.params = jax.device_put(
+                    draft.params,
+                    serving_param_shardings(draft.params, self.mesh))
+            self._draft = draft
+        return self._draft
+
+    @property
+    def draft_params(self):
+        return self._ensure_draft().params
+
+    def draft_overhead_bytes(self) -> float:
+        """Draft-only weight bytes (blocks the plan left raw/int8, re-
+        quantized to int4 for the draft); everything else is shared with
+        the target byte-for-byte."""
+        return float(self._ensure_draft().overhead_bytes)
+
+    def _spec_fn(self, rounds: int):
+        key = ("spec", rounds)
         if key not in self._chunk_fns:
-            self._chunk_fns[key] = self._make_chunk_fn(steps, temperature)
+            from repro.serving.spec import make_spec_round
+            run = make_spec_round(self.model, self.spec.k, rounds,
+                                  self.eos_id, self.mesh)
+            self._chunk_fns[key] = self._traced(jax.jit(run))
         return self._chunk_fns[key]
 
+    def _spec_budget_check(self, prompt_len: int, max_new: int):
+        """Spec verify writes k+1 cache rows starting at each slot's
+        position; the deepest speculative write is ``max_len - 1 + k``,
+        which must stay inside the cache."""
+        need = prompt_len + max_new + self.spec.k
+        assert need <= self.max_seq, \
+            (f"speculative serving needs max_seq >= prompt + max_new + k "
+             f"= {need} (k={self.spec.k} verify headroom); max_seq is "
+             f"{self.max_seq}")
+
     def _insert_impl(self, state, slot, prompt, prompt_cache, last_logits,
-                     max_new):
+                     max_new, temperature, top_k, top_p):
         state = B.insert_request(self.model, state, slot, prompt,
-                                 prompt_cache, last_logits, max_new)
+                                 prompt_cache, last_logits, max_new,
+                                 temperature, top_k, top_p)
         if self.mesh is not None:
             state = B.constrain_state(state, self.mesh)
         return state
@@ -330,19 +420,12 @@ class ServeEngine:
         return state
 
     # -- generation (compat wrapper: single batch == one drain) ---------------
-    def generate(self, prompts: jax.Array, max_new_tokens: int,
-                 temperature: float = 0.0,
-                 key: Optional[jax.Array] = None,
-                 chunk: Optional[int] = None,
-                 frames: Optional[jax.Array] = None) -> GenerateResult:
-        if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens must be >= 1, got "
-                             f"{max_new_tokens}")
-        if chunk is not None and chunk < 1:
-            raise ValueError(f"chunk must be >= 1, got {chunk}")
+    def _batch_state(self, prompts, frames, max_new_tokens, temperature,
+                     top_k, top_p, key) -> B.DecodeState:
+        """Fixed-batch DecodeState for generate()'s decode modes (identical
+        for spec and baseline: full-prompt prefill, ``pos == lengths`` —
+        the spec loop recognizes that as a *fresh* slot)."""
         b, p = prompts.shape
-        total = p + max_new_tokens
-        assert total <= self.max_seq, (total, self.max_seq)
         cache, last_logits = self.prefill(prompts, frames)
         cache = cache._replace(pos=jnp.full((b,), p, jnp.int32))
         # quantize-on-insert: prefill ran bf16; the decode carry is pages
@@ -350,24 +433,60 @@ class ServeEngine:
         tokens = jnp.zeros((b, self.max_seq), jnp.int32)
         tokens = jax.lax.dynamic_update_slice(
             tokens, prompts.astype(jnp.int32), (0, 0))
-        state = B.DecodeState(
+        return B.DecodeState(
             cache=cache, last_logits=last_logits.astype(jnp.float32),
             tokens=tokens,
             lengths=jnp.full((b,), p, jnp.int32),
-            max_len=jnp.full((b,), total, jnp.int32),
+            max_len=jnp.full((b,), p + max_new_tokens, jnp.int32),
             done=jnp.zeros((b,), bool),
             active=jnp.ones((b,), bool),
             logprobs=jnp.zeros((b, self.max_seq), jnp.float32),
-            key=key if key is not None else jax.random.PRNGKey(0))
+            key=key if key is not None else jax.random.PRNGKey(0),
+            temperature=jnp.full((b,), temperature, jnp.float32),
+            top_k=jnp.full((b,), top_k, jnp.int32),
+            top_p=jnp.full((b,), top_p, jnp.float32))
+
+    def generate(self, prompts: jax.Array, max_new_tokens: int,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None,
+                 chunk: Optional[int] = None,
+                 frames: Optional[jax.Array] = None,
+                 top_k: int = 0, top_p: float = 1.0) -> GenerateResult:
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        b, p = prompts.shape
+        total = p + max_new_tokens
+        spec = self.spec is not None
+        if spec:
+            self._spec_budget_check(p, max_new_tokens)
+        else:
+            assert total <= self.max_seq, (total, self.max_seq)
+        state = self._batch_state(prompts, frames, max_new_tokens,
+                                  temperature, top_k, top_p, key)
         state = self._shard_state(state)
         chunk = max_new_tokens if chunk is None else min(chunk, max_new_tokens)
-        fn = self._chunk_fn(chunk, temperature)
-        steps = 0
-        while True:
-            state = fn(self.params, state)
-            steps += chunk
-            if steps >= max_new_tokens or bool(state.done.all()):
-                break
+        if spec:
+            # each live round commits >= 1 token, so max_new rounds suffice
+            fn = self._spec_fn(chunk)
+            draft_params = self.draft_params
+            rounds = 0
+            while True:
+                state, m = fn(self.params, draft_params, state)
+                rounds += chunk
+                if bool(state.done.all()) or rounds >= max_new_tokens:
+                    break
+            steps = rounds
+        else:
+            fn = self._chunk_fn(chunk)
+            steps = 0
+            while True:
+                state = fn(self.params, state)
+                steps += chunk
+                if steps >= max_new_tokens or bool(state.done.all()):
+                    break
         return GenerateResult(tokens=state.tokens[:, :total],
                               logprobs=state.logprobs[:, p:total],
                               steps=steps)
@@ -416,25 +535,41 @@ class ServeEngine:
         Between decode chunks, finished slots are harvested and queued
         requests (arrival_step <= clock) are admitted into freed slots.
         Returns outputs ordered by request id plus occupancy statistics.
+
+        Per-request sampling controls (``Request.temperature/top_k/top_p``)
+        override the call-level ``temperature`` default; they are traced,
+        so a stream mixing greedy and nucleus requests still compiles one
+        chunk fn. With ``spec=SpecConfig(...)`` each chunk runs ``chunk``
+        draft-propose/verify ROUNDS (1..k+1 tokens committed per live
+        round) and the stats report acceptance counters.
         """
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        spec = self.spec is not None
         sched = Scheduler(num_slots)
         for r in requests:
-            assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
+            if spec:
+                self._spec_budget_check(len(r.prompt), r.max_new_tokens)
+            else:
+                assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
             sched.submit(r)
         state = B.init_state(
             self.model, num_slots, self.max_seq,
             key if key is not None else jax.random.PRNGKey(0))
         state = self._shard_state(state._replace(
             cache=self._kv_wrap(state.cache)))
-        fn = self._chunk_fn(chunk, temperature)
+        if spec:
+            fn = self._spec_fn(chunk)
+            draft_params = self.draft_params
+        else:
+            fn = self._chunk_fn(chunk)
         clock = 0
         occupancy: list[float] = []
         admissions = 0
         generated = 0
+        spec_m = {"proposed": 0, "accepted": 0, "committed": 0, "rounds": 0}
         while not sched.all_done():
             for slot in sched.free_slots():
                 req = sched.next_ready(clock)
@@ -443,9 +578,17 @@ class ServeEngine:
                 prompt = jnp.asarray(req.prompt, jnp.int32)
                 frames = (jnp.asarray(req.frames)[None]
                           if req.frames is not None else None)
+                # admission is baseline-identical even under spec: the spec
+                # loop recognizes pos == lengths as a fresh slot and takes
+                # the first candidate dist from these prefill logits
                 cache1, logits1 = self.prefill(prompt[None], frames)
+                temp = (req.temperature if req.temperature is not None
+                        else temperature)
                 state = self._insert(state, jnp.int32(slot), prompt, cache1,
-                                     logits1, jnp.int32(req.max_new_tokens))
+                                     logits1, jnp.int32(req.max_new_tokens),
+                                     jnp.float32(temp),
+                                     jnp.int32(req.top_k),
+                                     jnp.float32(req.top_p))
                 # a refill = joining a batch that is already mid-decode
                 if occupancy and sched.num_active > 0:
                     admissions += 1
@@ -457,10 +600,18 @@ class ServeEngine:
                 clock = max(clock + 1, nxt)   # idle: fast-forward the clock
                 continue
             occupancy.append(sched.num_active / num_slots)
-            state = fn(self.params, state)
+            if spec:
+                state, m = fn(self.params, draft_params, state)
+                for k_, v in m._asdict().items():
+                    spec_m[k_] += int(v)
+            else:
+                state = fn(self.params, state)
             clock += chunk
             done_np, len_np = jax.device_get((state.done, state.lengths))
+            now = time.perf_counter()
             for slot, req in sched.active_slots():
+                if len_np[slot] > len(req.prompt):
+                    sched.mark_first_token(slot, now)
                 if not done_np[slot]:
                     continue
                 n = int(len_np[slot])
@@ -473,11 +624,26 @@ class ServeEngine:
                 state = self._release(state, jnp.int32(slot))
                 generated += n - len(req.prompt)
         outputs = sorted(sched.finished, key=lambda o: o.rid)
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+
+        ttfts = [o.ttft_s for o in outputs if o.ttft_s is not None]
+        tpots = [o.tpot_s for o in outputs if o.tpot_s is not None]
         stats = ServeStats(
             decode_steps=len(occupancy) * chunk,
             generated_tokens=generated,
             occupancy=float(np.mean(occupancy)) if occupancy else 0.0,
-            num_chunks=len(occupancy), admissions=admissions)
+            num_chunks=len(occupancy), admissions=admissions,
+            ttft_p50_s=pct(ttfts, 50), ttft_p95_s=pct(ttfts, 95),
+            tpot_p50_s=pct(tpots, 50), tpot_p95_s=pct(tpots, 95),
+            spec_rounds=spec_m["rounds"],
+            draft_proposed=spec_m["proposed"],
+            draft_accepted=spec_m["accepted"],
+            acceptance_rate=(spec_m["accepted"] / spec_m["proposed"]
+                             if spec_m["proposed"] else 0.0),
+            tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
+                              if spec_m["rounds"] else 0.0))
         return outputs, stats
 
     # -- diagnostics -----------------------------------------------------------
@@ -496,18 +662,31 @@ class ServeEngine:
         return float(sum(kv_field_nbytes(getattr(cache, name))
                          for name in self.model.kv_cache_fields))
 
-    def weight_bytes(self) -> float:
+    @staticmethod
+    def _tree_weight_bytes(params) -> float:
         from repro.quant.apply import tree_nbytes
         from repro.quant.apply import SegmentedParams
         total = 0.0
         for v in jax.tree.leaves(
-                self.params,
+                params,
                 is_leaf=lambda x: isinstance(x, SegmentedParams)):
             if isinstance(v, SegmentedParams):
                 total += v.nbytes_effective()
             else:
                 total += tree_nbytes(v)
         return total
+
+    def weight_bytes(self) -> float:
+        return self._tree_weight_bytes(self.params)
+
+    def draft_weight_bytes(self) -> float:
+        """Effective bytes ONE draft decode step reads (shared int4
+        payloads + draft-only copies) — the numerator of the
+        weight-bytes-per-committed-token uplift estimate: decode is
+        weight-bytes-bound, so spec serving reads
+        ``(target + k * draft) / tokens_per_round`` bytes per token vs
+        ``target`` for the baseline."""
+        return self._tree_weight_bytes(self.draft_params)
 
     def weight_bytes_per_device(self) -> float:
         """Max physical weight bytes resident on any single device.

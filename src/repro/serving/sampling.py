@@ -1,0 +1,83 @@
+"""Masked sampling for the chunked decode loop and the spec-decode
+rejection resampler.
+
+All controls are TRACED values, so changing sampling parameters never
+retriggers XLA compilation (the engine compiles one chunk fn per
+(chunk, num_slots) — temperature/top-k/top-p ride in ``DecodeState`` as
+per-slot vectors):
+
+* ``temperature`` — 0 means greedy (argmax);
+* ``top_k``       — keep the k highest-probability tokens (0 disables);
+* ``top_p``       — nucleus sampling: keep the smallest prefix of the
+  probability-sorted vocab whose cumulative mass reaches p (>= 1.0
+  disables; the top-1 token is always kept).
+
+``masked_dist`` is the single source of truth for "the distribution a
+request actually samples from": the spec-decode draft proposes from it and
+the verifier's acceptance test + residual resampling use it for the target
+(speculative sampling is only exact when p and q are the post-masking,
+post-temperature distributions — docs/DESIGN.md §11).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+_MIN_TEMP = 1e-6
+
+
+def masked_dist(lp: jax.Array, temperature: jax.Array, top_k: jax.Array,
+                top_p: jax.Array) -> jax.Array:
+    """Masked + temperature-scaled log-distribution.
+
+    ``lp``: (..., V) normalized log-probs; each control is broadcastable
+    against ``lp[..., 0]`` (per-slot (B,) vectors for a (B, V) step;
+    ``temp[:, None]`` etc. for a (B, K+1, V) verify window). Returns the
+    normalized log-probs of the ACTUAL sampling distribution; greedy
+    entries (temperature == 0) keep their unscaled masked dist (the argmax
+    is mask/temperature-invariant)."""
+    v = lp.shape[-1]
+    shape = jnp.broadcast_shapes(lp.shape[:-1], jnp.shape(temperature),
+                                 jnp.shape(top_k), jnp.shape(top_p))
+
+    def ctl(x):
+        return jnp.broadcast_to(x, shape)[..., None]        # (..., 1)
+
+    lp = jnp.broadcast_to(lp, shape + (v,))
+    temp, tk, tp = ctl(temperature), ctl(top_k), ctl(top_p)
+
+    def apply_masks(lp_in):
+        sorted_lp = jnp.sort(lp_in, axis=-1)[..., ::-1]     # descending
+        # top-k: threshold at the k-th largest log-prob
+        kth = jnp.take_along_axis(sorted_lp, jnp.clip(tk - 1, 0, v - 1),
+                                  axis=-1)
+        keep = (tk <= 0) | (lp_in >= kth)
+        # top-p: keep the smallest prefix of sorted probs with mass >= p
+        # (exclusive cumsum < p always keeps the top token)
+        sp = jnp.exp(sorted_lp)
+        cum = jnp.cumsum(sp, axis=-1) - sp
+        n_keep = jnp.sum(cum < tp, axis=-1, keepdims=True)
+        pth = jnp.take_along_axis(sorted_lp, jnp.clip(n_keep - 1, 0, v - 1),
+                                  axis=-1)
+        keep &= (tp >= 1.0) | (lp_in >= pth)
+        return jnp.where(keep, lp_in, NEG_INF)
+
+    # the O(V log V) sort/cumsum only runs when some entry actually masks —
+    # a pure-greedy/plain-temperature stream pays one `any` per step, not a
+    # full-vocab sort (controls are traced, so this is a runtime branch)
+    need = jnp.any(top_k > 0) | jnp.any(jnp.asarray(top_p) < 1.0)
+    masked = jax.lax.cond(need, apply_masks, lambda x: x, lp)
+    scaled = jnp.where(temp > 0, masked / jnp.maximum(temp, _MIN_TEMP),
+                       masked)
+    return jax.nn.log_softmax(scaled, axis=-1)
+
+
+def sample(key: jax.Array, dist: jax.Array, temperature: jax.Array
+           ) -> jax.Array:
+    """Draw one token per entry from a ``masked_dist`` output (..., V);
+    greedy entries take the argmax. Returns (...,) int32."""
+    stoch = jax.random.categorical(key, dist, axis=-1)
+    return jnp.where(temperature > 0, stoch,
+                     jnp.argmax(dist, axis=-1)).astype(jnp.int32)

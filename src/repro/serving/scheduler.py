@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from typing import Optional
 
 import numpy as np
@@ -25,6 +26,11 @@ class Request:
     max_new_tokens: int
     arrival_step: int = 0         # decode-step clock at which it may be admitted
     frames: Optional[np.ndarray] = None  # (S_enc, D) encoder frames (enc-dec)
+    # per-request sampling controls (serving/sampling.py) — traced by the
+    # engine, so mixing them in one stream never recompiles the chunk fn
+    temperature: Optional[float] = None  # None: use serve()'s default
+    top_k: int = 0                       # 0: disabled
+    top_p: float = 1.0                   # >= 1: disabled
 
 
 @dataclasses.dataclass
@@ -36,6 +42,10 @@ class RequestOutput:
     finish_reason: str            # "eos" | "length"
     admitted_step: int
     finished_step: int
+    # wall-clock latency (chunk-granular: the engine marks the first chunk
+    # whose harvest shows generated tokens; None when never marked)
+    ttft_s: Optional[float] = None       # admission -> first generated token
+    tpot_s: Optional[float] = None       # per-token after the first
 
     @property
     def generated(self) -> np.ndarray:
@@ -50,6 +60,8 @@ class Scheduler:
         self._queue: list[tuple[int, int, Request]] = []  # (arrival, rid, req)
         self._slots: list[Optional[Request]] = [None] * num_slots
         self._admitted_step: dict[int, int] = {}
+        self._admitted_wall: dict[int, float] = {}
+        self._first_token_wall: dict[int, float] = {}
         self.finished: list[RequestOutput] = []
 
     # -- queue --------------------------------------------------------------
@@ -70,6 +82,14 @@ class Scheduler:
         assert self._slots[slot] is None, f"slot {slot} busy"
         self._slots[slot] = req
         self._admitted_step[req.rid] = clock
+        self._admitted_wall[req.rid] = time.perf_counter()
+
+    def mark_first_token(self, slot: int, t: float) -> None:
+        """Record the wall time of the first chunk whose harvest shows
+        generated tokens for ``slot`` (TTFT attribution; idempotent)."""
+        req = self._slots[slot]
+        if req is not None and req.rid not in self._first_token_wall:
+            self._first_token_wall[req.rid] = t
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self._slots) if r is None]
@@ -82,11 +102,19 @@ class Scheduler:
         req = self._slots[slot]
         assert req is not None
         self._slots[slot] = None
+        admit_wall = self._admitted_wall.pop(req.rid, None)
+        first_wall = self._first_token_wall.pop(req.rid, None)
+        ttft = tpot = None
+        if admit_wall is not None and first_wall is not None:
+            ttft = first_wall - admit_wall
+            n_after_first = len(tokens) - len(req.prompt) - 1
+            if n_after_first > 0:   # single-token outputs have no tpot
+                tpot = (time.perf_counter() - first_wall) / n_after_first
         out = RequestOutput(
             rid=req.rid, tokens=tokens, prompt_len=len(req.prompt),
             logprobs=logprobs, finish_reason=finish_reason,
             admitted_step=self._admitted_step.pop(req.rid),
-            finished_step=clock)
+            finished_step=clock, ttft_s=ttft, tpot_s=tpot)
         self.finished.append(out)
         return out
 

@@ -1,0 +1,14 @@
+"""Entropy-guided self-speculative decoding (docs/DESIGN.md §11).
+
+The quantized model drafts for itself: an entropy-ordered all-int4
+variant of the served weights (quant/compiler.compile_draft_plan — blocks
+the plan already pushed to int4 share payloads byte-for-byte) proposes K
+tokens per round, and the mixed-precision target scores the whole window
+in one fused multi-query decode pass, accepting the longest matching
+prefix and rolling the KV cache back by pure position arithmetic.
+"""
+
+from repro.serving.spec.loop import (SpecConfig, SpecMetrics,
+                                     make_spec_round, spec_round)
+
+__all__ = ["SpecConfig", "SpecMetrics", "make_spec_round", "spec_round"]

@@ -253,5 +253,15 @@ def to_shardings(spec_tree: Any, mesh: Mesh) -> Any:
 
 def serving_param_shardings(params: Any, mesh: Mesh) -> Any:
     """NamedSharding tree for TP-only serving placement of a (possibly
-    segmented/quantized) parameter tree (docs/DESIGN.md §9)."""
+    segmented/quantized) parameter tree (docs/DESIGN.md §9).
+
+    Also used for self-speculative DRAFT trees (docs/DESIGN.md §11):
+    path-keyed rules give a shared leaf the same spec it got in the
+    target tree, so ``device_put`` on an already-placed shared payload is
+    a no-op (no duplicate device buffers) and only the draft-only int4
+    copies actually move. Spec-decode verify activations need no new
+    rules either: the (B, K+1, H, hd) multi-query q/out tensors ride the
+    same ("batch", None, "model", None) constraints as single-query
+    decode, and KV writes keep the ``cache_specs`` layout — the verify
+    window only changes the (unsharded) sequence extent of the write."""
     return to_shardings(param_specs(params, mesh, serving=True), mesh)

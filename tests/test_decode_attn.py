@@ -90,7 +90,7 @@ def test_pallas_kernel_matches_ref_interpret(precision, s, kv_chunk):
     kd, ks = flat(kp)
     vd, vs = flat(vp)
     got = decode_attn_pallas(
-        q.reshape(b, hkv, rep, hd), kd, ks, vd, vs, valid[:, None],
+        q.reshape(b, hkv, rep, 1, hd), kd, ks, vd, vs, valid[:, None],
         precision=precision, group=kp.group, head_dim=hd, kv_chunk=kv_chunk,
         interpret=True)
     np.testing.assert_allclose(np.asarray(got).reshape(ref.shape),

@@ -105,8 +105,11 @@ def test_masked_sampling_never_advances_done_slots(tiny):
         done=jnp.array([True, False]),               # slot 0 already done
         active=jnp.array([True, True]),
         logprobs=jnp.zeros((2, 24), jnp.float32),
-        key=jax.random.PRNGKey(0))
-    out = engine._chunk_fn(4, 0.0)(engine.params, state)
+        key=jax.random.PRNGKey(0),
+        temperature=jnp.zeros((2,), jnp.float32),
+        top_k=jnp.zeros((2,), jnp.int32),
+        top_p=jnp.ones((2,), jnp.float32))
+    out = engine._chunk_fn(4)(engine.params, state)
     # done slot: frozen buffers, zero logprobs written
     np.testing.assert_array_equal(np.asarray(out.tokens[0]),
                                   np.asarray(state.tokens[0]))

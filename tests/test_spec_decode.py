@@ -1,0 +1,305 @@
+"""Entropy-guided self-speculative decoding (docs/DESIGN.md §11).
+
+Anchor invariant: greedy speculative serve() emits TOKEN-IDENTICAL output
+vs the non-spec engine — accepted prefixes are the baseline's own argmax
+choices and the correction/bonus token is the baseline's next choice, so
+any divergence is a rollback/acceptance bug, not noise.
+
+Covers: greedy spec-vs-baseline parity on all four families, forced-
+mismatch drafts (acceptance ~ 0 must still be exact, incl. int8/int4 KV
+cache rollback), multi-query decode_attn backend-vs-ref parity (pallas
+interpret included), draft-plan payload sharing (already-int4 blocks are
+the SAME buffers), and the artifact round-trip of the stamped draft plan.
+"""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.kernels.decode_attn.ops import _pallas, decode_attention
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.models.model import build
+from repro.quant.compiler import (compile_draft_plan, compile_plan,
+                                  load_artifact, save_artifact)
+from repro.quant.kvcache import dequantize_kv, make_page
+from repro.serving.engine import ServeEngine
+from repro.serving.quantized import explicit_plan
+from repro.serving.scheduler import Request
+from repro.serving.spec import SpecConfig
+
+FAMILY_ARCHS = (("dense", "llama3.2-3b"), ("ssm", "mamba2-780m"),
+                ("hybrid", "zamba2-2.7b"), ("encdec", "whisper-medium"))
+
+
+def _tiny(arch):
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(
+        cfg, num_layers=4 if cfg.family == "hybrid" else 2)
+    model = build(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, b, p, seed=3):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, p), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+
+
+def _frames(cfg, b):
+    if cfg.family != "encdec":
+        return None
+    return jax.random.normal(jax.random.PRNGKey(5),
+                             (b, cfg.encoder_seq, cfg.d_model))
+
+
+# ---------------------------------------------------------------------------
+# multi-query decode attention: backends vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", ["bf16", "int8", "int4"])
+@pytest.mark.parametrize("s", [2, 5])
+@pytest.mark.parametrize("causal", [True, False])
+def test_multi_query_backends_match_ref(precision, s, causal):
+    b, t, hkv, rep, hd = 3, 40, 2, 3, 32
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(ks[0], (b, s, hkv * rep, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, hkv, hd)) * 0.5
+    kp, vp = make_page(k, precision, 32), make_page(v, precision, 32)
+    valid = jnp.array([9, 40, 13], jnp.int32)
+    ref = decode_attn_ref(q, dequantize_kv(kp), dequantize_kv(vp), valid,
+                          causal=causal)
+    for backend in ("simple", "grouped"):
+        got = decode_attention(q, kp, vp, valid_len=valid, backend=backend,
+                               kv_chunk=7, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+    got = _pallas(q, kp, vp, valid, 16, causal, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_multi_query_causal_offsets_hide_future():
+    """Query i must see exactly the rows a sequential single-query decode
+    at position valid - s + i would see."""
+    b, t, hkv, rep, hd, s = 1, 16, 1, 2, 16, 3
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hkv * rep, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, hd))
+    v = jax.random.normal(ks[2], (b, t, hkv, hd))
+    valid = jnp.int32(10)   # queries sit at absolute positions 7, 8, 9
+    multi = decode_attention(q, k, v, valid_len=valid, backend="grouped")
+    for i in range(s):
+        one = decode_attention(q[:, i:i + 1], k, v,
+                               valid_len=jnp.int32(8 + i),
+                               backend="grouped")
+        np.testing.assert_allclose(np.asarray(multi[:, i]),
+                                   np.asarray(one[:, 0]), atol=2e-5,
+                                   rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# greedy spec serve == baseline serve, all four families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,arch", FAMILY_ARCHS)
+def test_greedy_spec_parity_all_families(family, arch):
+    cfg, model, params = _tiny(arch)
+    prompts = _prompts(cfg, 2, 8)
+    frames = _frames(cfg, 2)
+    base = ServeEngine(model, params, max_seq=32)
+    spec = ServeEngine(model, params, max_seq=32, spec=SpecConfig(k=3))
+    ref = base.generate(prompts, 8, chunk=4, frames=frames)
+    out = spec.generate(prompts, 8, chunk=2, frames=frames)
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(out.tokens))
+    np.testing.assert_allclose(np.asarray(ref.logprobs),
+                               np.asarray(out.logprobs), atol=1e-4)
+
+
+def test_greedy_spec_serve_stream_parity():
+    cfg, model, params = _tiny("llama3.2-3b")
+    base = ServeEngine(model, params, max_seq=32, eos_id=7)
+    spec = ServeEngine(model, params, max_seq=32, eos_id=7,
+                       spec=SpecConfig(k=3))
+    reqs = [Request(rid=i, prompt=np.asarray(_prompts(cfg, 1, 6, seed=i)[0]),
+                    max_new_tokens=6, arrival_step=i) for i in range(5)]
+    outs_b, _ = base.serve(reqs, num_slots=2, chunk=4)
+    outs_s, stats = spec.serve(reqs, num_slots=2, chunk=2)
+    for ob, os_ in zip(outs_b, outs_s):
+        np.testing.assert_array_equal(ob.tokens, os_.tokens)
+        assert ob.finish_reason == os_.finish_reason
+    assert stats.draft_proposed > 0
+    assert 0.0 <= stats.acceptance_rate <= 1.0
+    assert stats.tokens_per_round >= 1.0   # every live round commits >= 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance / rollback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_precision", ["int8", "int4"])
+def test_forced_mismatch_draft_rolls_back_exactly(kv_precision):
+    """A draft with DIFFERENT random weights proposes mostly-wrong tokens
+    (acceptance ~ 0 at this vocab); every round must fall back to the
+    baseline's token via rollback + correction — output stays identical,
+    including over a quantized KV cache."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    base = ServeEngine(model, params, max_seq=32, kv_precision=kv_precision)
+    spec = ServeEngine(model, params, max_seq=32, kv_precision=kv_precision,
+                       spec=SpecConfig(k=3))
+    # sabotage the draft: unrelated weights -> near-zero acceptance
+    spec._draft = spec._ensure_draft()
+    spec._draft.params = model.init(jax.random.PRNGKey(99))
+    ref = base.generate(prompts, 8, chunk=4)
+    out = spec.generate(prompts, 8, chunk=1)
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(out.tokens))
+
+
+def test_rollback_restores_cache_pos_invariant():
+    """After any spec chunk, cache_pos == lengths - 1 for live slots (the
+    pending-token invariant; admission starts at pos == lengths) — the
+    verify's k+1 speculative rows were rolled back by position
+    arithmetic."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    engine = ServeEngine(model, params, max_seq=32, spec=SpecConfig(k=3))
+    prompts = _prompts(cfg, 2, 8)
+    state = engine._batch_state(prompts, None, 8, 0.0, 0, 1.0,
+                                jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(state.cache.pos), [8, 8])
+    fn = engine._spec_fn(1)
+    state, m = fn(engine.params, engine.draft_params, state)
+    live = np.asarray(state.active & ~state.done)
+    pos = np.asarray(state.cache.pos)
+    lengths = np.asarray(state.lengths)
+    np.testing.assert_array_equal(pos[live], lengths[live] - 1)
+    assert int(m.committed) == int(lengths.sum() - 2 * 8)
+
+
+def test_spec_respects_budget_and_headroom():
+    cfg, model, params = _tiny("llama3.2-3b")
+    engine = ServeEngine(model, params, max_seq=20, spec=SpecConfig(k=4))
+    prompts = _prompts(cfg, 1, 8)
+    out = engine.generate(prompts, 8, chunk=2)   # 8+8+4 = 20 fits exactly
+    assert int((np.asarray(out.tokens)[0] != 0).sum()) >= 16
+    with pytest.raises(AssertionError, match="max_seq"):
+        engine.generate(prompts, 9, chunk=2)
+
+
+def test_spec_single_token_prompt():
+    """Freshness handling makes even one-token prompts exact (the first
+    round takes candidate-0 from the prefill logits)."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    base = ServeEngine(model, params, max_seq=16)
+    spec = ServeEngine(model, params, max_seq=16, spec=SpecConfig(k=2))
+    prompts = _prompts(cfg, 2, 1)
+    ref = base.generate(prompts, 6, chunk=3)
+    out = spec.generate(prompts, 6, chunk=2)
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(out.tokens))
+
+
+# ---------------------------------------------------------------------------
+# draft plan: payload sharing + artifact stamp
+# ---------------------------------------------------------------------------
+
+def test_draft_plan_shares_aggressive_payloads():
+    cfg, model, params = _tiny("llama3.2-3b")
+    cfg4 = dataclasses.replace(cfg, num_layers=4)
+    model = build(cfg4)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = explicit_plan(cfg4, ["int4", "ternary", "int8", "raw"])
+    compiled = compile_plan(model, params, plan)
+    draft = compile_draft_plan(model, compiled.params, plan)
+    tgt_segs = compiled.params["layers"].segments
+    d_segs = draft.params["layers"].segments
+    assert [s.precision for s in d_segs] == ["int4", "ternary", "int4",
+                                             "int4"]
+    # already-aggressive blocks: the SAME Segment objects — zero new bytes
+    assert d_segs[0] is tgt_segs[0] and d_segs[1] is tgt_segs[1]
+    # overhead counts ONLY the re-quantized blocks, and int4 re-encoding
+    # never exceeds the bytes of the blocks it replaces
+    from repro.quant.apply import tree_nbytes
+    requant_src = sum(tree_nbytes(s.params) for s in tgt_segs[2:])
+    assert 0 < draft.overhead_bytes <= requant_src
+    assert draft.shared_blocks == 2 and draft.requantized_blocks == 3
+    # the derived plan is the entropy decisions clamped to int4
+    assert draft.precisions[1:5] == ("int4", "ternary", "int4", "int4")
+
+
+def test_draft_plan_artifact_roundtrip():
+    cfg, model, params = _tiny("llama3.2-3b")
+    plan = explicit_plan(cfg, ["int4", "int8"])
+    compiled = compile_plan(model, params, plan)
+    draft = compile_draft_plan(model, compiled.params, plan)
+    compiled.draft = draft.to_manifest()
+    with tempfile.TemporaryDirectory() as d:
+        save_artifact(d, compiled)
+        loaded = load_artifact(d, model)
+        assert loaded.draft == compiled.draft
+        eng = ServeEngine.from_artifact(model, d, max_seq=32,
+                                        spec=SpecConfig(k=2))
+        # the lazily re-derived draft matches the stamp bit-for-bit
+        rederived = eng._ensure_draft()
+        assert list(rederived.precisions) == loaded.draft["precisions"]
+        assert rederived.overhead_bytes == loaded.draft["overhead_bytes"]
+        base = ServeEngine(model, compiled.params, max_seq=32)
+        prompts = _prompts(cfg, 2, 8)
+        np.testing.assert_array_equal(
+            np.asarray(base.generate(prompts, 6, chunk=3).tokens),
+            np.asarray(eng.generate(prompts, 6, chunk=2).tokens))
+
+
+# ---------------------------------------------------------------------------
+# sampling satellites
+# ---------------------------------------------------------------------------
+
+def test_sampling_params_do_not_recompile():
+    cfg, model, params = _tiny("llama3.2-3b")
+    engine = ServeEngine(model, params, max_seq=32)
+    prompts = _prompts(cfg, 2, 8)
+    engine.generate(prompts, 4, temperature=0.0)
+    engine.generate(prompts, 4, temperature=0.7)
+    engine.generate(prompts, 4, temperature=0.3, top_k=5, top_p=0.9)
+    assert len(engine._chunk_fns) == 1   # one compile per (chunk, slots)
+
+
+def test_top_k_one_equals_greedy():
+    cfg, model, params = _tiny("llama3.2-3b")
+    engine = ServeEngine(model, params, max_seq=32)
+    prompts = _prompts(cfg, 2, 8)
+    greedy = engine.generate(prompts, 6, temperature=0.0)
+    topk1 = engine.generate(prompts, 6, temperature=0.9, top_k=1,
+                            key=jax.random.PRNGKey(4))
+    np.testing.assert_array_equal(np.asarray(greedy.tokens),
+                                  np.asarray(topk1.tokens))
+
+
+def test_spec_sampling_path_is_finite_and_in_budget():
+    cfg, model, params = _tiny("llama3.2-3b")
+    engine = ServeEngine(model, params, max_seq=32, spec=SpecConfig(k=3))
+    prompts = _prompts(cfg, 2, 8)
+    out = engine.generate(prompts, 8, temperature=0.8, top_p=0.95, chunk=2,
+                          key=jax.random.PRNGKey(2))
+    toks = np.asarray(out.tokens)
+    assert toks.shape == (2, 16)
+    assert (toks[:, 8:] < cfg.vocab_size).all()
+    assert np.isfinite(np.asarray(out.logprobs)).all()
+
+
+def test_serve_reports_latency_percentiles():
+    cfg, model, params = _tiny("llama3.2-3b")
+    engine = ServeEngine(model, params, max_seq=32)
+    reqs = [Request(rid=i, prompt=np.asarray(_prompts(cfg, 1, 6, seed=i)[0]),
+                    max_new_tokens=6) for i in range(3)]
+    outs, stats = engine.serve(reqs, num_slots=2, chunk=3)
+    assert all(o.ttft_s is not None and o.ttft_s >= 0 for o in outs)
+    assert all(o.tpot_s is not None and o.tpot_s >= 0 for o in outs)
+    assert stats.ttft_p95_s >= stats.ttft_p50_s >= 0.0
+    assert stats.tpot_p95_s >= stats.tpot_p50_s >= 0.0
