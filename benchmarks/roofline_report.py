@@ -24,9 +24,25 @@ def load(tag: str = "baseline", mesh: str = "16x16"):
             if t == tag and m == mesh]
 
 
-def run():
+def run(tag: str = "baseline", mesh: str = "16x16"):
+    recs = load(tag, mesh)
+    if not recs:
+        # an empty table is indistinguishable from a healthy no-op unless
+        # it says WHY it is empty — name the filter that matched nothing
+        # (and what the file does hold) instead of printing zero rows
+        if not DRYRUN.exists():
+            reason = f"no dryrun log at {DRYRUN}"
+        else:
+            seen = {(r["tag"], r["mesh"])
+                    for r in (json.loads(l) for l in open(DRYRUN))}
+            reason = (f"no records for tag={tag!r} mesh={mesh!r} in "
+                      f"{DRYRUN.name}; present: "
+                      + (", ".join(f"{t}/{m}" for t, m in sorted(seen))
+                         or "none"))
+        return [("roofline/empty", 0.0, reason)]
     rows = []
-    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"])):
+    nonzero = 0
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
         name = f"roofline/{r['arch']}/{r['shape']}"
         if r["status"] == "skipped":
             rows.append((name, 0.0, "SKIP:" + r["reason"][:40]))
@@ -35,12 +51,16 @@ def run():
             rows.append((name, 0.0, "ERROR:" + r["error"][:60]))
             continue
         dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        nonzero += 1
         rows.append((name, dom * 1e6,
                      f"bound={r['bound']};"
                      f"tc={r['t_compute_s']:.4f};tm={r['t_memory_s']:.4f};"
                      f"tx={r['t_collective_s']:.4f};"
                      f"useful={r['useful_flop_frac']:.2f};"
                      f"peakGiB={r.get('peak_bytes_per_dev', 0)/2**30:.1f}"))
+    rows.append(("roofline/summary", 0.0,
+                 f"{nonzero} modeled rows of {len(rows)} records "
+                 f"(tag={tag}, mesh={mesh})"))
     return rows
 
 

@@ -259,12 +259,25 @@ def _kv_rows(max_new: int, reps: int, steps: int | None,
     rows = []
     base_bytes = None
     base_tokens = None
-    for kvp in ("bf16", "int8", "int4"):
-        engine = ServeEngine(model, params, max_seq=max_seq,
-                             kv_precision=kvp)
-        out = engine.generate(prompts, max_new, chunk=min(CHUNK, max_new))
-        dt = _time(lambda: engine.generate(
-            prompts, max_new, chunk=min(CHUNK, max_new)).tokens, reps)
+    precisions = ("bf16", "int8", "int4")
+    engines, outs = {}, {}
+    best = {kvp: float("inf") for kvp in precisions}
+    for kvp in precisions:
+        engines[kvp] = ServeEngine(model, params, max_seq=max_seq,
+                                   kv_precision=kvp)
+        outs[kvp] = engines[kvp].generate(prompts, max_new,
+                                          chunk=min(CHUNK, max_new))  # warm
+    # interleave the reps round-robin (rep r times bf16, int8, int4
+    # back-to-back) so machine-state drift across the sweep biases no
+    # precision — the int4-vs-int8 race is tens of percent at most
+    for _ in range(max(reps, 1)):
+        for kvp in precisions:
+            t0 = time.perf_counter()
+            jax.block_until_ready(engines[kvp].generate(
+                prompts, max_new, chunk=min(CHUNK, max_new)).tokens)
+            best[kvp] = min(best[kvp], time.perf_counter() - t0)
+    for kvp in precisions:
+        engine, out, dt = engines[kvp], outs[kvp], best[kvp]
         tps = tokens / dt
         bps = engine.kv_bytes_per_slot()
         if kvp == "bf16":
@@ -307,9 +320,15 @@ def _spec_rows(max_new: int, reps: int, steps: int | None,
 
     def timed_serve(engine):
         engine.serve(requests[:2], num_slots=NUM_SLOTS, chunk=2)  # warm
-        t0 = time.perf_counter()
-        outputs, stats = engine.serve(requests, num_slots=NUM_SLOTS, chunk=2)
-        return outputs, stats, time.perf_counter() - t0
+        best = None
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            outputs, stats = engine.serve(requests, num_slots=NUM_SLOTS,
+                                          chunk=2)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[2]:
+                best = (outputs, stats, dt)
+        return best
 
     base = ServeEngine(model, qparams, max_seq=max_seq)
     base.plan = plan
@@ -356,15 +375,193 @@ def _spec_rows(max_new: int, reps: int, steps: int | None,
             "ttft_p50_s": stats.ttft_p50_s, "ttft_p95_s": stats.ttft_p95_s,
             "tpot_p50_s": stats.tpot_p50_s, "tpot_p95_s": stats.tpot_p95_s,
         }
+
+    # prompt-lookup (ngram) draft at k=2: zero draft-side model calls, so
+    # a round costs ~one fused multi-query verify step — the draft source
+    # that makes spec pay off even FLOPs-bound. Measured on a saturated
+    # deeper stream (all arrivals queued, 3x max_new) so the comparison
+    # reads decode throughput, not arrival-gated idle time; the non-spec
+    # baseline is re-timed on the SAME stream.
+    deep = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=3 * max_new, arrival_rate=100.0, seed=0)
+    deep_seq = max(len(r.prompt) + r.max_new_tokens for r in deep) + max(ks)
+
+    def timed_deep(engine):
+        engine.serve(deep[:2], num_slots=NUM_SLOTS, chunk=2)  # warm
+        best = None
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            outputs, stats = engine.serve(deep, num_slots=NUM_SLOTS, chunk=2)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[2]:
+                best = (outputs, stats, dt)
+        return best
+
+    dbase = ServeEngine(model, qparams, max_seq=deep_seq)
+    dbase.plan = plan
+    dbase_out, dbase_stats, dbase_dt = timed_deep(dbase)
+    dbase_tps = dbase_stats.generated_tokens / dbase_dt
+    engine = ServeEngine(model, qparams, max_seq=deep_seq,
+                         spec=SpecConfig(k=2, draft_source="ngram"))
+    engine.plan = plan
+    outputs, stats, dt = timed_deep(engine)
+    tps = stats.generated_tokens / dt
+    agree = float(all(
+        (a.tokens == b.tokens).all() for a, b in zip(dbase_out, outputs)))
+    rows.append(("serve/spec/k2-ngram/stream",
+                 dt / max(stats.generated_tokens, 1) * 1e6,
+                 f"{tps:.1f} tok/s prompt-lookup draft vs {dbase_tps:.1f} "
+                 f"tok/s non-spec on the same saturated stream "
+                 f"({tps/dbase_tps:.2f}x) "
+                 f"acceptance {stats.acceptance_rate:.2f} "
+                 f"{stats.tokens_per_round:.2f} tok/round "
+                 f"greedy agree {agree:.2f}"))
+    summary["spec"]["k2_ngram"] = {
+        "tok_s_stream": tps,
+        "baseline_tok_s_stream": dbase_tps,
+        "uplift_vs_baseline": tps / dbase_tps,
+        "acceptance_rate": stats.acceptance_rate,
+        "tokens_per_round": stats.tokens_per_round,
+        "greedy_agree": agree,
+    }
+    return rows
+
+
+def _fused_rows(max_new: int, reps: int, steps: int | None,
+                summary: dict) -> list[tuple]:
+    """Fused-vs-unfused and tuned-vs-default deltas (docs/DESIGN.md §12):
+
+    * ``serve/fused/kv-*``  — int8/int4 KV decode through the streaming
+      grouped online-softmax sweep vs the unfused ``simple`` backend
+      (materialize the whole bf16 cache view every step), with greedy
+      token agreement between the two.
+    * ``serve/tuned/kv-*``  — inline ``kernels.autotune`` sweep of the
+      decode kv_chunk grid; best vs the untuned library default. The
+      winning configs persist to ``RESULTS/autotune_bench.json`` (the
+      user-level cache is benchmarks/autotune_sweep.py's job).
+    * ``serve/fused/spec-k2`` — fused draft-propose (one cache sweep per
+      round) vs the two-pass throwaway-cache propose, same stream.
+    """
+    from repro.kernels import autotune as at
+    from repro.kernels.decode_attn import ops as dops
+    from repro.serving.spec import SpecConfig
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    max_seq = 512            # serving depth: the cache sweep dominates
+    prompts = _prompts(cfg, BATCH)
+    tokens = BATCH * max_new
+    rows = []
+    snap = at.snapshot()
+    prev_backend = dops._backend
+    try:
+        for kvp in ("int8", "int4"):
+            def bench(_config=None, kvp=kvp):
+                engine = ServeEngine(model, params, max_seq=max_seq,
+                                     kv_precision=kvp, autotune=False)
+                run = lambda: engine.generate(
+                    prompts, max_new, chunk=min(CHUNK, max_new))
+                out = run()
+                best = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run().tokens)
+                    best = min(best, time.perf_counter() - t0)
+                return best, out.tokens
+
+            dops.configure_decode_attn(backend="simple")
+            dt_un, toks_un = bench()
+            dops.configure_decode_attn(backend="grouped")
+            dt_f, toks_f = bench()
+            agree = float((toks_f[:, PROMPT_LEN:]
+                           == toks_un[:, PROMPT_LEN:]).mean())
+            rows.append((
+                f"serve/fused/kv-{kvp}", dt_f / tokens * 1e6,
+                f"{tokens/dt_f:.1f} tok/s fused streaming vs "
+                f"{tokens/dt_un:.1f} tok/s unfused materialize "
+                f"({dt_un/dt_f:.2f}x) greedy agree {agree:.2f}"))
+
+            # tuned-vs-default: sweep the decode kv_chunk grid under the
+            # fused backend and compare the winner to the library default
+            key = at.tune_key("dense", kvp)
+            cache = at.AutotuneCache(
+                str(common.RESULTS / "autotune_bench.json"))
+            best, results = at.autotune(
+                key, lambda c: bench(c)[0], at.default_candidates(kvp),
+                cache=cache)
+            costs = {r["config"].get("decode_kv_chunk"): r["cost_s"]
+                     for r in results}
+            best_s = min(costs.values())
+            default_s = costs.get(snap["decode_kv_chunk"],
+                                  max(costs.values()))
+            rows.append((
+                f"serve/tuned/kv-{kvp}", best_s / tokens * 1e6,
+                f"{tokens/best_s:.1f} tok/s tuned {best.to_dict()} vs "
+                f"{tokens/default_s:.1f} tok/s default "
+                f"kv_chunk={snap['decode_kv_chunk']} "
+                f"({default_s/best_s:.2f}x)"))
+            summary["fused"][f"kv_{kvp}"] = {
+                "tok_s_fused": tokens / dt_f,
+                "tok_s_unfused": tokens / dt_un,
+                "fused_speedup": dt_un / dt_f,
+                "greedy_agree": agree,
+                "tok_s_tuned": tokens / best_s,
+                "tok_s_default": tokens / default_s,
+                "tuned_config": best.to_dict(),
+                "tuned_vs_default": default_s / best_s,
+            }
+            at.restore(snap)
+    finally:
+        at.restore(snap)
+        dops.configure_decode_attn(backend=prev_backend)
+
+    # spec k=2: fused draft-propose vs the two-pass throwaway-cache path
+    plan = plan_for_variant(model, params, FAMILY_VARIANT)
+    qparams = model.compile_plan(params, plan).params
+    requests = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
+    spec_seq = max(len(r.prompt) + r.max_new_tokens for r in requests) + 2
+
+    def timed_spec(fused: bool):
+        engine = ServeEngine(model, qparams, max_seq=spec_seq,
+                             spec=SpecConfig(k=2, fused_propose=fused),
+                             autotune=False)
+        engine.plan = plan
+        engine.serve(requests[:2], num_slots=NUM_SLOTS, chunk=2)  # warm
+        t0 = time.perf_counter()
+        outputs, stats = engine.serve(requests, num_slots=NUM_SLOTS,
+                                      chunk=2)
+        return outputs, stats, time.perf_counter() - t0
+
+    out_un, st_un, dt_un = timed_spec(fused=False)
+    out_f, st_f, dt_f = timed_spec(fused=True)
+    tps_un = st_un.generated_tokens / dt_un
+    tps_f = st_f.generated_tokens / dt_f
+    agree = float(all((a.tokens == b.tokens).all()
+                      for a, b in zip(out_un, out_f)))
+    rows.append((
+        "serve/fused/spec-k2",
+        dt_f / max(st_f.generated_tokens, 1) * 1e6,
+        f"{tps_f:.1f} tok/s fused propose vs {tps_un:.1f} tok/s "
+        f"two-pass ({tps_f/tps_un:.2f}x) "
+        f"acceptance {st_f.acceptance_rate:.2f} greedy agree {agree:.2f}"))
+    summary["fused"]["spec_k2"] = {
+        "tok_s_fused": tps_f, "tok_s_two_pass": tps_un,
+        "fused_speedup": tps_f / tps_un,
+        "acceptance_rate": st_f.acceptance_rate,
+        "greedy_agree": agree,
+    }
     return rows
 
 
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
-    reps = 1 if smoke else 3
+    # best-of-3 even in smoke: the fused/tuned delta rows race paths that
+    # are tens of percent apart, and a single rep flips sign under CI load
+    reps = 3
     steps = SMOKE_TRAIN_STEPS if smoke else None
     summary: dict = {"variants": {}, "families": {}, "mesh": {},
-                     "kv_cache": {}, "spec": {}}
+                     "kv_cache": {}, "fused": {}, "spec": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
@@ -372,6 +569,7 @@ def run(smoke: bool = False) -> list[tuple]:
     rows += _family_rows(max_new, reps, steps, summary)
     rows += _mesh_rows(max_new, reps, steps, summary)
     rows += _kv_rows(max_new, reps, steps, summary)
+    rows += _fused_rows(max_new, reps, steps, summary)
     rows += _spec_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows

@@ -1,0 +1,276 @@
+"""Chunking / block-shape autotuner for the quantized serving kernels.
+
+Every Pallas kernel and jnp fallback in the serving path carries a small
+set of process-wide knobs, all read at TRACE time:
+
+* prefill chunked attention — ``CHUNK_THRESHOLD`` / ``Q_CHUNK`` /
+  ``KV_CHUNK`` (models/attention.configure_chunking)
+* decode attention sweep    — ``kv_chunk`` + backend
+  (kernels/decode_attn.configure_decode_attn)
+* qmatmul / megakernel tiles — ``bm`` / ``bn`` / ``bk``
+  (kernels/qmatmul.configure_qmatmul)
+
+The right values depend on the accelerator generation, the model family
+and the serving precision — int4's packed payload halves the lane width,
+so the kv_chunk that saturates an int8 sweep starves an int4 one. This
+module turns those knobs into a persisted, keyed configuration:
+
+* ``TunedConfig``  — one immutable bundle of knob values (None = leave
+  the library default alone).
+* ``tune_key``     — ``device_kind|family|precision|backend``; the same
+  binary on new hardware misses the cache and serves untuned rather than
+  inheriting another chip's tiles (re-run benchmarks/autotune_sweep.py).
+* ``AutotuneCache`` — JSON file (``REPRO_AUTOTUNE_CACHE`` or
+  ``~/.cache/repro/autotune.json``) mapping keys to configs + the
+  measured tok/s that selected them.
+* ``apply_config`` / ``maybe_apply_tuned`` — push a config into the
+  three ``configure_*`` hooks; ServeEngine calls ``maybe_apply_tuned``
+  before building its jitted executables so tuned values are what the
+  traces bake in, and stamps the result ("untuned" or the cache key)
+  into ServeStats and saved artifact manifests.
+* ``autotune``     — measure candidates with a caller-supplied benchmark
+  callable, keep the fastest, persist it.
+
+The sweep driver is benchmarks/autotune_sweep.py; the cache format and
+re-tuning policy are documented in docs/DESIGN.md §12.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Callable, Optional, Sequence
+
+import jax
+
+CACHE_VERSION = 1
+_ENV_PATH = "REPRO_AUTOTUNE_CACHE"
+# stamp of the most recently applied tuned config (None -> "untuned");
+# read by ServeEngine and save_artifact for provenance
+_applied_key: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One bundle of kernel-knob overrides. ``None`` fields leave the
+    library default (or a previously applied value) untouched, so a
+    config tuned for the decode sweep composes with one tuned for
+    prefill chunking."""
+    decode_kv_chunk: Optional[int] = None   # decode-attention sweep width
+    chunk_threshold: Optional[int] = None   # prefill: chunk when S exceeds
+    q_chunk: Optional[int] = None           # prefill query tile
+    kv_chunk: Optional[int] = None          # prefill key/value tile
+    qmatmul_bm: Optional[int] = None        # Pallas qmatmul/megakernel tiles
+    qmatmul_bn: Optional[int] = None
+    qmatmul_bk: Optional[int] = None
+
+    def to_dict(self) -> dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TunedConfig":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in d.items() if k in names})
+
+
+def kv_label(kv_plan) -> str:
+    """Precision label for a resolved KV plan: the single precision it
+    serves, "mixed" for a heterogeneous per-layer plan, "bf16" for no
+    plan (raw cache)."""
+    if kv_plan is None:
+        return "bf16"
+    uniq = sorted(set(kv_plan.precisions))
+    return uniq[0] if len(uniq) == 1 else "mixed"
+
+
+def tune_key(family: str, precision: str,
+             backend: Optional[str] = None,
+             device_kind: Optional[str] = None) -> str:
+    """Cache key: ``device_kind|family|precision|backend``. device_kind
+    distinguishes accelerator generations (e.g. "TPU v5e" vs "cpu"), so a
+    cache carried to new hardware misses instead of mis-tiling."""
+    if device_kind is None:
+        device_kind = jax.devices()[0].device_kind
+    if backend is None:
+        backend = jax.default_backend()
+    device_kind = device_kind.replace("|", "_").replace(" ", "-")
+    return f"{device_kind}|{family}|{precision}|{backend}"
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        _ENV_PATH,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+class AutotuneCache:
+    """JSON-persisted map of tune_key -> {config, metrics}.
+
+    Deterministic: the same key always returns the same stored config
+    (no timestamps, no environment-dependent rewriting on load), and
+    ``save`` writes sorted keys so the file round-trips byte-stable.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self.data: dict = {"version": CACHE_VERSION, "configs": {}}
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                loaded = json.load(f)
+            if loaded.get("version") == CACHE_VERSION:
+                self.data = loaded
+
+    def get(self, key: str) -> Optional[TunedConfig]:
+        entry = self.data["configs"].get(key)
+        if entry is None:
+            return None
+        return TunedConfig.from_dict(entry["config"])
+
+    def metrics(self, key: str) -> dict:
+        entry = self.data["configs"].get(key) or {}
+        return dict(entry.get("metrics", {}))
+
+    def put(self, key: str, config: TunedConfig,
+            metrics: Optional[dict] = None) -> None:
+        self.data["configs"][key] = {
+            "config": config.to_dict(),
+            "metrics": dict(metrics or {}),
+        }
+
+    def save(self) -> str:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # atomic replace so a crashed sweep never truncates the cache
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(self.data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+        return self.path
+
+
+def snapshot() -> dict:
+    """Capture every knob the autotuner can touch (sweeps restore it)."""
+    from repro.kernels.decode_attn import ops as dops
+    from repro.kernels.qmatmul import ops as qops
+    from repro.models import attention as attn
+    return {
+        "decode_kv_chunk": dops.get_decode_kv_chunk(),
+        "chunk_threshold": attn.CHUNK_THRESHOLD,
+        "q_chunk": attn.Q_CHUNK,
+        "kv_chunk": attn.KV_CHUNK,
+        **{f"qmatmul_{k}": v for k, v in qops.get_qmatmul_blocks().items()},
+    }
+
+
+def restore(snap: dict) -> None:
+    from repro.kernels.decode_attn import ops as dops
+    from repro.kernels.qmatmul import ops as qops
+    from repro.models import attention as attn
+    global _applied_key
+    dops.configure_decode_attn(kv_chunk=snap["decode_kv_chunk"])
+    attn.configure_chunking(chunk_threshold=snap["chunk_threshold"],
+                            q_chunk=snap["q_chunk"],
+                            kv_chunk=snap["kv_chunk"])
+    qops._blocks.update({k.replace("qmatmul_", ""): v
+                         for k, v in snap.items()
+                         if k.startswith("qmatmul_")})
+    _applied_key = None
+
+
+def apply_config(config: TunedConfig, key: Optional[str] = None) -> None:
+    """Push a TunedConfig into the three configure_* hooks. Read at
+    TRACE time — apply before building jitted executables."""
+    from repro.kernels.decode_attn import ops as dops
+    from repro.kernels.qmatmul import ops as qops
+    from repro.models import attention as attn
+    global _applied_key
+    if config.decode_kv_chunk is not None:
+        dops.configure_decode_attn(kv_chunk=config.decode_kv_chunk)
+    attn.configure_chunking(chunk_threshold=config.chunk_threshold,
+                            q_chunk=config.q_chunk,
+                            kv_chunk=config.kv_chunk)
+    qops.configure_qmatmul(bm=config.qmatmul_bm, bn=config.qmatmul_bn,
+                           bk=config.qmatmul_bk)
+    _applied_key = key or "manual"
+
+
+def current_stamp() -> str:
+    """Provenance stamp for ServeStats / artifact manifests: the cache
+    key of the last applied config, or "untuned"."""
+    return _applied_key or "untuned"
+
+
+def maybe_apply_tuned(family: str, precision: str,
+                      path: Optional[str] = None) -> str:
+    """Engine hook: look the (device, family, precision, backend) key up
+    in the cache and apply its config if present. Returns the stamp —
+    the key on a hit, "untuned" on a miss (library defaults stand)."""
+    try:
+        cache = AutotuneCache(path)
+    except (OSError, json.JSONDecodeError):
+        return "untuned"
+    key = tune_key(family, precision)
+    config = cache.get(key)
+    if config is None:
+        return "untuned"
+    apply_config(config, key=key)
+    return key
+
+
+def default_candidates(precision: str = "bf16",
+                       backend: Optional[str] = None
+                       ) -> list[TunedConfig]:
+    """Sweep grid. Decode tok/s is dominated by the cache-sweep chunk
+    width, so that is the primary axis; int4's packed payload halves the
+    bytes per chunk, so its grid reaches wider. On TPU the megakernel
+    tiles join the grid; the jnp fallbacks ignore them."""
+    if backend is None:
+        backend = jax.default_backend()
+    widths = (64, 128, 256, 512)
+    if precision == "int4":
+        # packed payload halves the bytes per chunk: keep the narrow
+        # widths (they win the CPU fallback) and reach one step wider
+        widths = (64, 128, 256, 512, 1024)
+    out = [TunedConfig(decode_kv_chunk=w) for w in widths]
+    if backend == "tpu":
+        out += [TunedConfig(decode_kv_chunk=256, qmatmul_bm=bm,
+                            qmatmul_bn=bn)
+                for bm in (128, 256) for bn in (128, 256, 512)]
+    return out
+
+
+def autotune(key: str, bench: Callable[[TunedConfig], float],
+             candidates: Sequence[TunedConfig],
+             cache: Optional[AutotuneCache] = None,
+             save: bool = True) -> tuple[TunedConfig, list[dict]]:
+    """Measure every candidate with ``bench`` (returns cost in seconds,
+    lower is better — build a FRESH jitted callable per call: the knobs
+    are trace-time), keep the fastest, persist it under ``key``, leave
+    it applied. Returns (best, per-candidate results)."""
+    if not candidates:
+        raise ValueError("autotune needs at least one candidate")
+    saved = snapshot()
+    results = []
+    try:
+        for config in candidates:
+            apply_config(config, key=key)
+            cost = float(bench(config))
+            results.append({"config": config.to_dict(), "cost_s": cost})
+    finally:
+        restore(saved)
+    best_i = min(range(len(results)), key=lambda i: results[i]["cost_s"])
+    best = candidates[best_i]
+    if cache is None:
+        cache = AutotuneCache()
+    cache.put(key, best, metrics={"cost_s": results[best_i]["cost_s"],
+                                  "candidates": len(results)})
+    if save:
+        cache.save()
+    apply_config(best, key=key)
+    return best, results

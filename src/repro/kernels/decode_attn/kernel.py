@@ -22,14 +22,21 @@ Design for TPU (validated on CPU via interpret=True, like qmatmul):
   is O(C) per step.
 * The cache arrives with heads flattened, data (B, S, F_store) and scales
   (B, S, F/G): one chunk dequantizes in-register as a single
-  (C, F/G, G) * scale broadcast-multiply (int4 is nibble-unpacked with
-  shifts/masks first, so HBM traffic is half of int8), then each head's
-  (C, hd) slab feeds a (rep*qs, hd) x (hd, C) MXU dot. The per-head loop
-  is a static python unroll (Hkv is small).
+  (C, F/G, G) * scale broadcast-multiply (int4 is split-half unpacked —
+  one concat, no interleave shuffle — so HBM traffic is half of int8),
+  then each head's (C, hd) slab feeds a (rep*qs, hd) x (hd, C) MXU dot.
+  The per-head loop is a static python unroll (Hkv is small).
 * Per-slot validity: ``valid_len`` (B, 1) int32 rides in SMEM; chunk
   positions are compared against each query's causal limit so
   freshly-admitted slots with short prompts never attend to stale cache
   rows and verify queries never see their own future.
+* Optional FRESH rows (speculative draft propose with zero cache
+  writes, docs/DESIGN.md §12): a small already-quantized side buffer
+  (B, Sf, F_store) at logical positions ``base + j`` is swept as an
+  epilogue block on the LAST chunk step of the same online softmax —
+  the k-round costs one cache sweep, not one per draft write. Cache
+  rows at positions >= base are masked stale (the side buffer holds
+  what a write would have stored).
 
 VMEM @ C=256, F=Hkv*hd=4096: data 2x256x4096 = 2MB (int8), scales 32KB,
 scratch (Hkv, rep, qs, hd) f32 ~64KB*qs — well under ~16MB/core of v5e.
@@ -64,10 +71,17 @@ def _dequant(data, scale, *, precision: str, group: int) -> jax.Array:
     return g.reshape(c, f)
 
 
-def _decode_attn_kernel(valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
-                        o_ref, m_ref, l_ref, acc_ref, *, precision: str,
-                        group: int, num_kv_heads: int, head_dim: int,
-                        qs: int, causal: bool, chunk: int, num_chunks: int):
+def _decode_attn_kernel(*refs, precision: str, group: int,
+                        num_kv_heads: int, head_dim: int, qs: int,
+                        causal: bool, chunk: int, num_chunks: int,
+                        fresh_rows: int):
+    if fresh_rows:
+        (valid_ref, base_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
+         fkd_ref, fks_ref, fvd_ref, fvs_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
@@ -76,9 +90,6 @@ def _decode_attn_kernel(valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kf = _dequant(kd_ref[0], ks_ref[0], precision=precision, group=group)
-    vf = _dequant(vd_ref[0], vs_ref[0], precision=precision, group=group)
-    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
     valid = valid_ref[0, 0]
     if causal:
         # query i sees rows < valid - qs + 1 + i
@@ -86,32 +97,58 @@ def _decode_attn_kernel(valid_ref, q_ref, kd_ref, ks_ref, vd_ref, vs_ref,
                  + jax.lax.broadcasted_iota(jnp.int32, (qs, 1), 0))
     else:
         limit = jnp.full((qs, 1), valid, jnp.int32)
-    mask = pos < limit                                        # (qs, C)
+    inv_sqrt = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+
+    def online_update(kf, vf, mask, rows):
+        """One masked online-softmax block update over ``rows`` KV rows."""
+        for h in range(num_kv_heads):                 # static unroll
+            q_h = q_ref[0, h].astype(jnp.float32)     # (rep, qs, hd)
+            rep = q_h.shape[0]
+            k_h = kf[:, h * head_dim:(h + 1) * head_dim]     # (rows, hd)
+            v_h = vf[:, h * head_dim:(h + 1) * head_dim]
+            s_h = jax.lax.dot_general(
+                q_h.reshape(rep * qs, head_dim), k_h,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * inv_sqrt
+            s_h = s_h.reshape(rep, qs, rows)
+            s_h = jnp.where(mask[None], s_h, NEG_INF)
+            m_prev = m_ref[h]                         # (rep, qs)
+            m_new = jnp.maximum(m_prev, jnp.max(s_h, axis=-1))
+            p = jnp.exp(s_h - m_new[..., None])       # (rep, qs, rows)
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[h] = l_ref[h] * corr + jnp.sum(p, axis=-1)
+            acc_ref[h] = acc_ref[h] * corr[..., None] + jax.lax.dot_general(
+                p.reshape(rep * qs, rows), v_h, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32
+            ).reshape(rep, qs, head_dim)
+            m_ref[h] = m_new
+
+    kf = _dequant(kd_ref[0], ks_ref[0], precision=precision, group=group)
+    vf = _dequant(vd_ref[0], vs_ref[0], precision=precision, group=group)
+    pos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+    # cache rows at positions >= base are stale when fresh rows supersede
+    cache_limit = (jnp.minimum(limit, base_ref[0, 0]) if fresh_rows
+                   else limit)
+    mask = pos < cache_limit                                  # (qs, C)
     # zero invalid V rows: their probability is exactly 0, but a padded
     # tail block (ceil-div grid) may hold NaN/garbage and 0 * NaN = NaN
     row_valid = (pos < valid).reshape(chunk, 1)
     vf = jnp.where(row_valid, vf, 0.0)
-    inv_sqrt = 1.0 / jnp.sqrt(head_dim).astype(jnp.float32)
+    online_update(kf, vf, mask, chunk)
 
-    for h in range(num_kv_heads):                             # static unroll
-        q_h = q_ref[0, h].astype(jnp.float32)                 # (rep, qs, hd)
-        rep = q_h.shape[0]
-        k_h = kf[:, h * head_dim:(h + 1) * head_dim]          # (C, hd)
-        v_h = vf[:, h * head_dim:(h + 1) * head_dim]
-        s_h = jax.lax.dot_general(
-            q_h.reshape(rep * qs, head_dim), k_h, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * inv_sqrt
-        s_h = s_h.reshape(rep, qs, chunk)
-        s_h = jnp.where(mask[None], s_h, NEG_INF)
-        m_prev = m_ref[h]                                     # (rep, qs)
-        m_new = jnp.maximum(m_prev, jnp.max(s_h, axis=-1))
-        p = jnp.exp(s_h - m_new[..., None])                   # (rep, qs, C)
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[h] = l_ref[h] * corr + jnp.sum(p, axis=-1)
-        acc_ref[h] = acc_ref[h] * corr[..., None] + jax.lax.dot_general(
-            p.reshape(rep * qs, chunk), v_h, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32).reshape(rep, qs, head_dim)
-        m_ref[h] = m_new
+    if fresh_rows:
+        @pl.when(ci == num_chunks - 1)
+        def _fresh():
+            kff = _dequant(fkd_ref[0], fks_ref[0], precision=precision,
+                           group=group)
+            vff = _dequant(fvd_ref[0], fvs_ref[0], precision=precision,
+                           group=group)
+            pos_f = base_ref[0, 0] + jax.lax.broadcasted_iota(
+                jnp.int32, (1, fresh_rows), 1)
+            mask_f = pos_f < limit                            # (qs, Sf)
+            vff2 = jnp.where((pos_f < valid).reshape(fresh_rows, 1),
+                             vff, 0.0)
+            online_update(kff, vff2, mask_f, fresh_rows)
 
     @pl.when(ci == num_chunks - 1)
     def _finalize():
@@ -128,11 +165,19 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
                        group: int = 64, head_dim: int,
                        kv_chunk: int = DEFAULT_KV_CHUNK,
                        causal: bool = True,
+                       fresh_k_data: jax.Array | None = None,
+                       fresh_k_scale: jax.Array | None = None,
+                       fresh_v_data: jax.Array | None = None,
+                       fresh_v_scale: jax.Array | None = None,
+                       base: jax.Array | None = None,
                        interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, rep, Qs, hd) f32/bf16; k/v data: (B, S, F_store) int8 or
     bf16 (F_store = Hkv*hd, int4: Hkv*hd//2); k/v scale: (B, S, F//group)
     bf16; valid_len: (B, 1) int32 rows valid AFTER the Qs query rows were
-    written. Returns (B, Hkv, rep, Qs, hd) f32."""
+    written. Optional fresh_* / base: an already-quantized (B, Sf,
+    F_store) side buffer swept at logical positions ``base + j`` with
+    cache rows >= base masked stale (no-write speculative propose).
+    Returns (B, Hkv, rep, Qs, hd) f32."""
     b, hkv, rep, qs, hd = q.shape
     assert hd == head_dim, (q.shape, head_dim)
     s = k_data.shape[1]
@@ -142,24 +187,45 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
     # so the kernel's validity mask discards them
     nc = -(-s // chunk)
     ng = k_scale.shape[-1]
+    fresh_rows = 0 if fresh_k_data is None else fresh_k_data.shape[1]
 
     kernel = functools.partial(
         _decode_attn_kernel, precision=precision, group=group,
         num_kv_heads=hkv, head_dim=hd, qs=qs, causal=causal, chunk=chunk,
-        num_chunks=nc)
+        num_chunks=nc, fresh_rows=fresh_rows)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
+    ]
+    operands = [valid_len]
+    if fresh_rows:
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, c: (i, 0)))
+        operands.append(base)
+    in_specs += [
+        pl.BlockSpec((1, hkv, rep, qs, hd), lambda i, c: (i, 0, 0, 0, 0)),
+        pl.BlockSpec((1, chunk, k_data.shape[-1]),
+                     lambda i, c: (i, c, 0)),
+        pl.BlockSpec((1, chunk, ng), lambda i, c: (i, c, 0)),
+        pl.BlockSpec((1, chunk, v_data.shape[-1]),
+                     lambda i, c: (i, c, 0)),
+        pl.BlockSpec((1, chunk, ng), lambda i, c: (i, c, 0)),
+    ]
+    operands += [q, k_data, k_scale, v_data, v_scale]
+    if fresh_rows:
+        fng = fresh_k_scale.shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, fresh_rows, fresh_k_data.shape[-1]),
+                         lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, fresh_rows, fng), lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, fresh_rows, fresh_v_data.shape[-1]),
+                         lambda i, c: (i, 0, 0)),
+            pl.BlockSpec((1, fresh_rows, fng), lambda i, c: (i, 0, 0)),
+        ]
+        operands += [fresh_k_data, fresh_k_scale,
+                     fresh_v_data, fresh_v_scale]
     return pl.pallas_call(
         kernel,
         grid=(b, nc),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, c: (i, 0)),
-            pl.BlockSpec((1, hkv, rep, qs, hd), lambda i, c: (i, 0, 0, 0, 0)),
-            pl.BlockSpec((1, chunk, k_data.shape[-1]),
-                         lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, chunk, ng), lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, chunk, v_data.shape[-1]),
-                         lambda i, c: (i, c, 0)),
-            pl.BlockSpec((1, chunk, ng), lambda i, c: (i, c, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, hkv, rep, qs, hd),
                                lambda i, c: (i, 0, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, rep, qs, hd), jnp.float32),
@@ -169,4 +235,4 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
             pltpu.VMEM((hkv, rep, qs, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(valid_len, q, k_data, k_scale, v_data, v_scale)
+    )(*operands)

@@ -22,12 +22,20 @@ Backend selection mirrors ``qdot`` (kernels/qmatmul/ops.py):
 * ``simple``  — dequantize-the-cache + dense-softmax oracle (materializes
   the (…, S) scores; parity baseline only).
 
-Set process-wide via ``set_decode_attn_backend`` or the
-``REPRO_DECODE_ATTN_BACKEND`` env var; the KV chunk width comes from
-``REPRO_DECODE_KV_CHUNK`` (any width works for any cache length: a
-non-dividing final chunk is read clamped/padded and the extra rows are
-masked out). Both fallbacks are validated against ref.py
-(tests/test_decode_attn.py, tests/test_spec_decode.py).
+Set process-wide via ``configure_decode_attn`` (or the
+``REPRO_DECODE_ATTN_BACKEND`` / ``REPRO_DECODE_KV_CHUNK`` env vars, read
+once at import as initial defaults — NOT the same knob as the
+prefill-side ``REPRO_KV_CHUNK`` of models/attention.py). Any chunk width
+works for any cache length: a non-dividing final chunk is read
+clamped/padded and the extra rows are masked out. Both fallbacks are
+validated against ref.py (tests/test_decode_attn.py,
+tests/test_spec_decode.py).
+
+``fresh_kv=(fresh_k, fresh_v, base)`` appends a small raw K/V side
+buffer — quantized in-call with the page's exact write math — at logical
+positions ``base + j`` WITHOUT writing the cache; cache rows at
+positions >= base are masked stale. This is what lets the speculative
+draft propose k tokens with zero cache writes (docs/DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -40,7 +48,8 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attn.kernel import decode_attn_pallas
 from repro.kernels.decode_attn.ref import decode_attn_ref
-from repro.quant.kvcache import KVPage, dequantize_kv
+from repro.quant.kvcache import (KVPage, dequantize_kv, quantize_kv,
+                                 update_page)
 
 BACKENDS = ("auto", "pallas", "grouped", "simple")
 NEG_INF = -1e30
@@ -48,15 +57,27 @@ _backend = os.environ.get("REPRO_DECODE_ATTN_BACKEND", "auto")
 _kv_chunk = int(os.environ.get("REPRO_DECODE_KV_CHUNK", "256"))
 
 
+def configure_decode_attn(backend: Optional[str] = None,
+                          kv_chunk: Optional[int] = None) -> None:
+    """Override the decode-attention knobs process-wide (mirrors
+    ``models/attention.configure_chunking``). Read at TRACE time — rebuild
+    jitted executables, or pass ``backend=`` / ``kv_chunk=`` per call, to
+    switch after tracing."""
+    global _backend, _kv_chunk
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown decode-attn backend {backend!r}; "
+                             f"one of {BACKENDS}")
+        _backend = backend
+    if kv_chunk is not None:
+        if kv_chunk < 1:
+            raise ValueError(f"kv chunk must be >= 1, got {kv_chunk}")
+        _kv_chunk = kv_chunk
+
+
 def set_decode_attn_backend(name: str) -> None:
-    """Select the process-wide decode-attention backend (read at TRACE
-    time — rebuild jitted executables, or pass ``backend=`` per call, to
-    switch after tracing)."""
-    if name not in BACKENDS:
-        raise ValueError(f"unknown decode-attn backend {name!r}; "
-                         f"one of {BACKENDS}")
-    global _backend
-    _backend = name
+    """Back-compat alias for ``configure_decode_attn(backend=...)``."""
+    configure_decode_attn(backend=name)
 
 
 def get_decode_attn_backend() -> str:
@@ -64,10 +85,12 @@ def get_decode_attn_backend() -> str:
 
 
 def set_decode_kv_chunk(n: int) -> None:
-    if n < 1:
-        raise ValueError(f"kv chunk must be >= 1, got {n}")
-    global _kv_chunk
-    _kv_chunk = n
+    """Back-compat alias for ``configure_decode_attn(kv_chunk=...)``."""
+    configure_decode_attn(kv_chunk=n)
+
+
+def get_decode_kv_chunk() -> int:
+    return _kv_chunk
 
 
 def _use_pallas() -> bool:
@@ -89,13 +112,29 @@ def _valid_vec(valid_len, b: int, s: int) -> jax.Array:
     return jnp.broadcast_to(jnp.asarray(valid_len, jnp.int32), (b,))
 
 
-def _simple(q, kp: KVPage, vp: KVPage, valid, causal: bool) -> jax.Array:
+def _fresh_page(raw: jax.Array, like: KVPage) -> KVPage:
+    """Quantize fresh rows with the page's EXACT write math (update_page's
+    quantize-on-insert), so the fused no-write draft sweep reads values
+    bit-identical to what a cache write would have stored."""
+    data, scale = quantize_kv(raw, like.precision, like.group)
+    return KVPage(data=data.astype(like.data.dtype), scale=scale,
+                  precision=like.precision, head_dim=raw.shape[-1],
+                  group=like.group)
+
+
+def _simple(q, kp: KVPage, vp: KVPage, valid, causal: bool,
+            fresh=None) -> jax.Array:
+    if fresh is not None:
+        # reference semantics: fresh rows behave exactly as if written
+        fk, fv, base = fresh
+        kp = update_page(kp, fk, base)
+        vp = update_page(vp, fv, base)
     return decode_attn_ref(q, dequantize_kv(kp), dequantize_kv(vp), valid,
                            causal=causal)
 
 
 def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
-             causal: bool) -> jax.Array:
+             causal: bool, fresh=None) -> jax.Array:
     """Chunked online-softmax decode attention — the kernel's exact math in
     jnp. Chunks are carved out of the cache in place with dynamic slices
     (no reshaped/transposed copy of the full cache), so temp memory is
@@ -116,24 +155,24 @@ def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
         limit = valid[:, None] - s + 1 + jnp.arange(s)[None, :]   # (B, S)
     else:
         limit = jnp.broadcast_to(valid[:, None], (b, s))
+    if fresh is not None:
+        # cache rows at positions >= base are STALE: the fresh side buffer
+        # supersedes them (it holds the rows a cache write would have put
+        # there)
+        base = fresh[2]
+        cache_limit = jnp.minimum(limit, base[:, None])
+    else:
+        cache_limit = limit
 
     def take(page, start):
         return jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
             x, start, chunk, axis=1), page)
 
-    def body(ci, carry):
+    def update(carry, kf, vf, scores_mask):
         m, l, acc = carry
-        start = jnp.minimum(ci * chunk, t - chunk)   # clamp the last chunk
-        kf = dequantize_kv(take(kp, start))          # (B, C, Hkv, hd) f32
-        vf = dequantize_kv(take(vp, start))
         scores = jnp.einsum("bhrsd,bchd->bhrsc", qh, kf,
                             preferred_element_type=jnp.float32) * inv_sqrt
-        pos = start + jnp.arange(chunk)
-        # rows re-read by a clamped start were handled by a prior chunk
-        fresh = pos >= ci * chunk
-        mask = (fresh[None, None, :]
-                & (pos[None, None, :] < limit[:, :, None]))       # (B, S, C)
-        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        scores = jnp.where(scores_mask[:, None, None, :, :], scores, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
         p = jnp.exp(scores - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -142,35 +181,69 @@ def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
                         preferred_element_type=jnp.float32)
         return (m_new, l_new, acc * corr[..., None] + pv)
 
+    def body(ci, carry):
+        start = jnp.minimum(ci * chunk, t - chunk)   # clamp the last chunk
+        kf = dequantize_kv(take(kp, start))          # (B, C, Hkv, hd) f32
+        vf = dequantize_kv(take(vp, start))
+        pos = start + jnp.arange(chunk)
+        # rows re-read by a clamped start were handled by a prior chunk
+        live = pos >= ci * chunk
+        mask = (live[None, None, :]
+                & (pos[None, None, :] < cache_limit[:, :, None]))  # (B,S,C)
+        return update(carry, kf, vf, mask)
+
     m0 = jnp.full((b, hkv, rep, s), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, hkv, rep, s), jnp.float32)
     a0 = jnp.zeros((b, hkv, rep, s, d), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, nc, body, (m0, l0, a0))
+    carry = jax.lax.fori_loop(0, nc, body, (m0, l0, a0))
+    if fresh is not None:
+        fk, fv, base = fresh
+        kf = dequantize_kv(_fresh_page(fk, kp))       # (B, Sf, Hkv, hd)
+        vf = dequantize_kv(_fresh_page(fv, vp))
+        pos_f = base[:, None] + jnp.arange(fk.shape[1])[None, :]  # (B, Sf)
+        mask = pos_f[:, None, :] < limit[:, :, None]              # (B,S,Sf)
+        carry = update(carry, kf, vf, mask)
+    m, l, acc = carry
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)
 
 
 def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int, causal: bool,
-            interpret: bool = False) -> jax.Array:
+            fresh=None, interpret: bool = False) -> jax.Array:
     b, s, h, d = q.shape
     t, hkv = kp.data.shape[1], kp.num_kv_heads
     rep = h // hkv
 
-    def flat(page):
-        data = page.data.reshape(b, t, -1)
+    def flat(page, n):
+        data = page.data.reshape(b, n, -1)
         if page.scale is None:  # bf16 page: dummy unit scales, never read
-            scale = jnp.ones((b, t, 1), jnp.bfloat16)
+            scale = jnp.ones((b, n, 1), jnp.bfloat16)
         else:
             scale = page.scale
         return data, scale
 
-    kd, ks = flat(kp)
-    vd, vs = flat(vp)
+    kd, ks = flat(kp, t)
+    vd, vs = flat(vp, t)
     qk = jnp.moveaxis(q.reshape(b, s, hkv, rep, d), 1, 3)  # (B,Hkv,rep,S,d)
+    fresh_args = {}
+    if fresh is not None:
+        fk, fv, base = fresh
+        sf = fk.shape[1]
+        pad = (-sf) % 8                  # sublane-align the tiny row axis
+        if pad:
+            widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+            fk, fv = jnp.pad(fk, widths), jnp.pad(fv, widths)
+        sfp = sf + pad
+        fkd, fks = flat(_fresh_page(fk, kp), sfp)
+        fvd, fvs = flat(_fresh_page(fv, vp), sfp)
+        fresh_args = dict(fresh_k_data=fkd, fresh_k_scale=fks,
+                          fresh_v_data=fvd, fresh_v_scale=fvs,
+                          base=base[:, None])
     out = decode_attn_pallas(
         qk, kd, ks, vd, vs, valid[:, None],
         precision=kp.precision, group=kp.group, head_dim=d,
-        kv_chunk=kv_chunk, causal=causal, interpret=interpret)
+        kv_chunk=kv_chunk, causal=causal, interpret=interpret,
+        **fresh_args)
     return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)
 
 
@@ -178,7 +251,8 @@ def decode_attention(q: jax.Array, k, v, *,
                      valid_len: Optional[jax.Array] = None,
                      causal: bool = True,
                      backend: Optional[str] = None,
-                     kv_chunk: Optional[int] = None) -> jax.Array:
+                     kv_chunk: Optional[int] = None,
+                     fresh_kv=None) -> jax.Array:
     """(Multi-)query GQA attention of q (B, S, H, hd) against a cached
     K/V (KVPage or raw (B, T, Hkv, hd)). ``valid_len`` (scalar or per-slot
     (B,)) counts valid cache rows INCLUDING the S freshly-written query
@@ -186,7 +260,14 @@ def decode_attention(q: jax.Array, k, v, *,
     ``< valid_len - S + 1 + i`` (S=1 reduces to the plain decode mask),
     with ``causal=False`` every query sees all valid rows (cross-attention
     over precomputed encoder K/V). ``backend`` overrides the process-wide
-    selection for this call. Returns (B, S, H, hd) in q's dtype."""
+    selection for this call.
+
+    ``fresh_kv=(fresh_k, fresh_v, base)`` — raw (B, Sf, Hkv, hd) side
+    buffers plus a per-slot (B,) base position: row j acts exactly as if
+    it had been written (quantize-on-insert) at cache position
+    ``base + j``, and cache rows at positions >= base are masked stale.
+    ``valid_len`` still counts ALL valid rows including the fresh ones.
+    Returns (B, S, H, hd) in q's dtype."""
     backend = _backend if backend is None else backend
     if backend not in BACKENDS:
         raise ValueError(f"unknown decode-attn backend {backend!r}; "
@@ -200,6 +281,11 @@ def decode_attention(q: jax.Array, k, v, *,
         "K and V cache pages must share precision/group"
     b, s, h, d = q.shape
     assert s >= 1, f"decode attention needs at least one query, got s={s}"
+    if fresh_kv is not None:
+        fk, fv, base = fresh_kv
+        assert fk.shape == fv.shape and fk.ndim == 4, (fk.shape, fv.shape)
+        fresh_kv = (fk, fv, jnp.broadcast_to(
+            jnp.asarray(base, jnp.int32), (b,)))
     valid = _valid_vec(valid_len, b, kp.data.shape[1])
     if backend == "pallas" or (backend == "auto" and _use_pallas()):
         if backend == "pallas" and not _use_pallas():
@@ -207,7 +293,7 @@ def decode_attention(q: jax.Array, k, v, *,
                 f"decode-attn backend 'pallas' needs a TPU; running on "
                 f"{jax.default_backend()!r} (use 'grouped' for the "
                 f"identical-math jnp fallback)")
-        return _pallas(q, kp, vp, valid, kv_chunk, causal)
+        return _pallas(q, kp, vp, valid, kv_chunk, causal, fresh_kv)
     if backend == "simple":
-        return _simple(q, kp, vp, valid, causal)
-    return _grouped(q, kp, vp, valid, kv_chunk, causal)
+        return _simple(q, kp, vp, valid, causal, fresh_kv)
+    return _grouped(q, kp, vp, valid, kv_chunk, causal, fresh_kv)

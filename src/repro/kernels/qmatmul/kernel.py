@@ -45,6 +45,17 @@ def _unpack_int4(packed: jax.Array) -> jax.Array:
     return jnp.stack([lo, hi], axis=-1).reshape(n, kh * 2)
 
 
+def _dequant_block(w: jax.Array, s: jax.Array, *, group: int,
+                   packed: bool) -> jax.Array:
+    """One weight tile (BN, BK_store) + scales (BN, BK/G) -> (BN, BK) f32,
+    dequantized in VMEM just before the MXU dot."""
+    if packed:
+        w = _unpack_int4(w)
+    bn, bk = w.shape
+    wf = w.astype(jnp.float32).reshape(bn, bk // group, group)
+    return (wf * s.astype(jnp.float32)[:, :, None]).reshape(bn, bk)
+
+
 def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, group: int, packed: bool):
     k_step = pl.program_id(2)
 
@@ -53,13 +64,7 @@ def _qmatmul_kernel(x_ref, w_ref, s_ref, o_ref, *, group: int, packed: bool):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     x = x_ref[...].astype(jnp.float32)                      # (BM, BK)
-    w = w_ref[...]
-    if packed:
-        w = _unpack_int4(w)                                  # (BN, BK)
-    s = s_ref[...].astype(jnp.float32)                      # (BN, BK/G)
-    bn, bk = w.shape
-    wf = w.astype(jnp.float32).reshape(bn, bk // group, group)
-    wf = (wf * s[:, :, None]).reshape(bn, bk)               # dequant in VMEM
+    wf = _dequant_block(w_ref[...], s_ref[...], group=group, packed=packed)
     o_ref[...] += jax.lax.dot_general(
         x, wf, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -97,3 +102,165 @@ def qmatmul_pallas(x: jax.Array, data: jax.Array, scale: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, data, scale)
+
+
+# ---------------------------------------------------------------------------
+# megakernels (docs/DESIGN.md §12): whole quantized sub-blocks in one launch
+# ---------------------------------------------------------------------------
+
+def _qmlp_kernel(*refs, group: int, packed: bool, swiglu: bool):
+    if swiglu:
+        (x_ref, g_ref, gs_ref, u_ref, us_ref,
+         d_ref, ds_ref, o_ref) = refs
+    else:
+        x_ref, u_ref, us_ref, d_ref, ds_ref, o_ref = refs
+    fi = pl.program_id(1)
+
+    @pl.when(fi == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)                      # (BM, K)
+    wu = _dequant_block(u_ref[...], us_ref[...], group=group, packed=packed)
+    u = jax.lax.dot_general(x, wu, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BM, BF)
+    if swiglu:
+        wg = _dequant_block(g_ref[...], gs_ref[...], group=group,
+                            packed=packed)
+        g = jax.lax.dot_general(x, wg, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    wd = _dequant_block(d_ref[...], ds_ref[...], group=group, packed=packed)
+    o_ref[...] += jax.lax.dot_general(                      # (BM, D)
+        h, wd, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "precision", "act",
+                                             "bm", "bf", "interpret"))
+def qmlp_pallas(x: jax.Array, gate_data, gate_scale, up_data, up_scale,
+                down_data, down_scale, *, group: int = 128,
+                precision: str = "int8", act: str = "swiglu",
+                bm: int = DEFAULT_BM, bf: int = DEFAULT_BN,
+                interpret: bool = False) -> jax.Array:
+    """Fused quantized MLP: y = act-combine(x W_gate^T, x W_up^T) W_down^T
+    with EVERY weight dequantized tile-by-tile in VMEM and the (M, FF)
+    hidden activation living only as (BM, BF) register tiles — it is never
+    written to HBM, and no bf16 copy of any weight ever exists.
+
+    Grid (M/BM, FF/BF) with FF innermost: each FF step computes one hidden
+    tile and immediately accumulates its contribution through W_down into
+    the (BM, D) output block. x: (M, K); gate/up: (FF, K_store); down:
+    (D, FF_store); scales per ``group`` along each contraction. ``act``
+    "swiglu" (gate_* used) or "gelu" (gate_* must be None). Returns (M, D)
+    f32.
+
+    VMEM @ BM=BF=256, K=D=2048: x 1MB (bf16) + 3 weight tiles ~1.5MB
+    (int8) + acc 2MB — comfortably under v5e's ~16MB/core."""
+    m, k = x.shape
+    packed = precision == "int4"
+    swiglu = act == "swiglu"
+    assert (gate_data is None) == (not swiglu), \
+        "gate weights iff act == 'swiglu'"
+    ff = up_data.shape[0]
+    d = down_data.shape[0]
+    bm, bf = min(bm, m), min(bf, ff)
+    assert m % bm == 0 and ff % bf == 0, (m, ff, bm, bf)
+    assert k % group == 0 and bf % group == 0, (k, bf, group)
+    k_store = k // 2 if packed else k
+    bf_store = bf // 2 if packed else bf
+    assert up_data.shape[1] == k_store and down_data.shape[1] * \
+        (2 if packed else 1) == ff, (up_data.shape, down_data.shape)
+
+    kernel = functools.partial(_qmlp_kernel, group=group, packed=packed,
+                               swiglu=swiglu)
+    in_specs = [pl.BlockSpec((bm, k), lambda i, f: (i, 0))]
+    operands = [x]
+    if swiglu:
+        in_specs += [pl.BlockSpec((bf, k_store), lambda i, f: (f, 0)),
+                     pl.BlockSpec((bf, k // group), lambda i, f: (f, 0))]
+        operands += [gate_data, gate_scale]
+    in_specs += [pl.BlockSpec((bf, k_store), lambda i, f: (f, 0)),
+                 pl.BlockSpec((bf, k // group), lambda i, f: (f, 0)),
+                 pl.BlockSpec((d, bf_store), lambda i, f: (0, f)),
+                 pl.BlockSpec((d, bf // group), lambda i, f: (0, f))]
+    operands += [up_data, up_scale, down_data, down_scale]
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, ff // bf),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, d), lambda i, f: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+
+
+def _qkv_kernel(x_ref, q_ref, qs_ref, k_ref, ks_ref, v_ref, vs_ref,
+                oq_ref, ok_ref, ov_ref, *, group: int, packed: bool):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        oq_ref[...] = jnp.zeros_like(oq_ref)
+        ok_ref[...] = jnp.zeros_like(ok_ref)
+        ov_ref[...] = jnp.zeros_like(ov_ref)
+
+    x = x_ref[...].astype(jnp.float32)                      # (BM, BK)
+    for w_ref, s_ref, o_ref in ((q_ref, qs_ref, oq_ref),
+                                (k_ref, ks_ref, ok_ref),
+                                (v_ref, vs_ref, ov_ref)):
+        wf = _dequant_block(w_ref[...], s_ref[...], group=group,
+                            packed=packed)
+        o_ref[...] += jax.lax.dot_general(
+            x, wf, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "precision", "bm",
+                                             "bk", "interpret"))
+def qkv_pallas(x: jax.Array, q_data, q_scale, k_data, k_scale, v_data,
+               v_scale, *, group: int = 128, precision: str = "int8",
+               bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+               interpret: bool = False):
+    """Fused quantized QKV projection: the three decode-path projections
+    share one sweep of the activation — each (BM, BK) x tile is read from
+    HBM once and feeds all three accumulating output blocks, instead of
+    three separate kernel launches re-reading x.
+
+    x: (M, K); q/k/v data: (N_*, K_store) int8 (packed int4: K/2); scales
+    (N_*, K/group). Grid (M/BM, K/BK), K innermost. Returns a 3-tuple of
+    (M, N_*) f32."""
+    m, k = x.shape
+    packed = precision == "int4"
+    nq, nk, nv = q_data.shape[0], k_data.shape[0], v_data.shape[0]
+    bm, bk = min(bm, m), min(bk, k)
+    assert m % bm == 0 and k % bk == 0 and bk % group == 0, (m, k, bm, bk)
+    bk_store = bk // 2 if packed else bk
+
+    kernel = functools.partial(_qkv_kernel, group=group, packed=packed)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((nq, bk_store), lambda i, kk: (0, kk)),
+            pl.BlockSpec((nq, bk // group), lambda i, kk: (0, kk)),
+            pl.BlockSpec((nk, bk_store), lambda i, kk: (0, kk)),
+            pl.BlockSpec((nk, bk // group), lambda i, kk: (0, kk)),
+            pl.BlockSpec((nv, bk_store), lambda i, kk: (0, kk)),
+            pl.BlockSpec((nv, bk // group), lambda i, kk: (0, kk)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, nq), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, nk), lambda i, kk: (i, 0)),
+            pl.BlockSpec((bm, nv), lambda i, kk: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nq), jnp.float32),
+            jax.ShapeDtypeStruct((m, nk), jnp.float32),
+            jax.ShapeDtypeStruct((m, nv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, q_data, q_scale, k_data, k_scale, v_data, v_scale)

@@ -33,10 +33,48 @@ import jax.numpy as jnp
 
 from repro.quant.qtypes import QTensor
 from repro.quant.quantize import unpack_int4
-from repro.kernels.qmatmul.kernel import qmatmul_pallas
+from repro.kernels.qmatmul.kernel import (DEFAULT_BK, DEFAULT_BM, DEFAULT_BN,
+                                          qkv_pallas, qmatmul_pallas,
+                                          qmlp_pallas)
 
 BACKENDS = ("auto", "pallas", "grouped", "simple")
 _backend = os.environ.get("REPRO_QDOT_BACKEND", "auto")
+# Pallas block-shape overrides (None -> kernel defaults); set by
+# configure_qmatmul, swept by kernels/autotune.py. Read at TRACE time.
+_blocks: dict = {"bm": None, "bn": None, "bk": None}
+
+
+def configure_qmatmul(bm: int | None = None, bn: int | None = None,
+                      bk: int | None = None,
+                      backend: str | None = None) -> None:
+    """Override the Pallas qmatmul/megakernel block shapes (and optionally
+    the backend) process-wide — the autotuner's hook (kernels/autotune.py).
+    Read at TRACE time like ``set_qdot_backend``; blocks that do not divide
+    a particular call's shape fall back to the kernel defaults for that
+    call."""
+    global _blocks
+    for name, val in (("bm", bm), ("bn", bn), ("bk", bk)):
+        if val is not None:
+            if val < 128 or val % 128:
+                raise ValueError(f"{name} must be a multiple of 128, "
+                                 f"got {val}")
+            _blocks[name] = val
+    if backend is not None:
+        set_qdot_backend(backend)
+
+
+def get_qmatmul_blocks() -> dict:
+    return dict(_blocks)
+
+
+def _block_kwargs(m: int, n: int, k: int) -> dict:
+    """Tuned block overrides that actually divide this call's shape."""
+    kw = {}
+    for name, dim in (("bm", m), ("bn", n), ("bk", k)):
+        v = _blocks[name]
+        if v is not None and dim % min(v, dim) == 0:
+            kw[name] = v
+    return kw
 
 
 def set_qdot_backend(name: str) -> None:
@@ -132,7 +170,8 @@ def qdot(x: jax.Array, w, out_dtype=None, backend: str | None = None
                     f"precision={w.precision!r} on "
                     f"{jax.default_backend()!r}")
             y = qmatmul_pallas(x2d, w.data, w.scale, group=w.group,
-                               precision=w.precision)
+                               precision=w.precision,
+                               **_block_kwargs(m, n, k))
         elif backend == "grouped":
             y = _dequant_fused(x2d, w)
         else:
@@ -143,3 +182,104 @@ def qdot(x: jax.Array, w, out_dtype=None, backend: str | None = None
                                 preferred_element_type=jnp.float32)
         n_out = w.shape[0]
     return y.reshape(*lead, n_out).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# megakernel entry points (docs/DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _mega_eligible(ws) -> bool:
+    """All operands QTensors of one (precision, group) — the megakernels
+    dequantize every tile with a single rule per launch."""
+    return (all(isinstance(w, QTensor) for w in ws)
+            and len({(w.precision, w.group) for w in ws}) == 1)
+
+
+def _out_dim(w) -> int:
+    return w.data.shape[0] if isinstance(w, QTensor) else w.shape[0]
+
+
+def fused_mlp(x: jax.Array, w_gate, w_up, w_down, act: str = "swiglu",
+              backend: str | None = None) -> jax.Array:
+    """Whole quantized MLP block in one call: on TPU with aligned shapes a
+    single Pallas launch where the (M, FF) hidden activation never reaches
+    HBM and no bf16 weight copy ever exists; everywhere else the EXACT
+    qdot sequence of models/mlp.py (bit-identical fallback — greedy serving
+    output does not depend on which path ran). ``w_gate`` is None for
+    act="gelu"."""
+    backend = backend or _backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown qdot backend {backend!r}; "
+                         f"one of {BACKENDS}")
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2d = x.reshape(-1, k)
+    m = x2d.shape[0]
+    ws = [w for w in (w_gate, w_up, w_down) if w is not None]
+    if _mega_eligible(ws):
+        w = w_up
+        ff, d = _out_dim(w_up), _out_dim(w_down)
+        aligned = (_pallas_aligned(m, ff, k, w.precision)
+                   and d % 128 == 0
+                   and _pallas_aligned(m, d, ff, w.precision))
+        if backend == "pallas" or (backend == "auto" and _use_pallas()
+                                   and aligned):
+            if backend == "pallas" and not (_use_pallas() and aligned):
+                raise ValueError(
+                    f"fused_mlp backend 'pallas' needs a TPU and aligned "
+                    f"shapes; got m={m} ff={ff} d={d} k={k} "
+                    f"precision={w.precision!r} on "
+                    f"{jax.default_backend()!r}")
+            bk = _block_kwargs(m, ff, k)
+            y = qmlp_pallas(
+                x2d,
+                None if w_gate is None else w_gate.data,
+                None if w_gate is None else w_gate.scale,
+                w_up.data, w_up.scale, w_down.data, w_down.scale,
+                group=w.group, precision=w.precision, act=act,
+                bm=bk.get("bm", DEFAULT_BM), bf=bk.get("bn", DEFAULT_BN))
+            return y.reshape(*lead, d).astype(x.dtype)
+    # fallback: models/mlp.py's exact op sequence
+    if act == "swiglu":
+        g = qdot(x, w_gate, backend=backend)
+        u = qdot(x, w_up, backend=backend)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return qdot(h, w_down, backend=backend)
+    h = qdot(x, w_up, backend=backend)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return qdot(h, w_down, backend=backend)
+
+
+def fused_qkv(x: jax.Array, wq, wk, wv, backend: str | None = None):
+    """The three attention projections in one launch: each activation tile
+    is read from HBM once and feeds all three accumulators. Fallback is
+    exactly three ``qdot`` calls (bit-identical). Returns (q, k, v) with
+    qdot's dtype convention."""
+    backend = backend or _backend
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown qdot backend {backend!r}; "
+                         f"one of {BACKENDS}")
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2d = x.reshape(-1, k)
+    m = x2d.shape[0]
+    if _mega_eligible((wq, wk, wv)):
+        nq, nkk, nv = _out_dim(wq), _out_dim(wk), _out_dim(wv)
+        aligned = all(_pallas_aligned(m, n, k, wq.precision)
+                      for n in (nq, nkk, nv))
+        if backend == "pallas" or (backend == "auto" and _use_pallas()
+                                   and aligned):
+            if backend == "pallas" and not (_use_pallas() and aligned):
+                raise ValueError(
+                    f"fused_qkv backend 'pallas' needs a TPU and aligned "
+                    f"shapes; got m={m} n=({nq},{nkk},{nv}) k={k} "
+                    f"precision={wq.precision!r} on "
+                    f"{jax.default_backend()!r}")
+            bk = _block_kwargs(m, nq, k)
+            yq, yk, yv = qkv_pallas(
+                x2d, wq.data, wq.scale, wk.data, wk.scale, wv.data,
+                wv.scale, group=wq.group, precision=wq.precision,
+                bm=bk.get("bm", DEFAULT_BM), bk=bk.get("bk", DEFAULT_BK))
+            return (yq.reshape(*lead, nq).astype(x.dtype),
+                    yk.reshape(*lead, nkk).astype(x.dtype),
+                    yv.reshape(*lead, nv).astype(x.dtype))
+    return (qdot(x, wq, backend=backend), qdot(x, wk, backend=backend),
+            qdot(x, wv, backend=backend))

@@ -80,6 +80,12 @@ def main():
                     help="speculative decoding: draft tokens per round "
                          "(0 disables; the all-int4 draft is derived from "
                          "the plan and shares payloads with the target)")
+    ap.add_argument("--spec-draft", default="model",
+                    choices=("model", "ngram"),
+                    help="with --spec-k: 'model' drafts with the int4 "
+                         "self-draft; 'ngram' proposes by prompt lookup "
+                         "(no draft model — a round costs ~one fused "
+                         "multi-query verify step)")
     ap.add_argument("--check-greedy-parity", action="store_true",
                     help="with --spec-k: also run the non-spec engine on "
                          "the same requests and assert token-identical "
@@ -106,7 +112,7 @@ def main():
     spec = None
     if args.spec_k > 0:
         from repro.serving.spec import SpecConfig
-        spec = SpecConfig(k=args.spec_k)
+        spec = SpecConfig(k=args.spec_k, draft_source=args.spec_draft)
     elif args.check_greedy_parity:
         raise SystemExit("--check-greedy-parity requires --spec-k")
 
@@ -160,7 +166,7 @@ def main():
             engine.plan = plan
             if args.plan_artifact:
                 from repro.quant.compiler import save_artifact
-                if spec is not None:
+                if spec is not None and spec.draft_source == "model":
                     # stamp the draft derivation into the manifest so cold
                     # boots re-derive the identical draft
                     compiled.draft = engine._ensure_draft().to_manifest()
@@ -188,10 +194,15 @@ def main():
               f"at max_seq={max_seq} ({kv_counts})")
 
     if spec is not None:
-        print(f"spec decode: k={spec.k}, draft overhead "
-              f"{engine.draft_overhead_bytes()/2**20:.2f} MiB "
-              f"({engine._ensure_draft().shared_blocks} blocks shared, "
-              f"{engine._ensure_draft().requantized_blocks} re-quantized)")
+        if spec.draft_source == "ngram":
+            print(f"spec decode: k={spec.k}, ngram prompt-lookup draft "
+                  f"(no draft model)")
+        else:
+            print(f"spec decode: k={spec.k}, draft overhead "
+                  f"{engine.draft_overhead_bytes()/2**20:.2f} MiB "
+                  f"({engine._ensure_draft().shared_blocks} blocks shared, "
+                  f"{engine._ensure_draft().requantized_blocks} "
+                  f"re-quantized)")
 
     if requests is not None:
         t0 = time.perf_counter()

@@ -61,11 +61,21 @@ def init_kv_cache(batch: int, max_seq: int, num_kv_heads: int, head_dim: int,
 def _project_qkv(p, x, kv_x, num_heads, num_kv_heads, head_dim, qk_norm,
                  norm_eps):
     b, s, _ = x.shape
-    q = qdot(x, p["wq"]).reshape(b, s, num_heads, head_dim)
-    src = x if kv_x is None else kv_x
-    skv = src.shape[1]
-    k = qdot(src, p["wk"]).reshape(b, skv, num_kv_heads, head_dim)
-    v = qdot(src, p["wv"]).reshape(b, skv, num_kv_heads, head_dim)
+    if kv_x is None:
+        # self-attention: all three projections share x — one fused launch
+        # on TPU, bit-identical qdot triple elsewhere
+        from repro.kernels.qmatmul.ops import fused_qkv
+        yq, yk, yv = fused_qkv(x, p["wq"], p["wk"], p["wv"])
+        q = yq.reshape(b, s, num_heads, head_dim)
+        k = yk.reshape(b, s, num_kv_heads, head_dim)
+        v = yv.reshape(b, s, num_kv_heads, head_dim)
+        skv = s
+    else:
+        q = qdot(x, p["wq"]).reshape(b, s, num_heads, head_dim)
+        src = kv_x
+        skv = src.shape[1]
+        k = qdot(src, p["wk"]).reshape(b, skv, num_kv_heads, head_dim)
+        v = qdot(src, p["wv"]).reshape(b, skv, num_kv_heads, head_dim)
     if qk_norm:
         q = rms_norm(q, p["q_norm"], norm_eps)
         k = rms_norm(k, p["k_norm"], norm_eps)
@@ -235,6 +245,7 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
               cache_pos: Optional[jax.Array] = None,
               cached_kv: Optional[KVCache] = None,
               valid_bias: Optional[jax.Array] = None,
+              fresh_kv: Optional[tuple] = None,
               emit_kv: bool = False):
     """General attention entry point.
 
@@ -246,6 +257,13 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
         rebuilt inline for direct callers); a quantized cache (KVPage)
         quantizes-on-insert and runs the fused streaming kernel —
         no (…, S_max) score tensor is materialized.
+      * read-only decode (fused draft propose, docs/DESIGN.md §12):
+        cache AND ``fresh_kv=(fresh_k, fresh_v, count)`` given — the new
+        k/v are appended at row ``count`` of the raw (B, K, Hkv, hd) side
+        buffers instead of being written to the cache; the decode kernel
+        sweeps the buffer rows at logical positions ``cache_pos + j`` with
+        the page's exact quantize-on-write math. Returns the UPDATED side
+        buffers (as a KVCache) in the cache slot; the cache is untouched.
       * cross-attention decode: cached_kv given (precomputed encoder K/V,
         raw or quantized).
     Returns (out, new_cache_or_None).
@@ -270,7 +288,20 @@ def attention(p, x, *, num_heads: int, num_kv_heads: int, head_dim: int,
         q = rope(q, positions, rope_theta)
         k = rope(k, positions, rope_theta)
 
-    if cache is not None:
+    if cache is not None and fresh_kv is not None:
+        # Read-only draft propose: k/v go into the side buffer at row
+        # ``count``; the cache itself is never written (zero draft-side
+        # KV traffic — the whole point of the fused propose path).
+        fk, fv, count = fresh_kv
+        fk = jax.lax.dynamic_update_slice(
+            fk, k.astype(fk.dtype), (0, count, 0, 0))
+        fv = jax.lax.dynamic_update_slice(
+            fv, v.astype(fv.dtype), (0, count, 0, 0))
+        out = decode_attention(q, cache.k, cache.v,
+                               valid_len=cache_pos + count + s,
+                               fresh_kv=(fk, fv, cache_pos))
+        new_cache = KVCache(k=fk, v=fv)          # the updated side buffers
+    elif cache is not None:
         # Decode: insert new k/v at cache_pos, attend over the cache.
         # cache_pos is a scalar (whole batch at one position) or a (B,)
         # vector (continuous batching: per-slot positions).

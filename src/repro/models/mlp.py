@@ -6,20 +6,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.qmatmul.ops import fused_mlp
 from repro.models.common import dense_init, qdot
 
 
 def swiglu(p, x):
-    g = qdot(x, p["w_gate"])
-    u = qdot(x, p["w_up"])
-    return qdot(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
-                p["w_down"])
+    # one Pallas launch on TPU (the (S, FF) hidden never reaches HBM);
+    # bit-identical qdot sequence elsewhere — kernels/qmatmul/ops.fused_mlp
+    return fused_mlp(x, p["w_gate"], p["w_up"], p["w_down"], act="swiglu")
 
 
 def gelu_mlp(p, x):
-    h = qdot(x, p["w_up"])
-    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    return qdot(h, p["w_down"])
+    return fused_mlp(x, None, p["w_up"], p["w_down"], act="gelu")
 
 
 def mlp(p, x, act: str):

@@ -54,6 +54,23 @@ class Model:
     def decode_step(self, params, cache, tokens):
         return self.module.decode_step(params, cache, tokens, self.cfg)
 
+    # ---- speculative propose (fused, docs/DESIGN.md §12) -------------------
+    @property
+    def supports_fused_propose(self) -> bool:
+        """True when the family has a read-only draft decode step (dense /
+        MoE — the transformer module); other families fall back to the
+        two-pass throwaway-cache propose."""
+        return hasattr(self.module, "draft_propose_step")
+
+    def draft_propose_step(self, params, cache, fresh_k, fresh_v, count,
+                           tokens):
+        """One read-only draft decode step: k/v go to row ``count`` of the
+        (L_draft, B, K, Hkv, hd) side buffers, never to the cache. Returns
+        (logits, fresh_k, fresh_v)."""
+        return self.module.draft_propose_step(params, cache, fresh_k,
+                                              fresh_v, count, tokens,
+                                              self.cfg)
+
     # ---- speculative verify (docs/DESIGN.md §11) ---------------------------
     def spec_verify(self, params, cache, tokens):
         """Score a (B, K+1) verify window against the cache: attention

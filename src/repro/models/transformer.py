@@ -83,7 +83,7 @@ def init(key, cfg):
 # ---------------------------------------------------------------------------
 
 def _layer(p, h, positions, cfg, cache_kv=None, cache_pos=None,
-           valid_bias=None):
+           valid_bias=None, fresh_kv=None):
     p = unshard_fsdp(p)
     ln1 = p.get("ln1")
     ln2 = p.get("ln2")
@@ -93,7 +93,7 @@ def _layer(p, h, positions, cfg, cache_kv=None, cache_pos=None,
         head_dim=cfg.head_dim, positions=positions,
         rope_theta=cfg.rope_theta, causal=True, qk_norm=cfg.qk_norm,
         norm_eps=cfg.norm_eps, cache=cache_kv, cache_pos=cache_pos,
-        valid_bias=valid_bias)
+        valid_bias=valid_bias, fresh_kv=fresh_kv)
     h = h + a
     hn = norm(h, ln2, cfg)
     aux = {}
@@ -232,6 +232,56 @@ def decode_step(params, cache: DecodeCache, tokens: jax.Array, cfg):
     head_w = unshard_fsdp(params["final"]).get("head", embed_w)
     logits = constrain(lm_head(h, head_w), ("batch", None, "model"))
     return logits, DecodeCache(k=new_k, v=new_v, pos=cache.pos + s)
+
+
+def draft_propose_step(params, cache: DecodeCache, fresh_k, fresh_v,
+                       count, tokens: jax.Array, cfg):
+    """One READ-ONLY draft decode step (fused spec propose, docs/DESIGN.md
+    §12): the cache is only read — each layer's new k/v land in row
+    ``count`` of the raw per-layer side buffers ``fresh_k``/``fresh_v``
+    ((L_draft, B, K, Hkv, hd)), and attention sweeps cache + buffer in one
+    fused pass with buffer rows at logical positions ``cache.pos + j``.
+    A k-round therefore costs ZERO draft-side cache writes (no throwaway
+    cache copy, no k*L quantize-and-scatter) and one sweep per step.
+
+    ``params`` may be a truncated draft (first N layers of the target —
+    compile_draft_plan(draft_layers=N)); cache pages are sliced per draft
+    segment, which always sits inside one page (kv_take_layers).
+
+    tokens: (B, 1) -> (logits (B, 1, V_pad), fresh_k, fresh_v) with the
+    updated buffers carrying row ``count``."""
+    dtype = dtype_of(cfg)
+    b, s = tokens.shape
+    embed_w = unshard_fsdp(params["embed"])["tok"]
+    h = constrain(embed_lookup(embed_w, tokens, dtype),
+                  ("batch", None, None))
+    positions = decode_positions(cache.pos + count, b, s)
+
+    def body(h, xs):
+        p_layer, k_l, v_l, fk_l, fv_l = xs
+        h2, _, new_kv = _layer(p_layer, h, positions, cfg,
+                               cache_kv=A.KVCache(k=k_l, v=v_l),
+                               cache_pos=cache.pos,
+                               fresh_kv=(fk_l, fv_l, count))
+        return h2, (new_kv.k, new_kv.v)
+
+    from repro.quant.apply import segment_slices
+    from repro.quant.kvcache import kv_take_layers
+    fks, fvs = [], []
+    for part, lo, hi in segment_slices(params["layers"]):
+        h, (nfk, nfv) = jax.lax.scan(
+            body, h, (part, kv_take_layers(cache.k, lo, hi),
+                      kv_take_layers(cache.v, lo, hi),
+                      fresh_k[lo:hi], fresh_v[lo:hi]),
+            unroll=unroll_flag())
+        fks.append(nfk)
+        fvs.append(nfv)
+    fresh_k = jnp.concatenate(fks, axis=0) if len(fks) > 1 else fks[0]
+    fresh_v = jnp.concatenate(fvs, axis=0) if len(fvs) > 1 else fvs[0]
+    h = norm(h, params["final"].get("norm"), cfg)
+    head_w = unshard_fsdp(params["final"]).get("head", embed_w)
+    logits = constrain(lm_head(h, head_w), ("batch", None, "model"))
+    return logits, fresh_k, fresh_v
 
 
 # ---------------------------------------------------------------------------

@@ -256,18 +256,21 @@ class DraftPlan:
     payloads (the manifest number; by construction it is bounded by the
     int4 size of the blocks it re-quantizes)."""
     params: Any
-    precisions: tuple[str, ...]     # per-block draft decision (plan order)
+    precisions: tuple[str, ...]     # per-block draft decision (plan order;
+                                    # "skip" = truncated away, not executed)
     shared_blocks: int              # decisions sharing target payloads
     requantized_blocks: int         # decisions with a draft-only int4 copy
     overhead_bytes: float
     group: int
+    draft_layers: Optional[int] = None  # truncated layer count (None: full)
 
     def to_manifest(self) -> dict:
         return {"precisions": list(self.precisions),
                 "shared_blocks": self.shared_blocks,
                 "requantized_blocks": self.requantized_blocks,
                 "overhead_bytes": float(self.overhead_bytes),
-                "group": self.group}
+                "group": self.group,
+                "draft_layers": self.draft_layers}
 
 
 def _draft_tree(tree: Any, group: int, min_ndim: int) -> tuple[Any, float]:
@@ -296,8 +299,27 @@ def _draft_tree(tree: Any, group: int, min_ndim: int) -> tuple[Any, float]:
     return out, overhead[0]
 
 
+def _slice_stack_layers(tree: Any, take: int) -> Any:
+    """Slice the leading (stacked-layer) axis of every leaf to [0, take),
+    rebuilding the STATIC logical shape QTensors carry (a plain tree.map
+    would slice data/scale but leave ``shape`` stale)."""
+    from repro.quant.qtypes import QTensor
+
+    def leaf(x):
+        if isinstance(x, QTensor):
+            return QTensor(data=x.data[:take], scale=x.scale[:take],
+                           precision=x.precision,
+                           shape=(take,) + tuple(x.shape[1:]),
+                           group=x.group)
+        return x[:take]
+
+    return jax.tree.map(leaf, tree,
+                        is_leaf=lambda x: isinstance(x, QTensor))
+
+
 def compile_draft_plan(model, params, plan: Optional[QuantPlan],
-                       group: int = 128) -> DraftPlan:
+                       group: int = 128,
+                       draft_layers: Optional[int] = None) -> DraftPlan:
     """Derive the self-speculative all-int4 draft from a served model.
 
     ``params`` is the tree the engine serves (compiled: segmented stacks +
@@ -309,8 +331,25 @@ def compile_draft_plan(model, params, plan: Optional[QuantPlan],
     (raw serving) the draft is a uniform int4 copy of every eligible
     block. Segment boundaries are preserved 1:1 with the target, so the
     draft executes through the identical segmented scan paths (hybrid unit
-    cuts included) and shares the target's KV-cache layout."""
+    cuts included) and shares the target's KV-cache layout.
+
+    ``draft_layers=N`` truncates the draft to the first N layers of the
+    stack (early-exit drafting, fused-propose families only — the target's
+    verification keeps greedy output exact regardless of draft depth). A
+    segment the cut lands inside is sliced; slicing materializes a copy,
+    so sliced segments count toward ``overhead_bytes`` even when their
+    precision would otherwise share the target payload. Truncated-away
+    blocks are stamped ``"skip"`` in ``precisions``."""
     cfg = model.cfg
+    if draft_layers is not None:
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"draft_layers needs the fused propose path (dense/moe "
+                f"families); family is {cfg.family!r}")
+        if not 1 <= draft_layers <= cfg.num_layers:
+            raise ValueError(
+                f"draft_layers must be in [1, {cfg.num_layers}], got "
+                f"{draft_layers}")
     new = dict(params)
     stacks, extras = family_layout(cfg)
     overhead = 0.0
@@ -318,28 +357,46 @@ def compile_draft_plan(model, params, plan: Optional[QuantPlan],
     n_blocks = plan_length(cfg)
     precisions = ["int4"] * n_blocks
 
+    def mark_skipped():
+        if draft_layers is None:
+            return
+        for spec in stacks:                    # dense/moe: one "layers" stack
+            for i in range(draft_layers, spec.hi - spec.lo):
+                precisions[spec.lo + i] = "skip"
+
     if plan is None:
         for key, val in params.items():
+            n = draft_layers if key == "layers" else None
             if isinstance(val, SegmentedParams):
                 segs = []
                 for seg in val.segments:
-                    t, ob = _draft_tree(seg.params, group, min_ndim=3)
+                    if n is not None and seg.start >= n:
+                        break
+                    stop = min(seg.stop, n) if n is not None else seg.stop
+                    src = (_slice_stack_layers(seg.params, stop - seg.start)
+                           if stop < seg.stop else seg.params)
+                    t, ob = _draft_tree(src, group, min_ndim=3)
                     segs.append(Segment(precision="int4", start=seg.start,
-                                        stop=seg.stop, params=t))
+                                        stop=stop, params=t))
                     overhead += ob
-                new[key] = SegmentedParams(segments=segs,
-                                           num_layers=val.num_layers)
+                new[key] = SegmentedParams(
+                    segments=segs,
+                    num_layers=n if n is not None else val.num_layers)
             elif key in ("embed", "shared") or any(s.key == key
                                                    for s in stacks):
+                if n is not None:
+                    val = _slice_stack_layers(val, n)
                 new[key], ob = _draft_tree(val, group,
                                            min_ndim=3 if any(
                                                s.key == key for s in stacks)
                                            else 2)
                 overhead += ob
-        requant = n_blocks
+        mark_skipped()
+        requant = sum(1 for p in precisions if p != "skip")
         return DraftPlan(params=new, precisions=tuple(precisions),
                          shared_blocks=0, requantized_blocks=requant,
-                         overhead_bytes=overhead, group=group)
+                         overhead_bytes=overhead, group=group,
+                         draft_layers=draft_layers)
 
     assert len(plan.decisions) == n_blocks, \
         (f"plan has {len(plan.decisions)} decisions; family {cfg.family!r} "
@@ -350,21 +407,40 @@ def compile_draft_plan(model, params, plan: Optional[QuantPlan],
             (f"draft derivation expects compiled (segmented) stacks; "
              f"{spec.key!r} is {type(layers).__name__} — compile the plan "
              f"first (quant/compiler.compile_plan)")
+        n = draft_layers if spec.key == "layers" else None
         segs = []
         for seg in layers.segments:
-            if seg.precision in DRAFT_SHARED:
+            if n is not None and seg.start >= n:
+                break
+            sliced = n is not None and seg.stop > n
+            stop = n if sliced else seg.stop
+            if seg.precision in DRAFT_SHARED and not sliced:
                 segs.append(seg)               # payloads shared verbatim
-                shared += seg.stop - seg.start
-                for i in range(seg.start, seg.stop):
+                shared += stop - seg.start
+                for i in range(seg.start, stop):
+                    precisions[spec.lo + i] = seg.precision
+            elif seg.precision in DRAFT_SHARED:
+                # the slice materializes a draft-only copy of an
+                # already-aggressive payload — same precision, real bytes
+                t = _slice_stack_layers(seg.params, stop - seg.start)
+                segs.append(Segment(precision=seg.precision,
+                                    start=seg.start, stop=stop, params=t))
+                overhead += tree_nbytes(t)
+                shared += stop - seg.start
+                for i in range(seg.start, stop):
                     precisions[spec.lo + i] = seg.precision
             else:
-                t, ob = _draft_tree(seg.params, group, min_ndim=3)
+                src = (_slice_stack_layers(seg.params, stop - seg.start)
+                       if sliced else seg.params)
+                t, ob = _draft_tree(src, group, min_ndim=3)
                 segs.append(Segment(precision="int4", start=seg.start,
-                                    stop=seg.stop, params=t))
+                                    stop=stop, params=t))
                 overhead += ob
-                requant += seg.stop - seg.start
-        new[spec.key] = SegmentedParams(segments=segs,
-                                        num_layers=layers.num_layers)
+                requant += stop - seg.start
+        new[spec.key] = SegmentedParams(
+            segments=segs,
+            num_layers=n if n is not None else layers.num_layers)
+    mark_skipped()
     for spec in extras:
         prec = plan.decisions[spec.index].precision
         if prec in DRAFT_SHARED:
@@ -377,7 +453,8 @@ def compile_draft_plan(model, params, plan: Optional[QuantPlan],
             requant += 1
     return DraftPlan(params=new, precisions=tuple(precisions),
                      shared_blocks=shared, requantized_blocks=requant,
-                     overhead_bytes=overhead, group=group)
+                     overhead_bytes=overhead, group=group,
+                     draft_layers=draft_layers)
 
 
 # ---------------------------------------------------------------------------
@@ -433,7 +510,13 @@ def save_artifact(directory: str, compiled: CompiledPlan,
     none. ``mesh`` only stamps the save-time layout into the manifest for
     provenance."""
     from repro.checkpoint import ckpt
+    from repro.kernels.autotune import current_stamp
     manifest = compiled.manifest()
+    # which kernel-tuning config (kernels/autotune.py) was live when the
+    # artifact was produced — "untuned" for library defaults. Cold-booted
+    # replicas re-resolve against their own device's cache; this records
+    # provenance for the numbers benchmarked at save time.
+    manifest["autotune"] = current_stamp()
     if mesh is not None:
         manifest["saved_mesh"] = {
             "axis_names": list(mesh.axis_names),

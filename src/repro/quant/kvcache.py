@@ -12,11 +12,21 @@ Layout
 A page covers a contiguous run of cache layers at ONE precision:
 
   data  : (L?, B, S, Hkv, hd)      int8   ("int8")
-          (L?, B, S, Hkv, hd//2)   int8   ("int4", two nibbles per byte)
+          (L?, B, S, F // 2)       int8   ("int4", two nibbles per byte,
+                                           stored FLAT over F = Hkv * hd)
           (L?, B, S, Hkv, hd)      bf16   ("bf16", scale is None)
   scale : (L?, B, S, F // group)   bf16   — F = Hkv * hd, groups along the
           FLATTENED head axis so small head dims still amortize one bf16
           scale over ``group`` elements (bytes/slot stays ~bits/8 per elem).
+
+int4 pages drop the (Hkv, hd//2) head split in storage: the packed payload
+keeps the flat F/2 axis as its minor dimension. The bytes are identical
+(row-major (Hkv, hd//2) and F/2 coincide) but the SHAPE matters to XLA's
+CPU fallback codegen: elementwise nibble/convert loops over a minor
+dimension of hd//2 (32 for hd=64) de-vectorize to ~4x the cost of the
+same ops over an F/2-wide minor axis, which made int4 decode pay ~2x over
+int8 despite reading half the bytes. ``dequantize_kv`` restores the
+(Hkv, hd) head split only on its OUTPUT, after the hot unpack/scale ops.
 
 Pages are registered pytrees, so they ride through jit / lax.scan (the
 leading layer axis is scanned over exactly like a raw stacked cache) and
@@ -114,11 +124,13 @@ class KVPage:
 
     @property
     def num_kv_heads(self) -> int:
+        if self.precision == "int4":    # flat (..., F // 2) payload
+            return 2 * self.data.shape[-1] // self.head_dim
         return self.data.shape[-2]
 
     @property
     def seq_len(self) -> int:
-        return self.data.shape[-4]
+        return self.data.shape[-2 if self.precision == "int4" else -4]
 
 
 def is_kv_page(x: Any) -> bool:
@@ -158,20 +170,26 @@ def quantize_kv(x: jax.Array, precision: str, group: int
         return q.reshape(*lead, hkv, hd), scale
     if precision == "int4":
         assert hd % 2 == 0, f"int4 KV packing needs an even head dim, {hd}"
-        flat = q.reshape(*lead, hkv * hd // 2, 2)
-        packed = ((flat[..., 0] & 0x0F)
-                  | ((flat[..., 1] & 0x0F) << 4)).astype(jnp.int8)
-        return packed.reshape(*lead, hkv, hd // 2), scale
+        # split-half packing over the flat F axis: byte j holds flat
+        # elements j (low nibble) and j + F/2 (high nibble), so the unpack
+        # on the decode hot path is a single concat — no interleave
+        # shuffle. Stored FLAT (..., F//2): see the module docstring.
+        flat = q.reshape(*lead, hkv * hd)
+        half = hkv * hd // 2
+        packed = ((flat[..., :half] & 0x0F)
+                  | ((flat[..., half:] & 0x0F) << 4)).astype(jnp.int8)
+        return packed, scale
     raise ValueError(f"cannot quantize KV to {precision!r}")
 
 
 def _unpack_kv_int4(data: jax.Array) -> jax.Array:
-    lo = (data & 0x0F).astype(jnp.int8)
-    hi = ((data >> 4) & 0x0F).astype(jnp.int8)
-    lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = jnp.where(hi >= 8, hi - 16, hi)
-    return jnp.stack([lo, hi], axis=-1).reshape(
-        *data.shape[:-1], data.shape[-1] * 2)
+    """(..., P) packed -> (..., 2P): low nibbles are flat elements [0, P),
+    high nibbles [P, 2P) (split-half layout — see ``quantize_kv``). The
+    low nibble sign-extends with xor/sub (no select); the high nibble via
+    int8 arithmetic right-shift — one op each."""
+    lo = ((data & 0x0F) ^ 8) - 8
+    hi = data >> 4
+    return jnp.concatenate([lo, hi], axis=-1).astype(jnp.int8)
 
 
 def dequantize_kv(page: KVPage, dtype=jnp.float32) -> jax.Array:
@@ -180,7 +198,16 @@ def dequantize_kv(page: KVPage, dtype=jnp.float32) -> jax.Array:
         return page.data.astype(dtype)
     data = page.data
     if page.precision == "int4":
-        data = _unpack_kv_int4(data)
+        # unpack over the stored flat F axis; every op here runs with the
+        # wide F/2 (then F) minor dimension — the head split is restored
+        # only on the output reshape below
+        data = _unpack_kv_int4(data)                      # (..., F) int8
+        *lead, f = data.shape
+        g = data.astype(jnp.float32).reshape(*lead, f // page.group,
+                                             page.group)
+        out = g * page.scale.astype(jnp.float32)[..., None]
+        return out.reshape(*lead, f // page.head_dim,
+                           page.head_dim).astype(dtype)
     *lead, hkv, hd = data.shape
     g = data.astype(jnp.float32).reshape(*lead, hkv * hd // page.group,
                                          page.group)
@@ -302,6 +329,30 @@ def kv_rejoin(field, parts: list):
     if isinstance(field, KVPage):
         return parts[0]
     return jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+
+def kv_take_layers(field, lo: int, hi: int):
+    """Read-only slice of cache layers [lo, hi) from any container (raw
+    stack, single page, page tuple). Unlike ``kv_segment`` the range does
+    not have to BE a page — it only has to sit INSIDE one. The fused draft
+    propose path iterates the DRAFT's segments, which refine the target
+    segmentation the pages were cut at (quant/compiler.compile_draft_plan
+    preserves boundaries; truncation only shortens the last segment), so
+    single-page coverage is guaranteed by construction."""
+    if isinstance(field, tuple):
+        plo = 0
+        for page in field:
+            phi = plo + page.data.shape[0]
+            if plo <= lo and hi <= phi:
+                return jax.tree.map(lambda x: x[lo - plo:hi - plo], page)
+            plo = phi
+        raise ValueError(
+            f"layer range [{lo},{hi}) straddles KV page boundaries "
+            f"(page lengths {_page_lengths(field)}) — draft segments must "
+            f"refine the segmentation the cache pages were cut at")
+    if isinstance(field, KVPage):
+        return jax.tree.map(lambda x: x[lo:hi], field)
+    return field[lo:hi]
 
 
 def kv_layer(field, i: int):

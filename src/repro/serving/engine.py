@@ -103,6 +103,9 @@ class ServeStats:
     draft_accepted: int = 0    # draft tokens verified AND committed
     acceptance_rate: float = 0.0   # accepted / proposed (realized uplift)
     tokens_per_round: float = 0.0  # committed tokens per live round
+    # kernels/autotune.py provenance: the tune-cache key whose config the
+    # engine's executables were traced under, or "untuned"
+    tuned: str = "untuned"
 
 
 class ServeEngine:
@@ -111,7 +114,8 @@ class ServeEngine:
                  eos_id: Optional[int] = None, pad_id: int = 0,
                  mesh=None, kv_precision="bf16",
                  kv_group: Optional[int] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 autotune: bool = True):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
@@ -132,6 +136,16 @@ class ServeEngine:
                                     serving_param_shardings(params, mesh))
         self.params = params
         self.kv_plan = self._resolve_kv_plan(kv_precision, kv_group)
+        # kernels/autotune.py: swap in the tuned chunk/tile config (if one
+        # is cached for this device/family/precision) BEFORE the jitted
+        # paths below trace — every knob is read at trace time. "untuned"
+        # means library defaults; the stamp lands in ServeStats and saved
+        # artifact manifests for provenance.
+        self.tuned = "untuned"
+        if autotune:
+            from repro.kernels.autotune import kv_label, maybe_apply_tuned
+            self.tuned = maybe_apply_tuned(self.cfg.family,
+                                           kv_label(self.kv_plan))
         self._decode = self._traced(jax.jit(model.decode_step))
         # built once, cached (enc-dec prefill also takes encoder frames)
         self._prefill = self._traced(jax.jit(self._prefill_encdec
@@ -354,9 +368,11 @@ class ServeEngine:
         if self._draft is None:
             from repro.quant.compiler import compile_draft_plan
             draft = compile_draft_plan(self.model, self.params, self.plan,
-                                       self.spec.draft_group)
+                                       self.spec.draft_group,
+                                       draft_layers=self.spec.draft_layers)
             stamp = self._draft_stamp
-            if stamp and stamp.get("group") == self.spec.draft_group:
+            if (stamp and stamp.get("group") == self.spec.draft_group
+                    and stamp.get("draft_layers") == self.spec.draft_layers):
                 # cold boot must re-derive the exact stamped draft; a
                 # different draft_group is an explicit operator override
                 if list(draft.precisions) != stamp.get("precisions"):
@@ -377,20 +393,34 @@ class ServeEngine:
 
     @property
     def draft_params(self):
+        # the ngram draft proposes from committed context — no draft model
+        # exists; the round's propose branch never reads these params
+        if self.spec is not None and self.spec.draft_source == "ngram":
+            return self.params
         return self._ensure_draft().params
 
     def draft_overhead_bytes(self) -> float:
         """Draft-only weight bytes (blocks the plan left raw/int8, re-
         quantized to int4 for the draft); everything else is shared with
         the target byte-for-byte."""
+        if self.spec is not None and self.spec.draft_source == "ngram":
+            return 0.0
         return float(self._ensure_draft().overhead_bytes)
 
     def _spec_fn(self, rounds: int):
         key = ("spec", rounds)
         if key not in self._chunk_fns:
             from repro.serving.spec import make_spec_round
+            fused = (self.spec.fused_propose
+                     and self.model.supports_fused_propose)
+            if self.spec.draft_layers is not None and not fused:
+                raise ValueError(
+                    f"spec draft_layers needs the fused propose path; "
+                    f"family {self.model.cfg.family!r} does not support it")
             run = make_spec_round(self.model, self.spec.k, rounds,
-                                  self.eos_id, self.mesh)
+                                  self.eos_id, self.mesh,
+                                  fused_propose=fused,
+                                  draft_source=self.spec.draft_source)
             self._chunk_fns[key] = self._traced(jax.jit(run))
         return self._chunk_fns[key]
 
@@ -643,7 +673,8 @@ class ServeEngine:
             acceptance_rate=(spec_m["accepted"] / spec_m["proposed"]
                              if spec_m["proposed"] else 0.0),
             tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
-                              if spec_m["rounds"] else 0.0))
+                              if spec_m["rounds"] else 0.0),
+            tuned=self.tuned)
         return outputs, stats
 
     # -- diagnostics -----------------------------------------------------------
@@ -686,6 +717,8 @@ class ServeEngine:
         weight-bytes-bound, so spec serving reads
         ``(target + k * draft) / tokens_per_round`` bytes per token vs
         ``target`` for the baseline."""
+        if self.spec is not None and self.spec.draft_source == "ngram":
+            return 0.0
         return self._tree_weight_bytes(self.draft_params)
 
     def weight_bytes_per_device(self) -> float:

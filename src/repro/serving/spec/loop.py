@@ -8,7 +8,10 @@ engine scans ``chunk`` rounds inside ONE jitted call):
    from each slot's *pending* token, sampling K proposals from its masked
    distribution q. The draft reads and writes a throwaway functional copy
    of the SAME cache — its writes are discarded, so no draft-side KV
-   memory, no draft prefill, no cache-sync protocol.
+   memory, no draft prefill, no cache-sync protocol. (With
+   ``draft_source="ngram"`` the proposals instead come from prompt
+   lookup — no draft model runs at all; q becomes the one-hot of the
+   copied tokens.)
 2. **Verify** — the target scores the (K+1)-token window
    ``[pending, x_1..x_K]`` in one multi-query decode pass
    (``Model.spec_verify`` — fused causal-offset attention for
@@ -63,13 +66,43 @@ class SpecConfig:
 
     ``k`` — draft tokens proposed per round (the verify window is k+1
     positions wide). ``draft_group`` — quantization group for the
-    draft-only int4 copies of raw/int8 blocks."""
+    draft-only int4 copies of raw/int8 blocks. ``fused_propose`` — run the
+    draft through the read-only fused propose path (zero draft-side cache
+    writes, docs/DESIGN.md §12) on families that support it; the two-pass
+    throwaway-cache propose is the fallback (and the parity oracle).
+    ``draft_layers`` — truncate the draft to the first N layers (early-exit
+    drafting; verification keeps greedy output exact regardless of draft
+    quality). Requires ``fused_propose`` and a dense/MoE family.
+    ``draft_source`` — "model" runs the int4 self-draft; "ngram" proposes
+    by prompt lookup (match the context's trailing bigram, copy the k
+    tokens that followed it): zero draft-side model calls, so a round
+    costs ~one fused multi-query verify step — the regime where spec pays
+    off even on a FLOPs-bound backend. Verification is identical either
+    way, so greedy output never depends on the draft source."""
     k: int = 4
     draft_group: int = 128
+    fused_propose: bool = True
+    draft_layers: int | None = None
+    draft_source: str = "model"
 
     def __post_init__(self):
         if self.k < 1:
             raise ValueError(f"spec k must be >= 1, got {self.k}")
+        if self.draft_source not in ("model", "ngram"):
+            raise ValueError(f"draft_source must be 'model' or 'ngram', "
+                             f"got {self.draft_source!r}")
+        if self.draft_source == "ngram" and self.draft_layers is not None:
+            raise ValueError("draft_layers only applies to the model "
+                             "draft; the ngram draft runs no model")
+        if self.draft_layers is not None:
+            if self.draft_layers < 1:
+                raise ValueError(f"draft_layers must be >= 1, got "
+                                 f"{self.draft_layers}")
+            if not self.fused_propose:
+                raise ValueError(
+                    "draft_layers needs fused_propose=True: the two-pass "
+                    "propose runs the draft through decode_step, whose "
+                    "cache segmentation must match the full target stack")
 
 
 class SpecMetrics(NamedTuple):
@@ -86,7 +119,9 @@ class SpecMetrics(NamedTuple):
 
 
 def spec_round(model, params, draft_params, state: B.DecodeState, k: int,
-               eos_id) -> tuple[B.DecodeState, SpecMetrics]:
+               eos_id, *, fused_propose: bool = False,
+               draft_source: str = "model"
+               ) -> tuple[B.DecodeState, SpecMetrics]:
     """One draft-propose / target-verify / accept / rollback round."""
     vocab = model.cfg.vocab_size
     b = state.num_slots
@@ -98,24 +133,81 @@ def spec_round(model, params, draft_params, state: B.DecodeState, k: int,
     pending = jnp.take_along_axis(state.tokens, pend_idx[:, None], 1)[:, 0]
     key, pkey, ukey, zkey = jax.random.split(state.key, 4)
 
-    # -- 1) draft propose: K single-token steps on a throwaway cache copy --
+    # -- 1) draft propose: K single-token steps ----------------------------
     # (fresh slots process their last prompt token once more, at pos ==
     # lengths — a slightly stale q on the admission round only; q is the
     # proposal distribution, so this affects acceptance, never correctness)
-    def propose_body(carry, sub):
-        dcache, tok = carry
-        logits, dcache = model.decode_step(draft_params, dcache,
-                                           tok[:, None])
+    def draft_dist(logits):
         lp = jax.nn.log_softmax(
             logits[:, 0, :vocab].astype(jnp.float32), -1)
-        q = masked_dist(lp, state.temperature, state.top_k, state.top_p)
-        nxt = sample(sub, q, state.temperature)
-        return (dcache, nxt), (nxt, q)
+        return masked_dist(lp, state.temperature, state.top_k, state.top_p)
 
-    _, (xs, qlps) = jax.lax.scan(propose_body, (state.cache, pending),
-                                 jax.random.split(pkey, k))
-    x = xs.T                                              # (B, K)
-    q_bt = jnp.moveaxis(qlps, 0, 1)                       # (B, K, V)
+    if draft_source == "ngram":
+        # prompt-lookup propose: match the trailing bigram [prev, pending]
+        # against earlier committed context and copy the k tokens that
+        # followed the latest match. The proposal is a contiguous slice of
+        # tokens that already exist — no sequential draft dependency, no
+        # model call — so the whole round costs ~one multi-query verify.
+        # q is the one-hot of the copied tokens: stochastic slots accept
+        # x_i w.p. p_i(x_i) and resample from clip(p - onehot, 0) on
+        # rejection — exact speculative sampling with a deterministic q.
+        toks = state.tokens
+        L = toks.shape[1]
+        prev_idx = jnp.clip(state.lengths - 2, 0, None)
+        prev = jnp.take_along_axis(toks, prev_idx[:, None], 1)[:, 0]
+        pos = jnp.arange(L)[None, :]
+        shifted = jnp.concatenate([toks[:, :1], toks[:, :-1]], axis=1)
+        hit = ((toks == pending[:, None]) & (shifted == prev[:, None])
+               & (pos >= 1) & (pos < (state.lengths - 1)[:, None]))
+        j = jnp.max(jnp.where(hit, pos, -1), axis=1)       # (B,) -1 = miss
+        src = j[:, None] + 1 + jnp.arange(k)[None, :]      # (B, K)
+        x = jnp.take_along_axis(toks, jnp.clip(src, 0, L - 1), 1)
+        # miss, or the match runs off the committed context: fall back to
+        # re-proposing the pending token — verification rejects a bad
+        # proposal for free and the round still commits >= 1 token
+        valid = (j[:, None] >= 0) & (src < state.lengths[:, None])
+        x = jnp.where(valid, x, pending[:, None]).astype(jnp.int32)
+        q_bt = jnp.where(jax.nn.one_hot(x, vocab, dtype=bool),
+                         0.0, NEG_INF).astype(jnp.float32)
+    elif fused_propose:
+        # fused path (docs/DESIGN.md §12): the draft reads the cache and
+        # writes each step's k/v into small raw side buffers swept by the
+        # SAME online softmax — no throwaway cache copy, no k*L
+        # quantize-and-scatter writes. The buffers span the draft's layer
+        # count, which may be a truncated prefix of the target's.
+        from repro.models.common import dtype_of
+        from repro.quant.apply import segment_slices
+        cfg = model.cfg
+        n_draft = segment_slices(draft_params["layers"])[-1][2]
+        buf_shape = (n_draft, b, k, cfg.num_kv_heads, cfg.head_dim)
+        fk0 = jnp.zeros(buf_shape, dtype_of(cfg))
+        fv0 = jnp.zeros(buf_shape, dtype_of(cfg))
+
+        def propose_body(carry, sub):
+            fk, fv, cnt, tok = carry
+            logits, fk, fv = model.draft_propose_step(
+                draft_params, state.cache, fk, fv, cnt, tok[:, None])
+            q = draft_dist(logits)
+            nxt = sample(sub, q, state.temperature)
+            return (fk, fv, cnt + 1, nxt), (nxt, q)
+
+        _, (xs, qlps) = jax.lax.scan(
+            propose_body, (fk0, fv0, jnp.int32(0), pending),
+            jax.random.split(pkey, k))
+    else:
+        def propose_body(carry, sub):
+            dcache, tok = carry
+            logits, dcache = model.decode_step(draft_params, dcache,
+                                               tok[:, None])
+            q = draft_dist(logits)
+            nxt = sample(sub, q, state.temperature)
+            return (dcache, nxt), (nxt, q)
+
+        _, (xs, qlps) = jax.lax.scan(propose_body, (state.cache, pending),
+                                     jax.random.split(pkey, k))
+    if draft_source != "ngram":
+        x = xs.T                                          # (B, K)
+        q_bt = jnp.moveaxis(qlps, 0, 1)                   # (B, K, V)
 
     # -- 2) target verify: one multi-query pass over the window ------------
     # stale slots rewrite their pending row first; fresh slots start at x_1
@@ -204,14 +296,18 @@ def spec_round(model, params, draft_params, state: B.DecodeState, k: int,
     return state2, metrics
 
 
-def make_spec_round(model, k: int, rounds: int, eos_id, mesh=None):
+def make_spec_round(model, k: int, rounds: int, eos_id, mesh=None,
+                    fused_propose: bool = False,
+                    draft_source: str = "model"):
     """Build the body the engine jits: ``rounds`` spec rounds in one scan
     (per-slot rollback stays inside the scan — no host sync mid-chunk)."""
 
     def run(params, draft_params, state: B.DecodeState):
         def body(carry, _):
             st, m = carry
-            st2, m2 = spec_round(model, params, draft_params, st, k, eos_id)
+            st2, m2 = spec_round(model, params, draft_params, st, k, eos_id,
+                                 fused_propose=fused_propose,
+                                 draft_source=draft_source)
             return (st2, jax.tree.map(jnp.add, m, m2)), None
 
         (state, metrics), _ = jax.lax.scan(

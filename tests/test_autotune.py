@@ -1,0 +1,271 @@
+"""Chunking/block-shape autotuner (kernels/autotune.py, docs/DESIGN.md §12).
+
+Anchor invariants: the cache is DETERMINISTIC (same key -> same config,
+byte-stable JSON round-trip), ``autotune`` picks the measured minimum and
+leaves it applied while always restoring the pre-sweep knobs on its way
+through, and the engine stamps exactly the cache key it applied (or
+"untuned") into ServeStats and artifact manifests.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.kernels import autotune as at
+from repro.kernels.autotune import (AutotuneCache, TunedConfig, autotune,
+                                    default_candidates, kv_label,
+                                    maybe_apply_tuned, tune_key)
+from repro.kernels.decode_attn.ops import get_decode_kv_chunk
+from repro.models.model import build
+from repro.serving.engine import ServeEngine
+
+
+@pytest.fixture(autouse=True)
+def _knobs_guard():
+    """Every test leaves the process-wide knobs exactly as it found them."""
+    snap = at.snapshot()
+    yield
+    at.restore(snap)
+
+
+def _tiny():
+    cfg = dataclasses.replace(get_config("llama3.2-3b", smoke=True),
+                              num_layers=2)
+    model = build(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# TunedConfig / tune_key
+# ---------------------------------------------------------------------------
+
+def test_tuned_config_dict_roundtrip_drops_nones():
+    c = TunedConfig(decode_kv_chunk=64, qmatmul_bm=256)
+    d = c.to_dict()
+    assert d == {"decode_kv_chunk": 64, "qmatmul_bm": 256}
+    assert TunedConfig.from_dict(d) == c
+    # unknown keys from a future cache version are ignored, not fatal
+    assert TunedConfig.from_dict({**d, "warp_size": 32}) == c
+
+
+def test_tune_key_is_sanitized_and_device_scoped():
+    key = tune_key("dense", "int4", backend="cpu",
+                   device_kind="TPU v5 lite|x")
+    assert key == "TPU-v5-lite_x|dense|int4|cpu"
+    assert key.count("|") == 3
+    # the real-device form resolves without arguments
+    assert tune_key("dense", "int8").count("|") == 3
+
+
+def test_kv_label():
+    assert kv_label(None) == "bf16"
+
+    class P:
+        precisions = ("int4", "int4")
+    assert kv_label(P) == "int4"
+    P.precisions = ("int8", "int4")
+    assert kv_label(P) == "mixed"
+
+
+# ---------------------------------------------------------------------------
+# cache: determinism + byte-stable persistence
+# ---------------------------------------------------------------------------
+
+def test_cache_json_roundtrip_byte_stable(tmp_path):
+    path = str(tmp_path / "at.json")
+    cache = AutotuneCache(path)
+    cache.put("cpu|dense|int4|cpu", TunedConfig(decode_kv_chunk=512),
+              metrics={"cost_s": 0.5})
+    cache.put("cpu|dense|int8|cpu", TunedConfig(decode_kv_chunk=64))
+    cache.save()
+    first = open(path).read()
+    # reload -> identical configs, and saving again rewrites identical bytes
+    re = AutotuneCache(path)
+    assert re.get("cpu|dense|int4|cpu") == TunedConfig(decode_kv_chunk=512)
+    assert re.get("cpu|dense|int8|cpu") == TunedConfig(decode_kv_chunk=64)
+    assert re.metrics("cpu|dense|int4|cpu") == {"cost_s": 0.5}
+    re.save()
+    assert open(path).read() == first
+    # same key always resolves to the same config across loads
+    again = AutotuneCache(path)
+    assert again.get("cpu|dense|int4|cpu") == re.get("cpu|dense|int4|cpu")
+
+
+def test_cache_version_mismatch_starts_empty(tmp_path):
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps({"version": 999, "configs": {"k": {}}}))
+    assert AutotuneCache(str(path)).get("k") is None
+
+
+def test_cache_missing_key_is_none(tmp_path):
+    assert AutotuneCache(str(tmp_path / "x.json")).get("nope") is None
+
+
+# ---------------------------------------------------------------------------
+# snapshot / apply / restore
+# ---------------------------------------------------------------------------
+
+def test_apply_and_restore_roundtrip():
+    snap = at.snapshot()
+    at.apply_config(TunedConfig(decode_kv_chunk=96), key="k1")
+    assert get_decode_kv_chunk() == 96
+    assert at.current_stamp() == "k1"
+    at.restore(snap)
+    assert get_decode_kv_chunk() == snap["decode_kv_chunk"]
+    assert at.current_stamp() == "untuned"
+
+
+def test_apply_none_fields_leave_knobs_alone():
+    before = at.snapshot()
+    at.apply_config(TunedConfig(), key="noop")
+    assert at.snapshot() == before
+
+
+def test_autotune_picks_measured_min_and_persists(tmp_path):
+    cache = AutotuneCache(str(tmp_path / "c.json"))
+    cands = [TunedConfig(decode_kv_chunk=w) for w in (64, 128, 256)]
+    costs = {64: 3.0, 128: 1.0, 256: 2.0}
+
+    def bench(config):
+        # the candidate must be APPLIED while its bench runs
+        assert get_decode_kv_chunk() == config.decode_kv_chunk
+        return costs[config.decode_kv_chunk]
+
+    best, results = autotune("cpu|dense|int8|cpu", bench, cands, cache=cache)
+    assert best == TunedConfig(decode_kv_chunk=128)
+    assert [r["cost_s"] for r in results] == [3.0, 1.0, 2.0]
+    # winner left applied + stamped; cache persisted for a fresh process
+    assert get_decode_kv_chunk() == 128
+    assert at.current_stamp() == "cpu|dense|int8|cpu"
+    re = AutotuneCache(str(tmp_path / "c.json"))
+    assert re.get("cpu|dense|int8|cpu") == best
+    assert re.metrics("cpu|dense|int8|cpu")["cost_s"] == 1.0
+
+
+def test_autotune_restores_knobs_when_bench_raises():
+    before = at.snapshot()
+
+    def bench(config):
+        raise RuntimeError("oom")
+
+    with pytest.raises(RuntimeError):
+        autotune("k", bench, [TunedConfig(decode_kv_chunk=1024)], save=False,
+                 cache=AutotuneCache("/nonexistent/never-written.json"))
+    assert at.snapshot() == before
+
+
+def test_maybe_apply_tuned_hit_miss(tmp_path):
+    path = str(tmp_path / "c.json")
+    key = tune_key("dense", "int4")
+    cache = AutotuneCache(path)
+    cache.put(key, TunedConfig(decode_kv_chunk=512))
+    cache.save()
+    assert maybe_apply_tuned("dense", "int4", path=path) == key
+    assert get_decode_kv_chunk() == 512
+    # miss: unknown precision label -> untuned, knobs untouched
+    assert maybe_apply_tuned("dense", "mixed", path=path) == "untuned"
+    assert get_decode_kv_chunk() == 512
+
+
+def test_default_candidates_cover_library_default():
+    for prec in ("bf16", "int8", "int4"):
+        widths = {c.decode_kv_chunk for c in default_candidates(prec, "cpu")}
+        assert 256 in widths, prec   # the untuned default is in every grid
+    assert 1024 in {c.decode_kv_chunk
+                    for c in default_candidates("int4", "cpu")}
+    tpu = default_candidates("int8", "tpu")
+    assert any(c.qmatmul_bm for c in tpu)   # TPU sweeps megakernel tiles
+
+
+# ---------------------------------------------------------------------------
+# engine integration: the tuned stamp
+# ---------------------------------------------------------------------------
+
+def test_engine_applies_tuned_config_and_stamps(tmp_path, monkeypatch):
+    path = str(tmp_path / "c.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    key = tune_key("dense", "int8")
+    cache = AutotuneCache(path)
+    cache.put(key, TunedConfig(decode_kv_chunk=32))
+    cache.save()
+    cfg, model, params = _tiny()
+    eng = ServeEngine(model, params, max_seq=24, kv_precision="int8")
+    assert eng.tuned == key
+    assert get_decode_kv_chunk() == 32
+    # opt-out serves library defaults and says so
+    eng2 = ServeEngine(model, params, max_seq=24, kv_precision="int8",
+                       autotune=False)
+    assert eng2.tuned == "untuned"
+
+
+def test_engine_untuned_on_cache_miss(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "empty.json"))
+    cfg, model, params = _tiny()
+    eng = ServeEngine(model, params, max_seq=24)
+    assert eng.tuned == "untuned"
+    out = eng.generate(jax.random.randint(jax.random.PRNGKey(0), (1, 4), 0,
+                                          cfg.vocab_size), 4)
+    assert out.tokens.shape[1] == 8
+
+
+def test_tuned_and_untuned_engines_agree_greedy(tmp_path, monkeypatch):
+    """A tuned kv_chunk changes the sweep schedule, never the tokens."""
+    path = str(tmp_path / "c.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    cfg, model, params = _tiny()
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                 cfg.vocab_size)
+    base = ServeEngine(model, params, max_seq=24, kv_precision="int8",
+                       autotune=False).generate(prompts, 8)
+    cache = AutotuneCache(path)
+    cache.put(tune_key("dense", "int8"), TunedConfig(decode_kv_chunk=5))
+    cache.save()
+    eng = ServeEngine(model, params, max_seq=24, kv_precision="int8")
+    assert eng.tuned != "untuned"
+    out = eng.generate(prompts, 8)
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(out.tokens))
+
+
+FAMILY_ARCHS = (("dense", "llama3.2-3b"), ("ssm", "mamba2-780m"),
+                ("hybrid", "zamba2-2.7b"), ("encdec", "whisper-medium"))
+
+
+@pytest.mark.parametrize("family,arch", FAMILY_ARCHS)
+def test_tuned_config_greedy_identity_all_families(family, arch,
+                                                   tmp_path, monkeypatch):
+    """Applying a tuned config (odd chunk widths included) must never
+    change greedy output on any family — tuning reschedules, never
+    renumbers."""
+    path = str(tmp_path / "c.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    cfg = get_config(arch, smoke=True)
+    cfg = dataclasses.replace(
+        cfg, num_layers=4 if cfg.family == "hybrid" else 2)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0,
+                                 cfg.vocab_size)
+    frames = None
+    if cfg.family == "encdec":
+        frames = jax.random.normal(jax.random.PRNGKey(5),
+                                   (2, cfg.encoder_seq, cfg.d_model))
+    base = ServeEngine(model, params, max_seq=24, kv_precision="int8",
+                       autotune=False).generate(prompts, 8, frames=frames)
+    cache = AutotuneCache(path)
+    # the engine looks up its RESOLVED kv label — "int8" where the family
+    # carries a KV cache, "bf16" where it doesn't (pure SSM): seed both
+    for label in ("int8", "bf16"):
+        cache.put(tune_key(family, label),
+                  TunedConfig(decode_kv_chunk=3, q_chunk=4, kv_chunk=8,
+                              chunk_threshold=4))
+    cache.save()
+    eng = ServeEngine(model, params, max_seq=24, kv_precision="int8")
+    assert eng.tuned != "untuned"
+    out = eng.generate(prompts, 8, frames=frames)
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(out.tokens))

@@ -1,0 +1,246 @@
+"""Fused dequant megakernels (docs/DESIGN.md §12): qmlp / qkv / fresh-KV.
+
+Anchor invariants:
+
+* ``qmlp_pallas`` / ``qkv_pallas`` (interpret mode on CPU) match the
+  unfused qdot sequence for int8 / int4 / ternary segments — the fused
+  launch never materializes a bf16 weight or the (M, FF) hidden
+  activation, but its math is the segment-by-segment oracle's.
+* ``fused_mlp`` / ``fused_qkv`` on a non-TPU backend ARE the unfused
+  sequence (bit-identical fallback) — greedy serving output cannot
+  depend on which path ran.
+* ``decode_attention(fresh_kv=...)`` reads un-written draft rows exactly
+  as if they had been quantize-on-insert written to the cache.
+* int4 KV pages store their packed payload FLAT over F = Hkv * hd
+  (the (…, S, Hkv, hd/2) layout de-vectorizes XLA CPU loops), and the
+  flat layout round-trips through quantize/update/dequantize.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.qmatmul.kernel import qkv_pallas, qmlp_pallas
+from repro.kernels.qmatmul.ops import fused_mlp, fused_qkv, qdot
+from repro.quant.kvcache import dequantize_kv, make_page, update_page
+from repro.quant.quantize import (quantize_int4, quantize_int8,
+                                  quantize_ternary)
+
+QUANTIZERS = {"int8": quantize_int8, "int4": quantize_int4,
+              "ternary": quantize_ternary}
+PRECISIONS = tuple(QUANTIZERS)
+
+
+def _mlp_weights(precision, k=256, ff=512, d=256, group=128, gated=True):
+    ks = jax.random.split(jax.random.PRNGKey(k + ff), 3)
+    quant = QUANTIZERS[precision]
+    wg = quant(jax.random.normal(ks[0], (ff, k)) * 0.2, group) if gated \
+        else None
+    wu = quant(jax.random.normal(ks[1], (ff, k)) * 0.2, group)
+    wd = quant(jax.random.normal(ks[2], (d, ff)) * 0.2, group)
+    return wg, wu, wd
+
+
+def _mlp_oracle(x, wg, wu, wd, act):
+    if act == "swiglu":
+        g = qdot(x, wg, backend="grouped")
+        u = qdot(x, wu, backend="grouped")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = qdot(x, wu, backend="grouped")
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return qdot(h, wd, backend="grouped")
+
+
+# ---------------------------------------------------------------------------
+# Pallas megakernels vs the unfused sequence (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+@pytest.mark.parametrize("act", ["swiglu", "gelu"])
+def test_qmlp_pallas_matches_unfused_sequence(precision, act):
+    wg, wu, wd = _mlp_weights(precision, gated=act == "swiglu")
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 256),
+                          jnp.float32) * 0.5
+    got = qmlp_pallas(
+        x,
+        None if wg is None else wg.data, None if wg is None else wg.scale,
+        wu.data, wu.scale, wd.data, wd.scale,
+        group=wu.group, precision=precision, act=act,
+        bm=128, bf=256, interpret=True)
+    want = _mlp_oracle(x, wg, wu, wd, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_qkv_pallas_matches_three_qdots(precision):
+    k, nq, nkv, group = 256, 128, 64, 64
+    quant = QUANTIZERS[precision]
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    wq = quant(jax.random.normal(ks[0], (nq, k)) * 0.2, group)
+    wk = quant(jax.random.normal(ks[1], (nkv, k)) * 0.2, group)
+    wv = quant(jax.random.normal(ks[2], (nkv, k)) * 0.2, group)
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, k),
+                          jnp.float32) * 0.5
+    got = qkv_pallas(x, wq.data, wq.scale, wk.data, wk.scale, wv.data,
+                     wv.scale, group=group, precision=precision,
+                     bm=128, bk=128, interpret=True)
+    want = tuple(qdot(x, w, backend="grouped") for w in (wq, wk, wv))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# fused_* entry points: the non-TPU fallback is bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="fallback identity is the non-TPU contract")
+@pytest.mark.parametrize("precision", PRECISIONS)
+@pytest.mark.parametrize("act", ["swiglu", "gelu"])
+def test_fused_mlp_fallback_is_bit_identical(precision, act):
+    wg, wu, wd = _mlp_weights(precision, k=64, ff=96, d=64, group=32,
+                              gated=act == "swiglu")
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 64),
+                          jnp.bfloat16)
+    got = fused_mlp(x, wg, wu, wd, act=act, backend="grouped")
+    want = _mlp_oracle(x, wg, wu, wd, act)
+    assert got.dtype == x.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="fallback identity is the non-TPU contract")
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_fused_qkv_fallback_is_bit_identical(precision):
+    quant = QUANTIZERS[precision]
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    wq = quant(jax.random.normal(ks[0], (64, 64)) * 0.2, 32)
+    wk = quant(jax.random.normal(ks[1], (32, 64)) * 0.2, 32)
+    wv = quant(jax.random.normal(ks[2], (32, 64)) * 0.2, 32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (3, 7, 64), jnp.bfloat16)
+    got = fused_qkv(x, wq, wk, wv, backend="grouped")
+    want = tuple(qdot(x, w, backend="grouped") for w in (wq, wk, wv))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fused_mlp_mixed_precision_segments_fall_back():
+    """A block whose projections landed in different precisions is not
+    mega-eligible; the entry point must still serve it (unfused)."""
+    _, wu, wd = _mlp_weights("int8", k=64, ff=96, d=64, group=32,
+                             gated=False)
+    wu4 = quantize_int4(jax.random.normal(jax.random.PRNGKey(6),
+                                          (96, 64)) * 0.2, 32)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 64), jnp.bfloat16)
+    got = fused_mlp(x, None, wu4, wd, act="gelu", backend="grouped")
+    want = _mlp_oracle(x, None, wu4, wd, "gelu")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fresh-KV: un-written draft rows == quantize-on-insert written rows
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("precision", ["bf16", "int8", "int4"])
+def test_fresh_kv_matches_written_cache(precision):
+    b, t, hkv, rep, hd, sf = 2, 32, 2, 2, 32, 3
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    k = jax.random.normal(ks[0], (b, t, hkv, hd)) * 0.5
+    v = jax.random.normal(ks[1], (b, t, hkv, hd)) * 0.5
+    kp, vp = make_page(k, precision, 32), make_page(v, precision, 32)
+    fk = jax.random.normal(ks[2], (b, sf, hkv, hd)) * 0.5
+    fv = jax.random.normal(ks[3], (b, sf, hkv, hd)) * 0.5
+    q = jax.random.normal(ks[4], (b, sf, hkv * rep, hd), jnp.float32)
+    base = jnp.array([10, 17], jnp.int32)
+    valid = base + sf
+    # oracle: actually write the rows, then attend (simple backend)
+    want = decode_attention(q, update_page(kp, fk, base),
+                            update_page(vp, fv, base),
+                            valid_len=valid, backend="simple")
+    for backend in ("simple", "grouped"):
+        got = decode_attention(q, kp, vp, valid_len=valid, backend=backend,
+                               kv_chunk=7, fresh_kv=(fk, fv, base))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("precision", ["int8", "int4"])
+def test_fresh_kv_masks_stale_cache_rows(precision):
+    """Rows at positions >= base are STALE (a rolled-back draft's debris)
+    and must not leak into the fused sweep."""
+    b, t, hkv, hd, sf = 1, 16, 1, 32, 2
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    k = jax.random.normal(ks[0], (b, t, hkv, hd)) * 0.5
+    v = jax.random.normal(ks[1], (b, t, hkv, hd)) * 0.5
+    base = jnp.array([8], jnp.int32)
+    # poison the cache beyond base with huge values
+    k = k.at[:, 8:].set(37.0)
+    v = v.at[:, 8:].set(-37.0)
+    kp, vp = make_page(k, precision, 32), make_page(v, precision, 32)
+    fk = jax.random.normal(ks[2], (b, sf, hkv, hd)) * 0.5
+    fv = jax.random.normal(ks[3], (b, sf, hkv, hd)) * 0.5
+    q = jax.random.normal(ks[4], (b, sf, hkv, hd), jnp.float32)
+    clean_k = make_page(k.at[:, 8:].set(0.0), precision, 32)
+    clean_v = make_page(v.at[:, 8:].set(0.0), precision, 32)
+    want = decode_attention(q, update_page(clean_k, fk, base),
+                            update_page(clean_v, fv, base),
+                            valid_len=base + sf, backend="simple")
+    got = decode_attention(q, kp, vp, valid_len=base + sf,
+                           backend="grouped", kv_chunk=5,
+                           fresh_kv=(fk, fv, base))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flat int4 KV page layout
+# ---------------------------------------------------------------------------
+
+def test_int4_kv_page_is_flat_and_roundtrips():
+    b, t, hkv, hd = 2, 8, 4, 64
+    raw = jax.random.normal(jax.random.PRNGKey(10), (b, t, hkv, hd))
+    page = make_page(raw, "int4", 128)
+    f = hkv * hd
+    assert page.data.shape == (b, t, f // 2)    # flat packed payload
+    assert page.num_kv_heads == hkv
+    assert page.seq_len == t
+    deq = dequantize_kv(page)
+    assert deq.shape == raw.shape
+    # 4-bit grouped quantization: coarse but bounded by scale resolution
+    assert float(jnp.max(jnp.abs(deq - raw))) < 0.5
+
+
+def test_int4_flat_layout_matches_per_head_reference():
+    """Flat packing is a pure relayout: dequantizing the flat page equals
+    quantize/dequantize over the flattened (…, F) axis head-by-head."""
+    b, t, hkv, hd, group = 1, 4, 2, 32, 32
+    raw = jax.random.normal(jax.random.PRNGKey(11), (b, t, hkv, hd))
+    page = make_page(raw, "int4", group)
+    flat = raw.reshape(b, t, hkv * hd)
+    ref_page = make_page(flat[..., None, :], "int4", group)  # 1 "head" of F
+    ref = dequantize_kv(ref_page)[..., 0, :].reshape(b, t, hkv, hd)
+    np.testing.assert_allclose(np.asarray(dequantize_kv(page)),
+                               np.asarray(ref), atol=1e-6)
+
+
+def test_int4_update_page_writes_flat_rows():
+    b, t, hkv, hd = 2, 8, 2, 64
+    raw = jnp.zeros((b, t, hkv, hd))
+    page = make_page(raw, "int4", 64)
+    new = jax.random.normal(jax.random.PRNGKey(12), (b, 1, hkv, hd))
+    pos = jnp.array([3, 5], jnp.int32)
+    upd = update_page(page, new, pos)
+    assert upd.data.shape == page.data.shape
+    deq = dequantize_kv(upd)
+    # written rows hold exactly the quantize-on-insert values
+    want = dequantize_kv(make_page(new, "int4", 64))
+    for i, p in enumerate((3, 5)):
+        np.testing.assert_allclose(np.asarray(deq[i, p]),
+                                   np.asarray(want[i, 0]), atol=1e-6)
+    # untouched rows stay zero
+    assert float(jnp.max(jnp.abs(deq[0, :3]))) == 0.0

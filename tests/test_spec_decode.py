@@ -303,3 +303,139 @@ def test_serve_reports_latency_percentiles():
     assert all(o.tpot_s is not None and o.tpot_s >= 0 for o in outs)
     assert stats.ttft_p95_s >= stats.ttft_p50_s >= 0.0
     assert stats.tpot_p95_s >= stats.tpot_p50_s >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused draft-propose (docs/DESIGN.md §12): one cache sweep per round
+# ---------------------------------------------------------------------------
+
+def test_fused_propose_token_identical_to_two_pass():
+    """The fused no-write propose must emit the SAME tokens as the
+    two-pass throwaway-cache propose — both are greedy-exact, so any
+    divergence is a fresh-KV masking bug."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    two_pass = ServeEngine(model, params, max_seq=32,
+                           spec=SpecConfig(k=3, fused_propose=False))
+    fused = ServeEngine(model, params, max_seq=32,
+                        spec=SpecConfig(k=3, fused_propose=True))
+    a = two_pass.generate(prompts, 8, chunk=2)
+    b = fused.generate(prompts, 8, chunk=2)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    np.testing.assert_allclose(np.asarray(a.logprobs),
+                               np.asarray(b.logprobs), atol=1e-4)
+
+
+@pytest.mark.parametrize("kv_precision", ["int8", "int4"])
+def test_fused_propose_parity_quantized_kv(kv_precision):
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    outs = []
+    for fused in (False, True):
+        eng = ServeEngine(model, params, max_seq=32,
+                          kv_precision=kv_precision,
+                          spec=SpecConfig(k=2, fused_propose=fused))
+        outs.append(eng.generate(prompts, 8, chunk=2))
+    np.testing.assert_array_equal(np.asarray(outs[0].tokens),
+                                  np.asarray(outs[1].tokens))
+
+
+def test_truncated_draft_stays_greedy_exact():
+    """draft_layers early-exit drafting may tank acceptance but can never
+    change greedy output (verification is the full target stack)."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    base = ServeEngine(model, params, max_seq=32).generate(prompts, 8,
+                                                           chunk=4)
+    spec = ServeEngine(model, params, max_seq=32,
+                       spec=SpecConfig(k=3, draft_layers=1))
+    out = spec.generate(prompts, 8, chunk=2)
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(out.tokens))
+
+
+# ---------------------------------------------------------------------------
+# prompt-lookup (ngram) draft source
+# ---------------------------------------------------------------------------
+
+def test_ngram_draft_greedy_identical_to_baseline():
+    """The ngram draft proposes copied context tokens; verification keeps
+    greedy output token-identical regardless of what was proposed."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    base = ServeEngine(model, params, max_seq=40).generate(prompts, 12,
+                                                           chunk=4)
+    spec = ServeEngine(model, params, max_seq=40,
+                       spec=SpecConfig(k=2, draft_source="ngram"))
+    out = spec.generate(prompts, 12, chunk=2)
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(out.tokens))
+    np.testing.assert_allclose(np.asarray(base.logprobs),
+                               np.asarray(out.logprobs), atol=1e-4)
+
+
+@pytest.mark.parametrize("kv_precision", ["int8", "int4"])
+def test_ngram_draft_parity_quantized_kv(kv_precision):
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    base = ServeEngine(model, params, max_seq=40,
+                       kv_precision=kv_precision).generate(prompts, 10,
+                                                           chunk=4)
+    spec = ServeEngine(model, params, max_seq=40, kv_precision=kv_precision,
+                       spec=SpecConfig(k=3, draft_source="ngram"))
+    out = spec.generate(prompts, 10, chunk=2)
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(out.tokens))
+
+
+def test_ngram_draft_accepts_on_repetitive_context():
+    """A periodic prompt makes the trailing bigram match earlier context,
+    so the lookup proposes real continuations — acceptance must be
+    nonzero when the model itself continues the repetition it sees."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    # period-2 prompt: every bigram (a, b) recurs; lookups always hit
+    pat = np.array([3, 11] * 8, dtype=np.int32)
+    reqs = [Request(rid=0, prompt=pat, max_new_tokens=8, arrival_step=0)]
+    spec = ServeEngine(model, params, max_seq=40,
+                       spec=SpecConfig(k=2, draft_source="ngram"))
+    _, stats = spec.serve(reqs, num_slots=1, chunk=2)
+    assert stats.draft_proposed > 0
+    assert stats.tokens_per_round >= 1.0
+    # parity with the baseline regardless of what was accepted
+    base = ServeEngine(model, params, max_seq=40)
+    outs_b, _ = base.serve(reqs, num_slots=1, chunk=4)
+    outs_s, _ = spec.serve(reqs, num_slots=1, chunk=2)
+    np.testing.assert_array_equal(outs_b[0].tokens, outs_s[0].tokens)
+
+
+def test_ngram_draft_sampling_path_is_finite_and_in_budget():
+    """Stochastic slots accept a copied token w.p. p(x) (q is one-hot) and
+    resample from clip(p - onehot, 0): output must stay finite and within
+    the token budget."""
+    cfg, model, params = _tiny("llama3.2-3b")
+    prompts = _prompts(cfg, 2, 8)
+    spec = ServeEngine(model, params, max_seq=40,
+                       spec=SpecConfig(k=2, draft_source="ngram"))
+    out = spec.generate(prompts, 8, chunk=2, temperature=0.9,
+                        key=jax.random.PRNGKey(11), top_k=8)
+    toks = np.asarray(out.tokens)
+    assert toks.shape[1] == 16
+    assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
+    assert np.isfinite(np.asarray(out.logprobs)).all()
+
+
+def test_ngram_draft_builds_no_model_draft():
+    cfg, model, params = _tiny("llama3.2-3b")
+    spec = ServeEngine(model, params, max_seq=32,
+                       spec=SpecConfig(k=2, draft_source="ngram"))
+    assert spec.draft_overhead_bytes() == 0.0
+    assert spec.draft_weight_bytes() == 0.0
+    spec.generate(_prompts(cfg, 1, 6), 4, chunk=2)
+    assert spec._draft is None   # never derived the int4 draft
+
+
+def test_ngram_draft_config_validation():
+    with pytest.raises(ValueError, match="draft_source"):
+        SpecConfig(k=2, draft_source="oracle")
+    with pytest.raises(ValueError, match="draft_layers"):
+        SpecConfig(k=2, draft_source="ngram", draft_layers=1)
