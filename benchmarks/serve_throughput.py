@@ -41,6 +41,15 @@ Two sweeps over briefly-trained smoke-scale models:
    greedy-token agreement (must be 1.0 — the spec path is token-identical
    by construction).
 
+6. **Paged-pool sweep** (docs/DESIGN.md §13) — the paged quantized KV
+   pool vs contiguous per-slot reservations: continuous-batching tok/s and
+   peak KV bytes on a shared-prefix stream (with greedy token agreement vs
+   the dense engine), long-prompt prefill wall on a COW prefix-cache hit
+   vs cold through the disaggregated prefill/insert API, and an
+   equal-memory concurrency row at ``max_seq=2048`` — short requests
+   served from a pool sized to the dense reservation of ``NUM_SLOTS``
+   slots sustain >= 4x the concurrent slots.
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -554,6 +563,166 @@ def _fused_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _paged_rows(max_new: int, reps: int, steps: int | None,
+                summary: dict) -> list[tuple]:
+    """Paged KV pool vs contiguous reservations (docs/DESIGN.md §13):
+
+    * ``serve/paged/stream`` — continuous batching on a shared-prefix
+      stream: paged vs dense tok/s, greedy token agreement, peak pool KV
+      bytes vs the dense per-slot reservation.
+    * ``serve/paged/prefix-ttft`` — prefill wall through the
+      disaggregated API on a long prompt: a prefix-cache hit (page
+      gather + suffix scan) vs the cold full-prompt prefill.
+    * ``serve/paged/longctx-2048`` — equal-memory concurrency: short
+      requests at ``max_seq=2048`` served from a pool holding exactly
+      ``NUM_SLOTS`` dense reservations sustain >= 4x the concurrent
+      slots (pages are allocated for the tokens a request can actually
+      reach, not the max_seq worst case).
+    """
+    from repro.serving.pool import PagedConfig
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    requests = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
+    # common system prefix on every request (3/4 of the prompt) so the
+    # prefix cache has something to share; page_size 8 keeps several pages
+    # per slot at smoke scale
+    shared = requests[0].prompt[:PROMPT_LEN - 4].copy()
+    for r in requests:
+        r.prompt[:len(shared)] = shared
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    rows = []
+
+    def timed_serve(engine, reqs, slots, chunk):
+        engine.serve(reqs[:2], num_slots=slots, chunk=chunk)  # warm
+        best = None
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            outputs, stats = engine.serve(reqs, num_slots=slots, chunk=chunk)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[2]:
+                best = (outputs, stats, dt)
+        return best
+
+    dense = ServeEngine(model, params, max_seq=max_seq)
+    d_out, d_stats, d_dt = timed_serve(dense, requests, NUM_SLOTS, 4)
+    d_tps = d_stats.generated_tokens / d_dt
+    dense_resv = NUM_SLOTS * dense.kv_bytes_per_slot()
+
+    paged = ServeEngine(model, params, max_seq=max_seq,
+                        paged=PagedConfig(page_size=8))
+    p_out, p_stats, p_dt = timed_serve(paged, requests, NUM_SLOTS, 4)
+    p_tps = p_stats.generated_tokens / p_dt
+    agree = float(all((a.tokens == b.tokens).all()
+                      for a, b in zip(d_out, p_out)))
+    rows.append((
+        "serve/paged/stream", p_dt / max(p_stats.generated_tokens, 1) * 1e6,
+        f"{p_tps:.1f} tok/s paged vs {d_tps:.1f} tok/s dense "
+        f"({p_tps/d_tps:.2f}x) kv peak "
+        f"{p_stats.kv_bytes_peak/2**20:.3f} MiB vs "
+        f"{dense_resv/2**20:.3f} MiB dense reservation "
+        f"greedy agree {agree:.2f}"))
+
+    # prefix-hit TTFT: time prefill_request() itself through the
+    # disaggregated API on a long prompt — a warm prefix cache replaces
+    # the full-prompt prefill with a page gather plus a short suffix scan.
+    # (The scheduler-level ttft p50 at smoke scale is chunk-granularity
+    # noise; the prefill wall is the signal.)
+    import numpy as np
+    PFX_LEN, P_PG = 1024, 64
+    pp = ServeEngine(model, params, max_seq=PFX_LEN + max_new,
+                     paged=PagedConfig(page_size=P_PG))
+    rs = np.random.RandomState(3)
+    p1 = rs.randint(0, cfg.vocab_size, size=(PFX_LEN,)).astype(np.int32)
+    p2 = p1.copy()   # shares all but the last 4 prompt tokens
+    p2[-4:] = (p2[-4:] + 1) % cfg.vocab_size
+
+    def prefill_pair():
+        state = pp.init_decode_state(2)
+        t0 = time.perf_counter()
+        pf1 = pp.prefill_request(p1, state=state)
+        jax.block_until_ready(pf1.last_logits)
+        d_cold = time.perf_counter() - t0
+        pp.insert(state, 0, pf1, max_new)   # registers p1's prefix pages
+        t0 = time.perf_counter()
+        pf2 = pp.prefill_request(p2, state=state)
+        jax.block_until_ready(pf2.last_logits)
+        return d_cold, time.perf_counter() - t0, pf2
+
+    prefill_pair()   # compile the cold-prefill and seeded-suffix paths
+    d_cold = d_hit = float("inf")
+    hit_toks = 0
+    for _ in range(max(reps, 1)):
+        c, h, pf2 = prefill_pair()
+        d_cold, d_hit = min(d_cold, c), min(d_hit, h)
+        hit_toks = pf2.match.hit if pf2.match is not None else 0
+    rows.append((
+        "serve/paged/prefix-ttft", d_hit * 1e6,
+        f"prefill {d_hit*1e3:.1f}ms on a {hit_toks}/{PFX_LEN}-token prefix "
+        f"hit vs {d_cold*1e3:.1f}ms cold "
+        f"({d_cold/max(d_hit, 1e-9):.2f}x faster to first token); stream: "
+        f"{p_stats.prefix_hits} hits, {p_stats.prefix_hit_tokens} prompt "
+        f"tokens skipped ({p_stats.prefix_hit_rate:.0%}), "
+        f"{p_stats.cow_copies} cow"))
+
+    # equal-memory concurrency at long context: the pool holds exactly
+    # NUM_SLOTS dense reservations, yet short requests only consume the
+    # pages they can reach — run 4x the slots concurrently through it
+    LC_SEQ, LC_NEW = 2048, 4
+    page = 64
+    n_log = -(-LC_SEQ // page)
+    lc_slots = 4 * NUM_SLOTS
+    lc = ServeEngine(model, params, max_seq=LC_SEQ,
+                     paged=PagedConfig(page_size=page,
+                                       pool_pages=NUM_SLOTS * n_log,
+                                       prefix_sharing=False))
+    lc_reqs = synthetic_stream(
+        lc_slots, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=LC_NEW, arrival_rate=0.0, seed=1)
+    t0 = time.perf_counter()
+    lc_out, lc_stats = lc.serve(lc_reqs, num_slots=lc_slots, chunk=4)
+    lc_dt = time.perf_counter() - t0
+    assert len(lc_out) == len(lc_reqs)
+    per_req = lc.pool.pages_for(
+        min(LC_SEQ, PROMPT_LEN + int(LC_NEW * 1.25) + 1))
+    theo = (NUM_SLOTS * n_log) // per_req
+    lc_resv = NUM_SLOTS * lc.kv_bytes_per_slot()
+    rows.append((
+        "serve/paged/longctx-2048",
+        lc_dt / max(lc_stats.generated_tokens, 1) * 1e6,
+        f"{lc_slots} concurrent slots ({lc_slots/NUM_SLOTS:.0f}x the "
+        f"{NUM_SLOTS} dense slots the {lc_resv/2**20:.1f} MiB budget "
+        f"reserves; theoretical max {theo} slots = "
+        f"{theo/NUM_SLOTS:.0f}x) occupancy {lc_stats.occupancy:.2f} "
+        f"peak {lc_stats.pool_pages_peak}/{lc_stats.pool_pages_total} "
+        f"pages"))
+    summary["paged"] = {
+        "tok_s_paged": p_tps, "tok_s_dense": d_tps,
+        "paged_vs_dense": p_tps / d_tps, "greedy_agree": agree,
+        "kv_bytes_peak": p_stats.kv_bytes_peak,
+        "dense_reservation_bytes": dense_resv,
+        "prefix_hits": p_stats.prefix_hits,
+        "prefix_hit_tokens": p_stats.prefix_hit_tokens,
+        "prefix_hit_rate": p_stats.prefix_hit_rate,
+        "cow_copies": p_stats.cow_copies,
+        "prefill_s_prefix_hit": d_hit,
+        "prefill_s_cold": d_cold,
+        "prefix_hit_prefill_speedup": d_cold / max(d_hit, 1e-9),
+        "prefix_hit_tokens_of_prompt": [hit_toks, PFX_LEN],
+        "longctx": {
+            "max_seq": LC_SEQ, "page_size": page,
+            "pool_pages": NUM_SLOTS * n_log,
+            "concurrent_slots": lc_slots,
+            "dense_slots_at_equal_memory": NUM_SLOTS,
+            "concurrency_uplift": lc_slots / NUM_SLOTS,
+            "theoretical_max_slots": theo,
+            "occupancy": lc_stats.occupancy,
+            "pool_pages_peak": lc_stats.pool_pages_peak,
+        },
+    }
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     # best-of-3 even in smoke: the fused/tuned delta rows race paths that
@@ -561,7 +730,7 @@ def run(smoke: bool = False) -> list[tuple]:
     reps = 3
     steps = SMOKE_TRAIN_STEPS if smoke else None
     summary: dict = {"variants": {}, "families": {}, "mesh": {},
-                     "kv_cache": {}, "fused": {}, "spec": {}}
+                     "kv_cache": {}, "fused": {}, "spec": {}, "paged": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
@@ -571,6 +740,7 @@ def run(smoke: bool = False) -> list[tuple]:
     rows += _kv_rows(max_new, reps, steps, summary)
     rows += _fused_rows(max_new, reps, steps, summary)
     rows += _spec_rows(max_new, reps, steps, summary)
+    rows += _paged_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

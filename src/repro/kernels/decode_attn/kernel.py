@@ -170,6 +170,7 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
                        fresh_v_data: jax.Array | None = None,
                        fresh_v_scale: jax.Array | None = None,
                        base: jax.Array | None = None,
+                       page_table: jax.Array | None = None,
                        interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, rep, Qs, hd) f32/bf16; k/v data: (B, S, F_store) int8 or
     bf16 (F_store = Hkv*hd, int4: Hkv*hd//2); k/v scale: (B, S, F//group)
@@ -177,6 +178,16 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
     written. Optional fresh_* / base: an already-quantized (B, Sf,
     F_store) side buffer swept at logical positions ``base + j`` with
     cache rows >= base masked stale (no-write speculative propose).
+
+    Optional ``page_table`` (B, n_log) int32 switches K/V to a PAGED pool:
+    k/v data become (N_phys, P, F_store) page pools and the table maps
+    slot i's logical chunk c to its physical page. The table rides as a
+    scalar-prefetch operand (pltpu.PrefetchScalarGridSpec) so the block
+    index maps can read it — grid step (i, c) DMAs physical page
+    ``table[i, c]`` while positions stay logical (c * P + row), which
+    keeps the kernel body byte-identical to the dense path. The KV chunk
+    is pinned to the page size; reads of unallocated logical pages hit
+    the dump page and are discarded by the validity mask.
     Returns (B, Hkv, rep, Qs, hd) f32."""
     b, hkv, rep, qs, hd = q.shape
     assert hd == head_dim, (q.shape, head_dim)
@@ -188,6 +199,65 @@ def decode_attn_pallas(q: jax.Array, k_data: jax.Array, k_scale: jax.Array,
     nc = -(-s // chunk)
     ng = k_scale.shape[-1]
     fresh_rows = 0 if fresh_k_data is None else fresh_k_data.shape[1]
+
+    if page_table is not None:
+        chunk = k_data.shape[1]              # one physical page per step
+        nc = page_table.shape[1]             # n_log logical pages
+        kernel = functools.partial(
+            _decode_attn_kernel, precision=precision, group=group,
+            num_kv_heads=hkv, head_dim=hd, qs=qs, causal=causal,
+            chunk=chunk, num_chunks=nc, fresh_rows=fresh_rows)
+        # index maps receive (*grid_ids, *scalar_refs): (i, c, table_ref)
+        in_specs = [pl.BlockSpec((1, 1), lambda i, c, t: (i, 0))]
+        operands = [valid_len]
+        if fresh_rows:
+            in_specs.append(pl.BlockSpec((1, 1), lambda i, c, t: (i, 0)))
+            operands.append(base)
+        in_specs += [
+            pl.BlockSpec((1, hkv, rep, qs, hd),
+                         lambda i, c, t: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((1, chunk, k_data.shape[-1]),
+                         lambda i, c, t: (t[i, c], 0, 0)),
+            pl.BlockSpec((1, chunk, ng), lambda i, c, t: (t[i, c], 0, 0)),
+            pl.BlockSpec((1, chunk, v_data.shape[-1]),
+                         lambda i, c, t: (t[i, c], 0, 0)),
+            pl.BlockSpec((1, chunk, ng), lambda i, c, t: (t[i, c], 0, 0)),
+        ]
+        operands += [q, k_data, k_scale, v_data, v_scale]
+        if fresh_rows:
+            fng = fresh_k_scale.shape[-1]
+            in_specs += [
+                pl.BlockSpec((1, fresh_rows, fresh_k_data.shape[-1]),
+                             lambda i, c, t: (i, 0, 0)),
+                pl.BlockSpec((1, fresh_rows, fng),
+                             lambda i, c, t: (i, 0, 0)),
+                pl.BlockSpec((1, fresh_rows, fresh_v_data.shape[-1]),
+                             lambda i, c, t: (i, 0, 0)),
+                pl.BlockSpec((1, fresh_rows, fng),
+                             lambda i, c, t: (i, 0, 0)),
+            ]
+            operands += [fresh_k_data, fresh_k_scale,
+                         fresh_v_data, fresh_v_scale]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, nc),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, hkv, rep, qs, hd),
+                                   lambda i, c, t: (i, 0, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((hkv, rep, qs), jnp.float32),
+                pltpu.VMEM((hkv, rep, qs), jnp.float32),
+                pltpu.VMEM((hkv, rep, qs, hd), jnp.float32),
+            ])
+        return pl.pallas_call(
+            # the kernel body never reads the table — only the index maps
+            # do — so drop the leading scalar-prefetch ref
+            lambda t_ref, *refs: kernel(*refs),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((b, hkv, rep, qs, hd),
+                                           jnp.float32),
+            interpret=interpret,
+        )(page_table.astype(jnp.int32), *operands)
 
     kernel = functools.partial(
         _decode_attn_kernel, precision=precision, group=group,

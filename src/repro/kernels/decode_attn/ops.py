@@ -48,7 +48,8 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attn.kernel import decode_attn_pallas
 from repro.kernels.decode_attn.ref import decode_attn_ref
-from repro.quant.kvcache import (KVPage, dequantize_kv, quantize_kv,
+from repro.quant import paged as paged_ops
+from repro.quant.kvcache import (KVPage, PagedKV, dequantize_kv, quantize_kv,
                                  update_page)
 
 BACKENDS = ("auto", "pallas", "grouped", "simple")
@@ -97,10 +98,11 @@ def _use_pallas() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _page_of(x) -> KVPage:
+def _page_of(x):
     """Normalize a cache operand to a KVPage (raw arrays become bf16-style
-    pages with no scales)."""
-    if isinstance(x, KVPage):
+    pages with no scales). PagedKV pool views pass through — every backend
+    reads them through the slot page table."""
+    if isinstance(x, (KVPage, PagedKV)):
         return x
     return KVPage(data=x, scale=None, precision="bf16",
                   head_dim=x.shape[-1], group=x.shape[-1])
@@ -122,8 +124,13 @@ def _fresh_page(raw: jax.Array, like: KVPage) -> KVPage:
                   group=like.group)
 
 
-def _simple(q, kp: KVPage, vp: KVPage, valid, causal: bool,
-            fresh=None) -> jax.Array:
+def _simple(q, kp, vp, valid, causal: bool, fresh=None) -> jax.Array:
+    if isinstance(kp, PagedKV):
+        # materialize the pool through the page table FIRST so the fresh
+        # rows below go through the dense page's write math (`update_page`
+        # quantize-on-insert) exactly like `_fresh_page` does in the
+        # streaming backends
+        kp, vp = paged_ops.gather(kp), paged_ops.gather(vp)
     if fresh is not None:
         # reference semantics: fresh rows behave exactly as if written
         fk, fv, base = fresh
@@ -133,7 +140,7 @@ def _simple(q, kp: KVPage, vp: KVPage, valid, causal: bool,
                            causal=causal)
 
 
-def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
+def _grouped(q, kp, vp, valid, kv_chunk: int,
              causal: bool, fresh=None) -> jax.Array:
     """Chunked online-softmax decode attention — the kernel's exact math in
     jnp. Chunks are carved out of the cache in place with dynamic slices
@@ -141,11 +148,21 @@ def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
     O(B * Hkv * rep * S * kv_chunk), never O(S_max) — for ANY cache
     length: a non-dividing final chunk is read with a clamped start and
     the re-visited rows are masked out, so every row contributes exactly
-    once."""
+    once. Paged pools read the same chunks through the slot page table:
+    the chunk width snaps to a whole number of pages and each chunk is a
+    (B, pages_per_chunk) table gather instead of a dense slice — identical
+    masking arithmetic, so paged/dense outputs match bit-for-bit."""
     b, s, h, d = q.shape
-    t, hkv = kp.data.shape[1], kp.num_kv_heads
+    hkv = kp.num_kv_heads
     rep = h // hkv
-    chunk = min(kv_chunk, t)
+    if isinstance(kp, PagedKV):
+        p_sz, n_log = kp.page_size, kp.table.shape[-1]
+        t = n_log * p_sz
+        g = max(1, min(kv_chunk // p_sz, n_log))
+        chunk = g * p_sz
+    else:
+        t = kp.data.shape[1]
+        chunk = min(kv_chunk, t)
     nc = -(-t // chunk)                              # ceil-div
     qh = jnp.moveaxis(q.reshape(b, s, hkv, rep, d), 1, 3)  # (B,Hkv,rep,S,d)
     qh = qh.astype(jnp.float32)
@@ -165,6 +182,20 @@ def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
         cache_limit = limit
 
     def take(page, start):
+        if isinstance(page, PagedKV):
+            npg = chunk // page.page_size
+            ids = jax.lax.dynamic_slice(
+                page.table, (0, start // page.page_size), (b, npg))
+
+            def gat(x):
+                y = x[ids]                           # (B, npg, P, ...)
+                return y.reshape(b, chunk, *x.shape[2:])
+
+            return KVPage(
+                data=gat(page.data),
+                scale=None if page.scale is None else gat(page.scale),
+                precision=page.precision, head_dim=page.head_dim,
+                group=page.group)
         return jax.tree.map(lambda x: jax.lax.dynamic_slice_in_dim(
             x, start, chunk, axis=1), page)
 
@@ -208,22 +239,27 @@ def _grouped(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int,
     return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)
 
 
-def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int, causal: bool,
+def _pallas(q, kp, vp, valid, kv_chunk: int, causal: bool,
             fresh=None, interpret: bool = False) -> jax.Array:
     b, s, h, d = q.shape
-    t, hkv = kp.data.shape[1], kp.num_kv_heads
+    hkv = kp.num_kv_heads
     rep = h // hkv
+    paged = isinstance(kp, PagedKV)
 
-    def flat(page, n):
-        data = page.data.reshape(b, n, -1)
+    def flat(page):
+        # dense: (B, S, ...) -> (B, S, F_store); paged pool: (N, P, ...) ->
+        # (N, P, F_store) — the kernel's scalar-prefetched page table maps
+        # grid steps to physical pages
+        lead = page.data.shape[:2]
+        data = page.data.reshape(*lead, -1)
         if page.scale is None:  # bf16 page: dummy unit scales, never read
-            scale = jnp.ones((b, n, 1), jnp.bfloat16)
+            scale = jnp.ones((*lead, 1), jnp.bfloat16)
         else:
             scale = page.scale
         return data, scale
 
-    kd, ks = flat(kp, t)
-    vd, vs = flat(vp, t)
+    kd, ks = flat(kp)
+    vd, vs = flat(vp)
     qk = jnp.moveaxis(q.reshape(b, s, hkv, rep, d), 1, 3)  # (B,Hkv,rep,S,d)
     fresh_args = {}
     if fresh is not None:
@@ -233,9 +269,8 @@ def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int, causal: bool,
         if pad:
             widths = ((0, 0), (0, pad), (0, 0), (0, 0))
             fk, fv = jnp.pad(fk, widths), jnp.pad(fv, widths)
-        sfp = sf + pad
-        fkd, fks = flat(_fresh_page(fk, kp), sfp)
-        fvd, fvs = flat(_fresh_page(fv, vp), sfp)
+        fkd, fks = flat(_fresh_page(fk, kp))
+        fvd, fvs = flat(_fresh_page(fv, vp))
         fresh_args = dict(fresh_k_data=fkd, fresh_k_scale=fks,
                           fresh_v_data=fvd, fresh_v_scale=fvs,
                           base=base[:, None])
@@ -243,6 +278,7 @@ def _pallas(q, kp: KVPage, vp: KVPage, valid, kv_chunk: int, causal: bool,
         qk, kd, ks, vd, vs, valid[:, None],
         precision=kp.precision, group=kp.group, head_dim=d,
         kv_chunk=kv_chunk, causal=causal, interpret=interpret,
+        page_table=kp.table if paged else None,
         **fresh_args)
     return jnp.moveaxis(out, 3, 1).reshape(b, s, h, d).astype(q.dtype)
 
@@ -286,7 +322,8 @@ def decode_attention(q: jax.Array, k, v, *,
         assert fk.shape == fv.shape and fk.ndim == 4, (fk.shape, fv.shape)
         fresh_kv = (fk, fv, jnp.broadcast_to(
             jnp.asarray(base, jnp.int32), (b,)))
-    valid = _valid_vec(valid_len, b, kp.data.shape[1])
+    t_total = (kp.seq_len if isinstance(kp, PagedKV) else kp.data.shape[1])
+    valid = _valid_vec(valid_len, b, t_total)
     if backend == "pallas" or (backend == "auto" and _use_pallas()):
         if backend == "pallas" and not _use_pallas():
             raise ValueError(

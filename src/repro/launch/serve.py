@@ -18,6 +18,16 @@ Compiled-plan artifacts (compile once, serve many — docs/DESIGN.md §8):
   python -m repro.launch.serve --arch zamba2-2.7b --smoke \
       --plan-artifact /tmp/zamba_plan
 
+Paged KV pool with COW prefix sharing (docs/DESIGN.md §13): ``--paged``
+serves K/V from a fixed pool of quantized pages instead of contiguous
+per-slot reservations; ``--shared-prefix-len N`` gives every simulated
+request a common system prefix so the prefix cache gets hits, and
+``--check-paged-parity`` asserts token-identical greedy output vs the
+dense engine:
+  python -m repro.launch.serve --arch llama3.2-3b --smoke \
+      --num-requests 8 --paged --page-size 8 --shared-prefix-len 8 \
+      --check-paged-parity
+
 Self-speculative decoding (docs/DESIGN.md §11): ``--spec-k 4`` serves with
 draft-propose/verify rounds — the entropy-ordered all-int4 draft shares
 payloads with the target; ``--check-greedy-parity`` additionally runs the
@@ -90,6 +100,26 @@ def main():
                     help="with --spec-k: also run the non-spec engine on "
                          "the same requests and assert token-identical "
                          "greedy output")
+    # paged KV pool + prefix sharing (docs/DESIGN.md §13)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve K/V from a paged pool with copy-on-write "
+                         "prefix sharing instead of contiguous per-slot "
+                         "reservations")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical pages in the pool (0: equal-memory "
+                         "default, num_slots * ceil(max_seq/page_size))")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="with --paged: disable the COW prefix cache")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="overwrite the first N prompt tokens of every "
+                         "simulated request with a common system prefix "
+                         "(exercises prefix sharing)")
+    ap.add_argument("--check-paged-parity", action="store_true",
+                    help="with --paged: also run the dense (contiguous) "
+                         "engine on the same requests and assert "
+                         "token-identical greedy output")
     # mesh-parallel serving (docs/DESIGN.md §9)
     ap.add_argument("--mesh", default=None,
                     help="comma-separated mesh axis names (e.g. data,model): "
@@ -116,6 +146,15 @@ def main():
     elif args.check_greedy_parity:
         raise SystemExit("--check-greedy-parity requires --spec-k")
 
+    paged = None
+    if args.paged:
+        from repro.serving.pool import PagedConfig
+        paged = PagedConfig(page_size=args.page_size,
+                            pool_pages=args.pool_pages or None,
+                            prefix_sharing=not args.no_prefix_sharing)
+    elif args.check_paged_parity:
+        raise SystemExit("--check-paged-parity requires --paged")
+
     requests = None
     max_seq = args.prompt_len + args.max_new
     if args.num_requests > 0:
@@ -123,7 +162,17 @@ def main():
             args.num_requests, vocab_size=cfg.vocab_size,
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
             arrival_rate=args.arrival_rate)
+        if args.shared_prefix_len > 0:
+            if args.shared_prefix_len >= args.prompt_len:
+                raise SystemExit("--shared-prefix-len must be shorter than "
+                                 "--prompt-len (at least one distinct token "
+                                 "must remain per request)")
+            shared = requests[0].prompt[:args.shared_prefix_len].copy()
+            for r in requests:
+                r.prompt[:args.shared_prefix_len] = shared
         max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    elif args.shared_prefix_len > 0:
+        raise SystemExit("--shared-prefix-len requires --num-requests")
     if spec is not None:
         max_seq += spec.k   # verify-window headroom (engine asserts)
 
@@ -140,7 +189,7 @@ def main():
                  else {"kv_precision": args.kv_precision})
         engine = ServeEngine.from_artifact(model, args.plan_artifact,
                                            max_seq=max_seq, mesh=mesh,
-                                           spec=spec, **kv_kw)
+                                           spec=spec, paged=paged, **kv_kw)
         plan = engine.plan
         print(f"booted from artifact {args.plan_artifact} in "
               f"{time.perf_counter() - t0:.2f}s"
@@ -162,7 +211,7 @@ def main():
             engine = ServeEngine(model, compiled.params, max_seq=max_seq,
                                  mesh=mesh,
                                  kv_precision=compiled.kv_plan or "bf16",
-                                 spec=spec)
+                                 spec=spec, paged=paged)
             engine.plan = plan
             if args.plan_artifact:
                 from repro.quant.compiler import save_artifact
@@ -174,7 +223,8 @@ def main():
                 print(f"saved compiled plan artifact to {path}")
         else:
             engine = ServeEngine(model, params, max_seq=max_seq, mesh=mesh,
-                                 kv_precision=kv_precision, spec=spec)
+                                 kv_precision=kv_precision, spec=spec,
+                                 paged=paged)
 
     raw_bits = 32.0 if cfg.dtype == "float32" else 16.0
     raw_bytes = cfg.param_count() * raw_bits / 8.0
@@ -222,6 +272,35 @@ def main():
                   f"({stats.draft_accepted}/{stats.draft_proposed}), "
                   f"{stats.tokens_per_round:.2f} tokens/round over "
                   f"{stats.spec_rounds} rounds")
+        if args.paged:
+            dense_resv = args.num_slots * engine.kv_bytes_per_slot()
+            print(f"paged pool: peak {stats.pool_pages_peak}"
+                  f"/{stats.pool_pages_total} pages x "
+                  f"{stats.pool_page_size} tokens, "
+                  f"prefix hits {stats.prefix_hits} "
+                  f"({stats.prefix_hit_tokens} prompt tokens skipped, "
+                  f"{stats.prefix_hit_rate:.1%} hit rate), "
+                  f"cow copies {stats.cow_copies}")
+            print(f"kv memory: peak {stats.kv_bytes_peak/2**20:.2f} MiB "
+                  f"paged vs {dense_resv/2**20:.2f} MiB dense reservation "
+                  f"({args.num_slots} slots x "
+                  f"{engine.kv_bytes_per_slot()/2**20:.2f} MiB at "
+                  f"max_seq={max_seq})")
+        if args.check_paged_parity:
+            import numpy as np
+            base = ServeEngine(model, engine.params, max_seq=max_seq,
+                               kv_precision=engine.kv_plan or "bf16",
+                               spec=spec)
+            base.plan = engine.plan
+            base_outputs, _ = base.serve(requests,
+                                         num_slots=args.num_slots,
+                                         chunk=args.chunk)
+            agree = all(np.array_equal(a.tokens, b.tokens)
+                        for a, b in zip(base_outputs, outputs))
+            print(f"greedy-agree vs dense engine: {float(agree):.1f}")
+            if not agree:
+                raise SystemExit("paged greedy output DIVERGED from the "
+                                 "dense (contiguous) engine")
         if args.check_greedy_parity:
             import numpy as np
             base = ServeEngine(model, engine.params, max_seq=max_seq,
@@ -257,6 +336,18 @@ def main():
         if not agree:
             raise SystemExit("speculative greedy output DIVERGED from the "
                              "non-spec engine")
+    if args.check_paged_parity:
+        import numpy as np
+        base = ServeEngine(model, engine.params, max_seq=max_seq,
+                           kv_precision=engine.kv_plan or "bf16", spec=spec)
+        base.plan = engine.plan
+        ref = base.generate(prompts, args.max_new, chunk=args.chunk)
+        agree = bool(np.array_equal(np.asarray(ref.tokens),
+                                    np.asarray(out.tokens)))
+        print(f"greedy-agree vs dense engine: {float(agree):.1f}")
+        if not agree:
+            raise SystemExit("paged greedy output DIVERGED from the dense "
+                             "(contiguous) engine")
     print("sample:", out.tokens[0, -args.max_new:].tolist())
 
 

@@ -104,7 +104,7 @@ class Model:
         cache = self.init_cache(num_slots, max_seq)
         return cache._replace(pos=jnp.zeros((num_slots,), jnp.int32))
 
-    def insert_cache_slot(self, cache, one, slot):
+    def insert_cache_slot(self, cache, one, slot, page_rows=None):
         """Write a single-request cache (batch=1 leaves, scalar or (1,) pos)
         into slot ``slot`` of a slotted batch cache. Traceable (``slot`` may
         be a traced index).
@@ -112,11 +112,23 @@ class Model:
         Prefill always produces a raw bf16 cache; when the destination
         field holds quantized KVPages the prompt K/V are quantized here, at
         admission — the decode scan's steady-state carry never sees a raw
-        copy (quantize-on-insert, docs/DESIGN.md §10)."""
+        copy (quantize-on-insert, docs/DESIGN.md §10). Paged-pool fields
+        (quant/kvcache.PagedKV) additionally need ``page_rows=(row, wrow)``,
+        the slot's page-table rows from the host allocator
+        (serving/pool.py): ``row`` maps logical pages to physical,
+        ``wrow`` redirects shared read-only prefix pages to the dump page
+        so this insert cannot overwrite them (docs/DESIGN.md §13)."""
         from repro.quant import kvcache as KV
 
         def leaf(dst, src, axis):
             if KV.is_kv_page(dst):
+                first = dst[0] if isinstance(dst, tuple) else dst
+                if isinstance(first, KV.PagedKV):
+                    from repro.quant import paged
+                    assert page_rows is not None, \
+                        "inserting into a paged cache needs page_rows"
+                    return paged.insert_slot_paged(dst, jnp.asarray(src),
+                                                   slot, *page_rows)
                 return KV.insert_slot(dst, jnp.asarray(src), slot)
             src = jnp.asarray(src)
             if src.ndim < dst.ndim:           # scalar pos -> (1,) vector

@@ -133,12 +133,75 @@ class KVPage:
         return self.data.shape[-2 if self.precision == "int4" else -4]
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKV:
+    """Pool-backed paged layout of a KV cache field (docs/DESIGN.md §13).
+
+    Instead of a dense per-slot (B, S_max) reservation, tokens live in a
+    shared pool of physical pages of ``page_size`` tokens each, reached
+    through a per-slot page table:
+
+      data  : (L?, N, P, Hkv, hd)  int8 | float   pool payload
+              (L?, N, P, F // 2)   int8           ("int4", packed flat)
+      scale : (L?, N, P, F//group) bf16, or None  per-group scales
+      table : (L?, B, n_log)       int32          slot -> physical page
+
+    N = pool_pages + 1: physical page 0 is the sacrificial DUMP page — it
+    is never allocated, and every released / unallocated table entry points
+    at it, so writes from inactive slots land on garbage instead of
+    corrupting a reallocated page (reads past ``valid_len`` are masked by
+    the decode kernels, so the garbage is never observed).
+
+    The table broadcasts over the same leading layer axis as the payload,
+    so scan/vmap slicing of the layer axis (hybrid's per-unit scan, the
+    draft's kv_take_layers) slices every leaf uniformly. "bf16"-precision
+    pools store the raw cache dtype verbatim (no bf16 rounding), keeping
+    the paged bf16 engine numerically identical to the dense raw path.
+    """
+    data: Any
+    scale: Any
+    table: Any
+    precision: str            # static
+    head_dim: int             # static logical hd (int4 stores hd//2 bytes)
+    group: int                # static, divides Hkv*hd
+    page_size: int            # static tokens per physical page
+
+    def tree_flatten(self):
+        return (self.data, self.scale, self.table), (
+            self.precision, self.head_dim, self.group, self.page_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale, table = children
+        precision, head_dim, group, page_size = aux
+        return cls(data=data, scale=scale, table=table, precision=precision,
+                   head_dim=head_dim, group=group, page_size=page_size)
+
+    @property
+    def num_kv_heads(self) -> int:
+        if self.precision == "int4":    # flat (..., F // 2) payload
+            return 2 * self.data.shape[-1] // self.head_dim
+        return self.data.shape[-2]
+
+    @property
+    def seq_len(self) -> int:
+        """Logical sequence capacity a slot's page table addresses."""
+        return self.table.shape[-1] * self.page_size
+
+    @property
+    def num_pages(self) -> int:
+        """Physical pool pages including the dump page."""
+        axis = -3 if self.precision == "int4" else -4
+        return self.data.shape[axis]
+
+
 def is_kv_page(x: Any) -> bool:
-    """True for a KVPage or a (non-empty) tuple of KVPages."""
-    if isinstance(x, KVPage):
+    """True for a KVPage/PagedKV or a (non-empty) tuple of them."""
+    if isinstance(x, (KVPage, PagedKV)):
         return True
     return (isinstance(x, tuple) and len(x) > 0
-            and all(isinstance(p, KVPage) for p in x))
+            and all(isinstance(p, (KVPage, PagedKV)) for p in x))
 
 
 # ---------------------------------------------------------------------------
@@ -226,9 +289,13 @@ def make_page(raw: jax.Array, precision: str, group: int) -> KVPage:
 # page writes (quantize-on-insert)
 # ---------------------------------------------------------------------------
 
-def update_page(page: KVPage, new: jax.Array, pos: jax.Array) -> KVPage:
+def update_page(page, new: jax.Array, pos: jax.Array):
     """Decode-step write: quantize ``new`` (B, s, Hkv, hd) and store it at
-    sequence position ``pos`` (scalar, or (B,) per-slot vector)."""
+    sequence position ``pos`` (scalar, or (B,) per-slot vector). Paged
+    fields scatter through the slot's page table instead (quant/paged.py)."""
+    if isinstance(page, PagedKV):
+        from repro.quant import paged
+        return paged.update_pages(page, new, pos)
     data_n, scale_n = quantize_kv(new, page.precision, page.group)
     data_n = data_n.astype(page.data.dtype)
 
@@ -315,7 +382,7 @@ def kv_segment(field, si: int, lo: int, hi: int):
              f"[{lo},{hi}) expects {hi - lo} — cache pages must be built "
              f"with the parameter segmentation's cuts")
         return page
-    if isinstance(field, KVPage):
+    if isinstance(field, (KVPage, PagedKV)):
         assert si == 0, "single-page cache with a multi-segment stack"
         return field
     return field[lo:hi]
@@ -326,7 +393,7 @@ def kv_rejoin(field, parts: list):
     original container type."""
     if isinstance(field, tuple):
         return tuple(parts)
-    if isinstance(field, KVPage):
+    if isinstance(field, (KVPage, PagedKV)):
         return parts[0]
     return jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
 
@@ -350,14 +417,14 @@ def kv_take_layers(field, lo: int, hi: int):
             f"layer range [{lo},{hi}) straddles KV page boundaries "
             f"(page lengths {_page_lengths(field)}) — draft segments must "
             f"refine the segmentation the cache pages were cut at")
-    if isinstance(field, KVPage):
+    if isinstance(field, (KVPage, PagedKV)):
         return jax.tree.map(lambda x: x[lo:hi], field)
     return field[lo:hi]
 
 
 def kv_layer(field, i: int):
     """Index one layer/site of a cache field (hybrid's unrolled units)."""
-    if isinstance(field, KVPage):
+    if isinstance(field, (KVPage, PagedKV)):
         return jax.tree.map(lambda x: x[i], field)
     assert not isinstance(field, tuple), \
         "per-layer indexing expects a single-page (uniform) hybrid cache"
@@ -366,7 +433,7 @@ def kv_layer(field, i: int):
 
 def kv_stack(field, parts: list):
     """Stack per-layer results back into the original container layout."""
-    if isinstance(field, KVPage):
+    if isinstance(field, (KVPage, PagedKV)):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
     return jnp.stack(parts)
 

@@ -1,0 +1,234 @@
+"""Device-side ops for the paged KV pool (docs/DESIGN.md §13).
+
+A ``kvcache.PagedKV`` field keeps K/V tokens in a shared pool of
+fixed-size pages reached through a per-slot page table. Everything here
+is traceable and shape-static:
+
+* ``init_pool_field``   — build an empty pool for a cache field, cut into
+  per-precision runs exactly like ``quantize_cache_field``;
+* ``update_pages``      — decode-step write: scatter s quantized token
+  rows through the page table (the paged twin of ``update_page``);
+* ``insert_slot_paged`` — admission: quantize a whole prefilled request
+  and scatter it page-by-page into the slot's physical pages in ONE jit
+  (shared prefix pages are redirected to the dump page, so the same
+  compiled insert serves any prefix-hit length);
+* ``gather`` / ``gather_rows`` — materialize pool pages back into a dense
+  ``KVPage`` view (the ``simple`` decode backend; prefix-hit seeding).
+
+Write-safety invariant: decode/spec-verify writes always target positions
+``>= prompt_len`` (fresh slots sit at ``pos == prompt_len``), and pages
+shared through the prefix cache cover only full prompt pages
+(``(j+1) * P <= prompt_len``), so a shared physical page is never written
+by any slot mapping it — copy-on-write resolves at admission time (the
+divergent boundary page is materialized into a private page by the
+insert), never in the decode hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.kvcache import KVPage, PagedKV, quantize_kv
+
+DUMP_PAGE = 0
+
+
+def _quant_rows(x: jax.Array, precision: str, group: int, data_dtype
+                ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Quantize token rows with the page's exact write math. "bf16" pools
+    store the pool dtype verbatim (the raw cache dtype — NOT forced to
+    bfloat16), so a paged bf16 engine matches the dense raw path's values
+    bit-for-bit."""
+    if precision == "bf16":
+        return x.astype(data_dtype), None
+    data, scale = quantize_kv(x, precision, group)
+    return data.astype(data_dtype), scale
+
+
+def init_pool_field(raw_proto: jax.Array, runs: Sequence[tuple[str, int, int]],
+                    *, num_pages: int, page_size: int, num_slots: int,
+                    group: int) -> Any:
+    """Empty pool(s) for one cache field.
+
+    ``raw_proto``: the dense raw field the pool replaces — only its shape
+    (L, B, S, Hkv, hd) and dtype are read. ``runs``: (precision, lo, hi)
+    layer runs (KVPlan.pages(cuts), or a single bf16 run). ``num_pages``
+    counts allocatable pages; physical page 0 (the dump page) is added on
+    top. Every table starts all-dump."""
+    l_total, _, _, hkv, hd = raw_proto.shape
+    assert runs and runs[-1][2] == l_total, (runs, l_total)
+    n_log = -(-raw_proto.shape[2] // page_size) if raw_proto.shape[2] else 1
+    n_phys = num_pages + 1
+    f = hkv * hd
+    pools = []
+    for precision, lo, hi in runs:
+        ll = hi - lo
+        table = jnp.zeros((ll, num_slots, n_log), jnp.int32)
+        if precision == "bf16":
+            data = jnp.zeros((ll, n_phys, page_size, hkv, hd),
+                             raw_proto.dtype)
+            scale = None
+        elif precision == "int8":
+            data = jnp.zeros((ll, n_phys, page_size, hkv, hd), jnp.int8)
+            scale = jnp.zeros((ll, n_phys, page_size, f // group),
+                              jnp.bfloat16)
+        elif precision == "int4":
+            data = jnp.zeros((ll, n_phys, page_size, f // 2), jnp.int8)
+            scale = jnp.zeros((ll, n_phys, page_size, f // group),
+                              jnp.bfloat16)
+        else:
+            raise ValueError(f"cannot build a {precision!r} pool")
+        pools.append(PagedKV(data=data, scale=scale, table=table,
+                             precision=precision, head_dim=hd, group=group,
+                             page_size=page_size))
+    return tuple(pools) if len(pools) > 1 else pools[0]
+
+
+def logical_pages(max_seq: int, page_size: int) -> int:
+    """Pages a slot's table addresses: ceil(max_seq / page_size)."""
+    return -(-max_seq // page_size)
+
+
+# ---------------------------------------------------------------------------
+# writes
+# ---------------------------------------------------------------------------
+
+def update_pages(pg: PagedKV, new: jax.Array, pos) -> PagedKV:
+    """Decode-step write of ``new`` (B, s, Hkv, hd) at position ``pos``
+    (scalar or (B,)) through each slot's page table. Rows whose logical
+    page is unallocated (table entry 0) land on the dump page — inactive
+    slots write garbage nobody reads instead of corrupting live pages."""
+    b, s = new.shape[0], new.shape[1]
+    p_sz, n_log = pg.page_size, pg.table.shape[-1]
+    data_n, scale_n = _quant_rows(new, pg.precision, pg.group, pg.data.dtype)
+    if pg.precision == "int4":
+        data_n = data_n.reshape(b, s, -1)          # flat (B, s, F//2)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    data, scale, table = pg.data, pg.scale, pg.table
+    for j in range(s):                              # static, s is 1 or K+1
+        pj = pos + j
+        lpage = jnp.minimum(pj // p_sz, n_log - 1)  # clamp stale deep slots
+        phys = jnp.take_along_axis(table, lpage[:, None], axis=1)[:, 0]
+        data = data.at[phys, pj % p_sz].set(data_n[:, j])
+        if scale is not None:
+            scale = scale.at[phys, pj % p_sz].set(
+                scale_n[:, j].astype(scale.dtype))
+    return dataclasses.replace(pg, data=data, scale=scale)
+
+
+def _pagify(x: jax.Array, n_log: int, page_size: int) -> jax.Array:
+    """(L, n_log * P, ...) -> (L, n_log, P, ...)."""
+    return x.reshape(x.shape[0], n_log, page_size, *x.shape[2:])
+
+
+def insert_slot_paged(field, src: jax.Array, slot, row, wrow):
+    """Admit a prefilled request into ``slot`` of a paged field.
+
+    ``src``: raw (L, 1, S, Hkv, hd) batch=1 prefill cache; ``row``: (n_log,)
+    int32 physical page per logical page (0 past the request's allocation);
+    ``wrow``: same, but with prefix-SHARED pages redirected to the dump
+    page — their rows were written by the donor's insert and must not be
+    re-written (they are refcounted read-only). The whole prompt is
+    quantized and scattered in one shot, so the compiled insert is keyed
+    only by the prompt shape — a prefix hit of any length reuses it."""
+    pages = field if isinstance(field, tuple) else (field,)
+    out, lo = [], 0
+    for pg in pages:
+        hi = lo + pg.data.shape[0]
+        out.append(_insert_one(pg, src[lo:hi], slot, row, wrow))
+        lo = hi
+    return tuple(out) if isinstance(field, tuple) else out[0]
+
+
+def _insert_one(pg: PagedKV, src: jax.Array, slot, row, wrow) -> PagedKV:
+    l, _, s = src.shape[:3]
+    p_sz, n_log = pg.page_size, pg.table.shape[-1]
+    rows = src[:, 0]                                  # (L, S, Hkv, hd)
+    pad = n_log * p_sz - s
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    data_n, scale_n = _quant_rows(rows, pg.precision, pg.group,
+                                  pg.data.dtype)
+    if pg.precision == "int4":
+        data_n = data_n.reshape(l, n_log * p_sz, -1)
+    wrow = jnp.asarray(wrow, jnp.int32)
+    # one scatter over the page axis; duplicate dump-page indices are
+    # harmless (undefined write order on a garbage page)
+    data = pg.data.at[:, wrow].set(_pagify(data_n, n_log, p_sz))
+    scale = (None if scale_n is None else
+             pg.scale.at[:, wrow].set(
+                 _pagify(scale_n.astype(pg.scale.dtype), n_log, p_sz)))
+    table = pg.table.at[:, slot].set(jnp.asarray(row, jnp.int32))
+    return dataclasses.replace(pg, data=data, scale=scale, table=table)
+
+
+def release_slot_pages(field, slot):
+    """Point a released slot's table at the dump page so its (masked)
+    in-flight writes cannot touch pages the allocator hands out again."""
+    def one(pg):
+        return dataclasses.replace(
+            pg, table=pg.table.at[:, slot].set(DUMP_PAGE))
+    if isinstance(field, tuple):
+        return tuple(one(pg) for pg in field)
+    return one(field)
+
+
+# ---------------------------------------------------------------------------
+# reads (dense materialization)
+# ---------------------------------------------------------------------------
+
+def _dense_view(pg: PagedKV, gathered_data, gathered_scale) -> KVPage:
+    return KVPage(data=gathered_data, scale=gathered_scale,
+                  precision=pg.precision, head_dim=pg.head_dim,
+                  group=pg.group)
+
+
+def gather(pg: PagedKV) -> KVPage:
+    """Single-layer pool (table (B, n_log)) -> dense (B, n_log*P, ...)
+    KVPage view of every slot (the ``simple`` backend's oracle path)."""
+    t = pg.table
+
+    def gat(x):
+        y = x[t]                                    # (B, n_log, P, ...)
+        return y.reshape(y.shape[0], t.shape[1] * pg.page_size,
+                         *y.shape[3:])
+
+    return _dense_view(pg, gat(pg.data),
+                       None if pg.scale is None else gat(pg.scale))
+
+
+def gather_rows(pg: PagedKV, row: jax.Array) -> KVPage:
+    """Layered pool + one explicit page row (n_log,) -> dense batch=1
+    (L, 1, n_log*P, ...) KVPage (prefix-hit prefill seeding)."""
+    def gat(x):
+        y = x[:, row]                               # (L, n_log, P, ...)
+        return y.reshape(y.shape[0], row.shape[0] * pg.page_size,
+                         *y.shape[3:])[:, None]
+
+    return _dense_view(pg, gat(pg.data),
+                       None if pg.scale is None else gat(pg.scale))
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+def page_nbytes(field) -> float:
+    """Physical bytes ONE logical page costs across a field's pools
+    (payload + scales, summed over layer runs; the table is negligible
+    and excluded)."""
+    pages = field if isinstance(field, tuple) else (field,)
+    total = 0.0
+    for pg in pages:
+        for leaf in (pg.data, pg.scale):
+            if leaf is None:
+                continue
+            n_phys = leaf.shape[1]
+            total += (float(np.prod(leaf.shape))
+                      * np.dtype(leaf.dtype).itemsize) / n_phys
+    return total

@@ -51,10 +51,12 @@ class DecodeState(NamedTuple):
 
 
 def init_state(model: Model, num_slots: int, max_seq: int,
-               key: jax.Array) -> DecodeState:
-    """All slots empty: inactive, done, zero-length."""
+               key: jax.Array, cache: Any = None) -> DecodeState:
+    """All slots empty: inactive, done, zero-length. ``cache`` overrides
+    the default slotted cache (paged engines pass a pool-backed one)."""
     return DecodeState(
-        cache=model.slotted_cache(num_slots, max_seq),
+        cache=cache if cache is not None
+        else model.slotted_cache(num_slots, max_seq),
         last_logits=jnp.zeros((num_slots, model.cfg.padded_vocab),
                               jnp.float32),
         tokens=jnp.zeros((num_slots, max_seq), jnp.int32),
@@ -73,20 +75,22 @@ def insert_request(model: Model, state: DecodeState, slot: jax.Array,
                    prompt: jax.Array, prompt_cache: Any,
                    last_logits: jax.Array, max_new: jax.Array,
                    temperature=jnp.float32(0.0), top_k=jnp.int32(0),
-                   top_p=jnp.float32(1.0)) -> DecodeState:
+                   top_p=jnp.float32(1.0), page_rows=None) -> DecodeState:
     """Admit one prefilled request into ``slot``.
 
     ``prompt``: (P,) int32; ``prompt_cache``/``last_logits`` come from a
     batch=1 prefill (scalar cache pos == P). The whole slot row is reset so
     nothing leaks from the previous occupant. Sampling controls are traced
-    scalars recorded per slot.
+    scalars recorded per slot. ``page_rows``: (row, wrow) page-table rows
+    from the pool allocator — required when the cache holds paged fields.
     """
     p = prompt.shape[0]
     tokens = state.tokens.at[slot].set(0)
     tokens = jax.lax.dynamic_update_slice(
         tokens, prompt[None].astype(jnp.int32), (slot, 0))
     return state._replace(
-        cache=model.insert_cache_slot(state.cache, prompt_cache, slot),
+        cache=model.insert_cache_slot(state.cache, prompt_cache, slot,
+                                      page_rows=page_rows),
         last_logits=state.last_logits.at[slot].set(
             last_logits.reshape(-1).astype(jnp.float32)),
         tokens=tokens,

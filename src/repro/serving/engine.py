@@ -69,6 +69,8 @@ from repro.core.policy import QuantPlan
 from repro.models.model import Model
 from repro.serving import batch as B
 from repro.serving import sampling as S
+from repro.serving.pool import (OutOfPages, PagedConfig, PoolSession,
+                                PrefixMatch)
 from repro.serving.quantized import apply_plan_to_params
 from repro.serving.scheduler import Request, RequestOutput, Scheduler
 from repro.serving.spec import SpecConfig
@@ -81,6 +83,17 @@ class GenerateResult:
     tokens: jax.Array          # (B, prompt+new)
     logprobs: jax.Array        # (B, new) chosen-token logprobs
     steps: int
+
+
+@dataclasses.dataclass
+class Prefill:
+    """One request's prefill result — everything ``insert`` needs to admit
+    it into a decode slot (the disaggregated prefill/insert/generate API,
+    docs/DESIGN.md §13)."""
+    prompt: np.ndarray           # (P,) int32 host tokens
+    cache: object                # batch=1 prefilled family cache (raw bf16)
+    last_logits: jax.Array       # (1, V_pad) logits after the last token
+    match: Optional[PrefixMatch] = None  # pinned prefix-cache match (paged)
 
 
 @dataclasses.dataclass
@@ -103,6 +116,15 @@ class ServeStats:
     draft_accepted: int = 0    # draft tokens verified AND committed
     acceptance_rate: float = 0.0   # accepted / proposed (realized uplift)
     tokens_per_round: float = 0.0  # committed tokens per live round
+    # paged KV pool (paged=... engines only; docs/DESIGN.md §13)
+    pool_pages_total: int = 0      # allocatable physical pages in the pool
+    pool_pages_peak: int = 0       # high-water mark of pages in use
+    pool_page_size: int = 0        # tokens per page
+    prefix_hits: int = 0           # admissions that reused shared pages
+    prefix_hit_tokens: int = 0     # prompt tokens served from shared pages
+    prefix_hit_rate: float = 0.0   # hit tokens / total prompt tokens
+    cow_copies: int = 0            # COW boundary pages materialized
+    kv_bytes_peak: float = 0.0     # peak physical KV bytes actually held
     # kernels/autotune.py provenance: the tune-cache key whose config the
     # engine's executables were traced under, or "untuned"
     tuned: str = "untuned"
@@ -115,7 +137,8 @@ class ServeEngine:
                  mesh=None, kv_precision="bf16",
                  kv_group: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
-                 autotune: bool = True):
+                 autotune: bool = True,
+                 paged=None):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
@@ -124,6 +147,18 @@ class ServeEngine:
         self.pad_id = pad_id
         self.mesh = mesh
         self.spec = spec
+        # paged KV pool (docs/DESIGN.md §13): True -> defaults, or a
+        # PagedConfig. Only plain K/V participates — enc-dec cross K/V is
+        # per-request (frames-dependent, nothing to share) and stays in the
+        # dense quantized layout; SSM families have no KV at all, so the
+        # pool is inert there and the API still works.
+        self.paged = (PagedConfig() if paged is True else paged) or None
+        self._paged_fields = (tuple(f for f in model.kv_cache_fields
+                                    if f in ("k", "v"))
+                              if self.paged is not None else ())
+        self.pool: Optional[PoolSession] = None  # built by init_decode_state
+        self._page_bytes = 0.0
+        self._seed_fns: dict = {}
         self._draft = None         # compiled lazily (plan may be set late)
         self._draft_stamp = None   # artifact manifest "draft" (from_artifact)
         if plan is not None:
@@ -303,6 +338,188 @@ class ServeEngine:
         assert frames is None, "frames only apply to enc-dec models"
         return self._prefill(prompts)
 
+    # -- paged KV pool + disaggregated API (docs/DESIGN.md §13) --------------
+    def _pool_runs(self, raw) -> list:
+        """Per-precision layer runs for a pool, aligned with the KV plan's
+        page cuts (a single raw-dtype run when serving bf16 caches)."""
+        l_total = raw.shape[0]
+        if self.kv_plan is None:
+            # bf16 pools still split at the weight stack's segment cuts:
+            # decode scans per segment, and kv_segment hands each scan its
+            # own pool (a full-stack pool would mismatch the leading axis)
+            cuts = (0,) + tuple(c for c in self._kv_cuts()
+                                if 0 < c < l_total) + (l_total,)
+            return [("bf16", lo, hi) for lo, hi in zip(cuts[:-1], cuts[1:])]
+        runs = self.kv_plan.pages(self._kv_cuts())
+        assert runs[-1][2] == l_total, (runs, l_total)
+        return runs
+
+    def _paged_cache(self, num_slots: int, pool_pages: int):
+        """Slotted family cache with the paged fields replaced by pools."""
+        from repro.quant import paged as PG
+        from repro.quant.kvcache import DEFAULT_KV_GROUP
+        cache = self.model.slotted_cache(num_slots, self.max_seq)
+        group = (self.kv_plan.group if self.kv_plan is not None
+                 else DEFAULT_KV_GROUP)
+        reps = {}
+        for name in self._paged_fields:
+            raw = getattr(cache, name)
+            reps[name] = PG.init_pool_field(
+                raw, self._pool_runs(raw), num_pages=pool_pages,
+                page_size=self.paged.page_size, num_slots=num_slots,
+                group=group)
+        return cache._replace(**reps)
+
+    def init_decode_state(self, num_slots: int,
+                          key: Optional[jax.Array] = None) -> B.DecodeState:
+        """Empty slotted decode state — the disaggregated API's entry
+        point. Paged engines also (re)build the page pool and its host
+        allocator here: one ``PoolSession`` per decode state, sized (by
+        default) to the dense engine's reservation of
+        ``num_slots * ceil(max_seq / page_size)`` pages — equal memory."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        cache = None
+        if self._paged_fields:
+            from repro.quant import paged as PG
+            n_log = PG.logical_pages(self.max_seq, self.paged.page_size)
+            pool_pages = self.paged.pool_pages or num_slots * n_log
+            self.pool = PoolSession(pool_pages, self.paged.page_size, n_log,
+                                    prefix_sharing=self.paged.prefix_sharing)
+            cache = self._paged_cache(num_slots, pool_pages)
+            self._page_bytes = sum(PG.page_nbytes(getattr(cache, name))
+                                   for name in self._paged_fields)
+        state = B.init_state(self.model, num_slots, self.max_seq, key,
+                             cache=cache)
+        # quantize any NON-paged KV fields (enc-dec cross K/V); pools pass
+        # through untouched (quantize_model_cache skips page fields)
+        state = state._replace(cache=self._kv_wrap(state.cache))
+        return self._shard_state(state)
+
+    def _slot_seq_budget(self, prompt_len: int, max_new: int) -> int:
+        """Deepest cache row a request can write + 1 (spec verify probes
+        ``k`` rows past the last committed token)."""
+        k = self.spec.k if self.spec is not None else 0
+        return min(self.max_seq, prompt_len + max_new + k)
+
+    def _seed_fn(self, suffix_len: int):
+        """Jitted prefix-hit prefill: gather the shared rows from the pool
+        into a dense bf16 cache positioned at ``hit`` and scan decode steps
+        over ONLY the suffix. One compile per suffix length."""
+        if suffix_len not in self._seed_fns:
+            model, max_seq = self.model, self.max_seq
+            fields = self._paged_fields
+
+            def run(params, pools, row, hit, suffix):
+                from repro.quant import paged as PG
+                from repro.quant.kvcache import dequantize_kv
+                cache = model.init_cache(1, max_seq)
+                reps = {}
+                for name in fields:
+                    field = pools[name]
+                    parts = [dequantize_kv(PG.gather_rows(pg, row),
+                                           getattr(cache, name).dtype)
+                             for pg in (field if isinstance(field, tuple)
+                                        else (field,))]
+                    full = (jnp.concatenate(parts, 0) if len(parts) > 1
+                            else parts[0])
+                    reps[name] = full[:, :, :max_seq]
+                cache = cache._replace(pos=jnp.asarray(hit, jnp.int32),
+                                       **reps)
+
+                def body(c, tok):
+                    logits, c = model.decode_step(params, c, tok[:, None])
+                    return c, logits[:, 0]
+
+                cache, logits = jax.lax.scan(body, cache, suffix.T)
+                return cache, logits[-1]
+
+            self._seed_fns[suffix_len] = self._traced(jax.jit(run))
+        return self._seed_fns[suffix_len]
+
+    def _seed_prefill(self, prompt: np.ndarray, m: PrefixMatch, state):
+        row = np.zeros(self.pool.n_log, np.int32)
+        row[:len(m.full_ids)] = m.full_ids
+        if m.donor is not None:
+            row[len(m.full_ids)] = m.donor
+        pools = {name: getattr(state.cache, name)
+                 for name in self._paged_fields}
+        suffix = jnp.asarray(prompt[m.hit:], jnp.int32)[None]
+        fn = self._seed_fn(int(prompt.size) - m.hit)
+        return fn(self.params, pools, jnp.asarray(row), jnp.int32(m.hit),
+                  suffix)
+
+    def prefill_request(self, prompt, frames=None, state=None) -> Prefill:
+        """Disaggregated prefill of ONE request (1-D prompt).
+
+        Paged engines with prefix sharing first match the prompt against
+        the pool's prefix cache, PINNING any matched pages. On a hit,
+        dense/MoE text requests skip the shared tokens outright: the
+        seeded prefill (needs ``state`` for the pool arrays) reads the
+        shared K/V back from the pool and only runs the model over the
+        suffix. Other families still prefill in full (hybrid needs its
+        conv/SSM state, enc-dec its frames) but the matched pages are
+        still mapped — causal K/V depends only on the preceding tokens,
+        so page sharing is valid for every attention family."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        match = None
+        if self.pool is not None and self.pool.prefix is not None:
+            match = self.pool.match(prompt)
+            if (match.hit > 0 and frames is None and state is not None
+                    and self.cfg.family in ("dense", "moe")):
+                cache1, logits1 = self._seed_prefill(prompt, match, state)
+                return Prefill(prompt=prompt, cache=cache1,
+                               last_logits=logits1, match=match)
+        frames_b = (jnp.asarray(frames)[None]
+                    if frames is not None else None)
+        cache1, logits1 = self.prefill(jnp.asarray(prompt)[None], frames_b)
+        return Prefill(prompt=prompt, cache=cache1, last_logits=logits1,
+                       match=match)
+
+    def insert(self, state: B.DecodeState, slot: int, pf: Prefill,
+               max_new: int, *, temperature: float = 0.0, top_k: int = 0,
+               top_p: float = 1.0) -> B.DecodeState:
+        """Admit a prefilled request into ``slot`` (disaggregated API).
+
+        Paged engines allocate the slot's pages here (shared prefix pages
+        are mapped, not copied; the COW boundary page is materialized by
+        the insert scatter) and raise ``OutOfPages`` — with the match's
+        pins released and nothing leaked — when the pool cannot serve the
+        request; callers should ``Scheduler.requeue`` and retry after a
+        slot drains."""
+        page_rows = None
+        p = int(pf.prompt.size)
+        if self.pool is not None:
+            need = self.pool.pages_for(self._slot_seq_budget(p, max_new))
+            row, wrow = self.pool.admit(slot, pf.prompt, need, pf.match)
+            page_rows = (jnp.asarray(row), jnp.asarray(wrow))
+        state = self._insert(state, jnp.int32(slot),
+                             jnp.asarray(pf.prompt, jnp.int32), pf.cache,
+                             pf.last_logits, jnp.int32(max_new),
+                             jnp.float32(temperature), jnp.int32(top_k),
+                             jnp.float32(top_p), page_rows)
+        if self.pool is not None:
+            self.pool.register(slot, pf.prompt, p)
+        return state
+
+    def decode_chunk(self, state: B.DecodeState, steps: int = DEFAULT_CHUNK):
+        """Run ``steps`` jitted decode steps over every active slot
+        (disaggregated API). Spec engines run ``steps`` propose/verify
+        rounds and return ``(state, round_metrics)``; plain engines return
+        the new state."""
+        if self.spec is not None:
+            return self._spec_fn(steps)(self.params, self.draft_params,
+                                        state)
+        return self._chunk_fn(steps)(self.params, state)
+
+    def release(self, state: B.DecodeState, slot: int) -> B.DecodeState:
+        """Evict a finished request and return its pages to the pool
+        (shared pages survive while the prefix cache or other slots still
+        reference them)."""
+        state = self._release(state, jnp.int32(slot))
+        if self.pool is not None:
+            self.pool.release(int(slot))
+        return state
+
     # -- fused chunked decode loop -------------------------------------------
     def _make_chunk_fn(self, steps: int):
         """One jitted scan over ``steps`` token positions.
@@ -435,16 +652,23 @@ class ServeEngine:
              f"{self.max_seq}")
 
     def _insert_impl(self, state, slot, prompt, prompt_cache, last_logits,
-                     max_new, temperature, top_k, top_p):
+                     max_new, temperature, top_k, top_p, page_rows=None):
         state = B.insert_request(self.model, state, slot, prompt,
                                  prompt_cache, last_logits, max_new,
-                                 temperature, top_k, top_p)
+                                 temperature, top_k, top_p,
+                                 page_rows=page_rows)
         if self.mesh is not None:
             state = B.constrain_state(state, self.mesh)
         return state
 
     def _release_impl(self, state, slot):
         state = B.release_slot(state, slot)
+        if self._paged_fields:
+            from repro.quant import paged as PG
+            reps = {name: PG.release_slot_pages(getattr(state.cache, name),
+                                                slot)
+                    for name in self._paged_fields}
+            state = state._replace(cache=state.cache._replace(**reps))
         if self.mesh is not None:
             state = B.constrain_state(state, self.mesh)
         return state
@@ -476,6 +700,36 @@ class ServeEngine:
             top_k=jnp.full((b,), top_k, jnp.int32),
             top_p=jnp.full((b,), top_p, jnp.float32))
 
+    def _slice_prefill(self, cache, i: int):
+        """Batch prefill cache -> the batch=1 slice ``insert`` expects."""
+        axes = self.model.cache_batch_axes
+
+        def one(leaf, axis):
+            leaf = jnp.asarray(leaf)
+            if leaf.ndim == 0:      # scalar pos is shared across the batch
+                return leaf
+            return jax.lax.dynamic_slice_in_dim(leaf, i, 1, axis=axis)
+
+        return type(cache)(*(one(l, a) for l, a in zip(cache, axes)))
+
+    def _batch_state_paged(self, prompts, frames, max_new_tokens,
+                           temperature, top_k, top_p, key) -> B.DecodeState:
+        """generate()'s paged twin of ``_batch_state``: the SAME batched
+        prefill (numerics identical to dense), then each row is admitted
+        through the pool so the decode carry reads/writes pages."""
+        b = prompts.shape[0]
+        state = self.init_decode_state(b, key)
+        cache, last_logits = self.prefill(prompts, frames)
+        prompts_np = np.asarray(prompts).astype(np.int32)
+        for i in range(b):
+            pf = Prefill(prompt=prompts_np[i],
+                         cache=self._slice_prefill(cache, i),
+                         last_logits=last_logits[i:i + 1])
+            state = self.insert(state, i, pf, max_new_tokens,
+                                temperature=temperature, top_k=top_k,
+                                top_p=top_p)
+        return state
+
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None,
@@ -494,8 +748,12 @@ class ServeEngine:
             self._spec_budget_check(p, max_new_tokens)
         else:
             assert total <= self.max_seq, (total, self.max_seq)
-        state = self._batch_state(prompts, frames, max_new_tokens,
-                                  temperature, top_k, top_p, key)
+        if self._paged_fields:
+            state = self._batch_state_paged(prompts, frames, max_new_tokens,
+                                            temperature, top_k, top_p, key)
+        else:
+            state = self._batch_state(prompts, frames, max_new_tokens,
+                                      temperature, top_k, top_p, key)
         state = self._shard_state(state)
         chunk = max_new_tokens if chunk is None else min(chunk, max_new_tokens)
         if spec:
@@ -585,11 +843,8 @@ class ServeEngine:
             else:
                 assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
             sched.submit(r)
-        state = B.init_state(
-            self.model, num_slots, self.max_seq,
-            key if key is not None else jax.random.PRNGKey(0))
-        state = self._shard_state(state._replace(
-            cache=self._kv_wrap(state.cache)))
+        state = self.init_decode_state(
+            num_slots, key if key is not None else jax.random.PRNGKey(0))
         if spec:
             fn = self._spec_fn(chunk)
             draft_params = self.draft_params
@@ -601,29 +856,44 @@ class ServeEngine:
         generated = 0
         spec_m = {"proposed": 0, "accepted": 0, "committed": 0, "rounds": 0}
         while not sched.all_done():
+            stalled = False
             for slot in sched.free_slots():
                 req = sched.next_ready(clock)
                 if req is None:
                     break
-                prompt = jnp.asarray(req.prompt, jnp.int32)
-                frames = (jnp.asarray(req.frames)[None]
-                          if req.frames is not None else None)
+                if self.pool is not None and not self.pool.can_admit(
+                        self.pool.pages_for(self._slot_seq_budget(
+                            len(req.prompt), req.max_new_tokens))):
+                    # pool backpressure: not enough free/evictable pages
+                    # for the worst case — retry after a slot drains
+                    sched.requeue(req)
+                    stalled = True
+                    break
+                # the TTFT clock starts at dequeue so prefill time (and the
+                # prefix cache skipping it) shows up in ttft_s
+                wall = time.perf_counter()
                 # admission is baseline-identical even under spec: the spec
                 # loop recognizes pos == lengths as a fresh slot and takes
                 # the first candidate dist from these prefill logits
-                cache1, logits1 = self.prefill(prompt[None], frames)
+                pf = self.prefill_request(req.prompt, frames=req.frames,
+                                          state=state)
                 temp = (req.temperature if req.temperature is not None
                         else temperature)
-                state = self._insert(state, jnp.int32(slot), prompt, cache1,
-                                     logits1, jnp.int32(req.max_new_tokens),
-                                     jnp.float32(temp),
-                                     jnp.int32(req.top_k),
-                                     jnp.float32(req.top_p))
+                state = self.insert(state, slot, pf, req.max_new_tokens,
+                                    temperature=temp, top_k=req.top_k,
+                                    top_p=req.top_p)
                 # a refill = joining a batch that is already mid-decode
                 if occupancy and sched.num_active > 0:
                     admissions += 1
-                sched.assign(slot, req, clock)
+                sched.assign(slot, req, clock, wall=wall)
             if sched.num_active == 0:
+                if stalled:
+                    raise OutOfPages(
+                        "admission deadlock: no active slots and the pool "
+                        "cannot supply the next request's pages "
+                        f"({self.pool.num_pages} pages of "
+                        f"{self.pool.page_size} tokens) — size pool_pages "
+                        "for the longest request")
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
@@ -651,7 +921,7 @@ class ServeEngine:
                 reason = ("eos" if self.eos_id is not None and n > 0
                           and row[-1] == self.eos_id else "length")
                 sched.complete(slot, row, lps, reason, clock)
-                state = self._release(state, jnp.int32(slot))
+                state = self.release(state, slot)
                 generated += n - len(req.prompt)
         outputs = sorted(sched.finished, key=lambda o: o.rid)
 
@@ -660,6 +930,21 @@ class ServeEngine:
 
         ttfts = [o.ttft_s for o in outputs if o.ttft_s is not None]
         tpots = [o.tpot_s for o in outputs if o.tpot_s is not None]
+        pool_kw = {}
+        if self.pool is not None:
+            pool = self.pool
+            pool_kw = dict(
+                pool_pages_total=pool.num_pages,
+                pool_pages_peak=pool.peak_pages,
+                pool_page_size=pool.page_size,
+                prefix_hits=pool.prefix_hits,
+                prefix_hit_tokens=pool.prefix_hit_tokens,
+                prefix_hit_rate=(pool.prefix_hit_tokens / pool.prompt_tokens
+                                 if pool.prompt_tokens else 0.0),
+                cow_copies=pool.cow_copies,
+                kv_bytes_peak=(pool.peak_pages * self._page_bytes
+                               + num_slots
+                               * self._nonpaged_bytes_per_slot()))
         stats = ServeStats(
             decode_steps=len(occupancy) * chunk,
             generated_tokens=generated,
@@ -674,7 +959,7 @@ class ServeEngine:
                              if spec_m["proposed"] else 0.0),
             tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
                               if spec_m["rounds"] else 0.0),
-            tuned=self.tuned)
+            tuned=self.tuned, **pool_kw)
         return outputs, stats
 
     # -- diagnostics -----------------------------------------------------------
@@ -692,6 +977,32 @@ class ServeEngine:
                                                               self.max_seq)))
         return float(sum(kv_field_nbytes(getattr(cache, name))
                          for name in self.model.kv_cache_fields))
+
+    def _nonpaged_bytes_per_slot(self) -> float:
+        """Per-slot bytes of KV fields NOT served from the pool (enc-dec
+        cross K/V); 0.0 when everything is paged or there is no KV."""
+        from repro.quant.kvcache import kv_field_nbytes
+        names = [n for n in self.model.kv_cache_fields
+                 if n not in self._paged_fields]
+        if not names:
+            return 0.0
+        cache = jax.eval_shape(
+            lambda: self._wrap_cache(self.model.slotted_cache(1,
+                                                              self.max_seq)))
+        return float(sum(kv_field_nbytes(getattr(cache, n)) for n in names))
+
+    def kv_bytes_allocated(self, num_slots: int = 1) -> float:
+        """Physical attention-cache bytes actually held right now.
+
+        Dense engines reserve every slot at full depth up front, so this
+        is just ``num_slots * kv_bytes_per_slot()``. Paged engines charge
+        only the pool pages currently referenced (shared prefix pages
+        counted ONCE — that is the whole point) plus the dense reservation
+        of any non-paged KV fields (enc-dec cross K/V)."""
+        if self.pool is None:
+            return num_slots * self.kv_bytes_per_slot()
+        return (self.pool.pages_in_use * self._page_bytes
+                + num_slots * self._nonpaged_bytes_per_slot())
 
     @staticmethod
     def _tree_weight_bytes(params) -> float:

@@ -77,12 +77,23 @@ class Scheduler:
     def next_arrival(self) -> Optional[int]:
         return self._queue[0][0] if self._queue else None
 
+    def requeue(self, req: Request) -> None:
+        """Push a dequeued request back (admission backpressure — e.g. the
+        paged pool cannot supply its pages until a slot drains)."""
+        heapq.heappush(self._queue, (req.arrival_step, req.rid, req))
+
     # -- slots --------------------------------------------------------------
-    def assign(self, slot: int, req: Request, clock: int) -> None:
+    def assign(self, slot: int, req: Request, clock: int,
+               wall: Optional[float] = None) -> None:
+        """``wall`` lets the engine start the TTFT clock when the request
+        is DEQUEUED (before its prefill), not when the slot is filled —
+        otherwise prefill time (and the prefix-cache's skipping of it)
+        would be invisible in ttft_s."""
         assert self._slots[slot] is None, f"slot {slot} busy"
         self._slots[slot] = req
         self._admitted_step[req.rid] = clock
-        self._admitted_wall[req.rid] = time.perf_counter()
+        self._admitted_wall[req.rid] = (time.perf_counter()
+                                        if wall is None else wall)
 
     def mark_first_token(self, slot: int, t: float) -> None:
         """Record the wall time of the first chunk whose harvest shows

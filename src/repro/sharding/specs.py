@@ -198,6 +198,10 @@ def cache_specs(cache: Any, mesh: Mesh) -> Any:
         field = next((n for n in reversed(names)
                       if not (n.startswith("#") or n.startswith("["))), "")
         is_scale = bool(names) and names[-1] == "#1"
+        if names and names[-1] == "#2":
+            # PagedKV page table (L, B, n_log) int32 — tiny, consulted on
+            # the host by the allocator: keep it replicated.
+            return P()
         if field in ("k", "v", "cross_k", "cross_v"):
             if is_scale or len(shape) == 4:
                 return P(None, _div(shape[1], mesh, fsdp), None, None)

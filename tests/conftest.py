@@ -3,6 +3,38 @@ import os
 # Tests run single-device (the dry-run sets its own XLA_FLAGS in subprocesses).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import pytest
+
+FAMILY_ARCHS = (("dense", "llama3.2-3b"), ("ssm", "mamba2-780m"),
+                ("hybrid", "zamba2-2.7b"), ("encdec", "whisper-medium"))
+
+
+@pytest.fixture(scope="session")
+def trained():
+    """Briefly-trained f32 smoke models, one per family (greedy decode has
+    stable top-1 gaps, so int8 cache noise — ~1e-2 logprobs — cannot flip
+    tokens). Session-scoped: shared by the decode-attn and paged-serving
+    suites."""
+    import dataclasses
+
+    from repro.configs.base import RunConfig
+    from repro.configs.registry import get_config
+    from repro.train.loop import train
+
+    out = {}
+    for family, arch in FAMILY_ARCHS:
+        cfg = get_config(arch, smoke=True)
+        cfg = dataclasses.replace(cfg, dtype="float32")
+        # hybrid converges slowest on the smoke corpus: at 40 steps its
+        # greedy top-1 gaps sit at ~3e-4 — BELOW int8 cache noise — and
+        # quantized serving flips tokens. Train it to a stable margin.
+        steps, lr = (120, 1e-2) if family == "hybrid" else (40, 3e-3)
+        run = RunConfig(steps=steps, learning_rate=lr, warmup_steps=3,
+                        remat=False)
+        res = train(cfg, run, batch=8, seq=16)
+        out[family] = (cfg, res["model"], res["params"])
+    return out
+
 try:
     from hypothesis import HealthCheck, settings
 except ImportError:

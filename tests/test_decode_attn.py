@@ -19,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import RunConfig
 from repro.configs.registry import get_config
 from repro.core.planner import plan_kv
 from repro.kernels.decode_attn.kernel import decode_attn_pallas
@@ -169,22 +168,6 @@ def test_plan_kv_entropy_mapping():
 # ---------------------------------------------------------------------------
 # engine-level parity: int8 KV cache vs bf16, all four families
 # ---------------------------------------------------------------------------
-
-@pytest.fixture(scope="module")
-def trained():
-    """Briefly-trained f32 smoke models (greedy decode has stable top-1
-    gaps, so int8 cache noise — ~1e-2 logprobs — cannot flip tokens)."""
-    from repro.train.loop import train
-    out = {}
-    for family, arch in FAMILY_ARCHS:
-        cfg = get_config(arch, smoke=True)
-        cfg = dataclasses.replace(cfg, dtype="float32")
-        run = RunConfig(steps=40, learning_rate=3e-3, warmup_steps=3,
-                        remat=False)
-        res = train(cfg, run, batch=8, seq=16)
-        out[family] = (cfg, res["model"], res["params"])
-    return out
-
 
 def _requests(cfg, n=3, prompt_len=6, max_new=6):
     return [Request(rid=i, prompt=np.asarray(jax.random.randint(

@@ -1,0 +1,470 @@
+"""Paged quantized KV pool + disaggregated serving API (docs/DESIGN.md §13).
+
+Three layers:
+
+* host allocator (serving/pool.py): free-list/refcount invariants, the
+  COW prefix-sharing admission protocol, LRU eviction, backpressure;
+* device ops (quant/paged.py + the decode-attention trio): pool
+  insert/gather/update round-trips and paged-vs-dense backend parity for
+  bf16 / int8 / int4 pools, multi-query verify windows included;
+* engine (serving/engine.py): the paged prefill/insert/generate engine
+  must emit greedy tokens IDENTICAL to the dense engine on all four
+  families and all KV precisions, with prefix sharing, spec decode and
+  pool backpressure live.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import kvcache as KV
+from repro.quant import paged as PG
+from repro.serving.engine import ServeEngine
+from repro.serving.pool import (OutOfPages, PagedConfig, PoolSession,
+                                PrefixMatch)
+from repro.serving.scheduler import Request
+
+PC4 = PagedConfig(page_size=4)
+
+
+# ---------------------------------------------------------------------------
+# host allocator
+# ---------------------------------------------------------------------------
+
+def test_alloc_release_refcounts_and_free_list():
+    pool = PoolSession(num_pages=6, page_size=4, n_log=6)
+    row, wrow = pool.admit(0, list(range(10)), 3)
+    assert pool.pages_in_use == 3 and pool.pages_free == 3
+    assert list(row[:3]) == list(wrow[:3]) and all(row[3:] == 0)
+    assert 0 not in row[:3]                    # dump page never handed out
+    pool.check_invariants()
+    pool.release(0)
+    assert pool.pages_in_use == 0 and pool.pages_free == 6
+    pool.check_invariants()
+
+
+def test_pages_for_and_can_admit():
+    pool = PoolSession(num_pages=4, page_size=4, n_log=6,
+                       prefix_sharing=False)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    assert pool.pages_for(1000) == 6           # clamped to n_log
+    assert pool.can_admit(4) and not pool.can_admit(5)
+    pool.admit(0, [1, 2, 3], 3)
+    assert pool.can_admit(1) and not pool.can_admit(2)
+
+
+def test_out_of_pages_leaks_nothing():
+    pool = PoolSession(num_pages=3, page_size=4, n_log=6,
+                       prefix_sharing=False)
+    pool.admit(0, [1], 2)
+    with pytest.raises(OutOfPages):
+        pool.admit(1, [2], 2)
+    # the failed admission returned its partial allocation
+    assert pool.pages_in_use == 2
+    pool.check_invariants()
+    pool.release(0)
+    pool.admit(1, [2], 3)                      # now it fits
+    pool.check_invariants()
+
+
+def test_prefix_match_register_and_cow_demotion():
+    pool = PoolSession(num_pages=12, page_size=4, n_log=6)
+    toks = list(range(100, 116))               # 16 tokens = 4 full pages
+    m0 = pool.match(toks)
+    assert m0 == PrefixMatch()                 # cold cache
+    pool.admit(0, toks, 5, m0)
+    pool.register(0, toks, len(toks))
+    pool.check_invariants()
+    # identical prompt: all 4 pages known, but the hit is capped at p-1 so
+    # the model still produces last-token logits — the 4th page demotes to
+    # a COW donor contributing 3 tokens
+    m1 = pool.match(toks)
+    assert m1.hit == 15 and len(m1.full_ids) == 3
+    assert m1.donor is not None and m1.donor_tokens == 3
+    before = pool.pages_in_use
+    row, wrow = pool.admit(1, toks, 5, m1)
+    assert pool.cow_copies == 1
+    assert list(row[:3]) == list(m1.full_ids)
+    assert all(wrow[:3] == 0)                  # shared pages write to dump
+    assert all(row[3:5] != 0) and all(wrow[3:5] == row[3:5])
+    # shared pages mapped, not copied: only 2 private pages were allocated
+    assert pool.pages_in_use == before + 2
+    pool.register(1, toks, len(toks))
+    pool.check_invariants()
+    # divergent tail: only the 3 common full pages match, no donor overlap
+    toks2 = toks[:12] + [900, 901, 902, 903]
+    m2 = pool.match(toks2)
+    assert m2.hit == 12 and len(m2.full_ids) == 3 and m2.donor is None
+    pool.unpin(m2)
+    pool.check_invariants()
+
+
+def test_shared_pages_survive_donor_release():
+    pool = PoolSession(num_pages=8, page_size=4, n_log=6)
+    toks = list(range(16))
+    pool.admit(0, toks, 4, pool.match(toks))
+    pool.register(0, toks, 16)
+    m = pool.match(toks)
+    pool.admit(1, toks, 4, m)
+    pool.release(0)                            # donor gone; pages must live
+    pool.check_invariants()
+    m2 = pool.match(toks)
+    assert m2.hit == 15                        # still fully matchable
+    pool.unpin(m2)
+    pool.release(1)
+    pool.check_invariants()
+    assert pool.pages_in_use > 0               # prefix cache keeps its refs
+
+
+def test_lru_eviction_frees_cache_only_pages():
+    pool = PoolSession(num_pages=4, page_size=4, n_log=6)
+    toks = list(range(8))                      # 2 full pages
+    pool.admit(0, toks, 2, pool.match(toks))
+    pool.register(0, toks, 8)
+    pool.release(0)                            # only the prefix cache holds 2
+    assert pool.pages_in_use == 2 and pool.can_admit(4)
+    pool.admit(1, list(range(50, 58)), 4)      # forces eviction of both
+    assert pool.pages_in_use == 4
+    pool.check_invariants()
+    m = pool.match(toks)
+    assert m.hit == 0                          # evicted entries are gone
+
+
+# ---------------------------------------------------------------------------
+# device ops + backend parity
+# ---------------------------------------------------------------------------
+
+def _mk_pool(precision, b=3, s_max=32, hkv=2, hd=8, p=8, group=8):
+    return PG.init_pool_field(
+        jnp.zeros((1, b, s_max, hkv, hd), jnp.float32), [(precision, 0, 1)],
+        num_pages=b * (s_max // p), page_size=p, num_slots=b, group=group)
+
+
+def _fill(pool, raw, valid, p=8):
+    nxt = 1
+    rows = []
+    for b in range(raw.shape[1]):
+        row = [0] * pool.table.shape[-1]
+        for j in range(-(-int(valid[b]) // p)):
+            row[j] = nxt
+            nxt += 1
+        rows.append(row)
+    rows = np.array(rows, np.int32)
+    for b in range(raw.shape[1]):
+        pool = PG.insert_slot_paged(pool, jnp.asarray(raw[:, b:b + 1]), b,
+                                    rows[b], rows[b])
+    return pool, rows
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8", "int4"])
+def test_paged_backends_match_dense_oracle(precision):
+    from repro.kernels.decode_attn import ops
+    rng = np.random.default_rng(0)
+    b, s_max, hkv, hd, h, p = 3, 32, 2, 8, 4, 8
+    valid = np.array([13, 30, 21], np.int32)
+    kraw = rng.normal(size=(1, b, s_max, hkv, hd)).astype(np.float32)
+    vraw = rng.normal(size=(1, b, s_max, hkv, hd)).astype(np.float32)
+    kpool, _ = _fill(_mk_pool(precision), kraw, valid)
+    vpool, _ = _fill(_mk_pool(precision), vraw, valid)
+    kp = jax.tree.map(lambda x: x[0], kpool)   # strip the layer axis
+    vp = jax.tree.map(lambda x: x[0], vpool)
+    if precision == "bf16":
+        kd = KV.KVPage(data=jnp.asarray(kraw[0]), scale=None,
+                       precision="bf16", head_dim=hd, group=8)
+        vd = KV.KVPage(data=jnp.asarray(vraw[0]), scale=None,
+                       precision="bf16", head_dim=hd, group=8)
+    else:
+        kd = KV.make_page(jnp.asarray(kraw[0]), precision, 8)
+        vd = KV.make_page(jnp.asarray(vraw[0]), precision, 8)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, hd)).astype(np.float32))
+    vl = jnp.asarray(valid)
+    ref = ops._grouped(q, kd, vd, vl, 16, True)
+    outs = {"grouped": ops._grouped(q, kp, vp, vl, 16, True),
+            "simple": ops._simple(q, kp, vp, vl, True),
+            "pallas": ops._pallas(q, kp, vp, vl, 16, True, interpret=True)}
+    for name, out in outs.items():
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5, err_msg=name)
+    # multi-query verify window + fresh side-buffer rows (spec decode)
+    qs = 3
+    qm = jnp.asarray(rng.normal(size=(b, qs, h, hd)).astype(np.float32))
+    fk = jnp.asarray(rng.normal(size=(b, 2, hkv, hd)).astype(np.float32))
+    fv = jnp.asarray(rng.normal(size=(b, 2, hkv, hd)).astype(np.float32))
+    base = jnp.asarray(valid - 2)
+    ref2 = ops._grouped(qm, kd, vd, vl, 16, True, fresh=(fk, fv, base))
+    outs2 = {
+        "grouped": ops._grouped(qm, kp, vp, vl, 16, True,
+                                fresh=(fk, fv, base)),
+        "simple": ops._simple(qm, kp, vp, vl, True, fresh=(fk, fv, base)),
+        "pallas": ops._pallas(qm, kp, vp, vl, 16, True,
+                              fresh=(fk, fv, base), interpret=True)}
+    for name, out in outs2.items():
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref2),
+                                   atol=3e-5, rtol=3e-5, err_msg=name)
+
+
+def test_update_pages_writes_through_table_and_release_dumps():
+    rng = np.random.default_rng(1)
+    b, s_max, hkv, hd, p = 3, 32, 2, 8, 8
+    valid = np.array([13, 30, 21], np.int32)
+    raw = rng.normal(size=(1, b, s_max, hkv, hd)).astype(np.float32)
+    pool, rows = _fill(_mk_pool("bf16"), raw, valid)
+    pg = jax.tree.map(lambda x: x[0], pool)
+    new = jnp.asarray(rng.normal(size=(b, 1, hkv, hd)).astype(np.float32))
+    pg2 = KV.update_page(pg, new, jnp.asarray(valid))   # PagedKV dispatch
+    dense = PG.gather(pg2)
+    for i in range(b):
+        np.testing.assert_array_equal(
+            np.asarray(dense.data)[i, int(valid[i])],
+            np.asarray(new)[i, 0])             # bf16 pools store raw values
+    # releasing slot 1 points its table at the dump page
+    rel = PG.release_slot_pages(pool, 1)
+    assert np.all(np.asarray(rel.table)[:, 1] == PG.DUMP_PAGE)
+    assert np.array_equal(np.asarray(rel.table)[:, 0],
+                          np.asarray(pool.table)[:, 0])
+
+
+def test_pool_table_spec_is_replicated():
+    """cache_specs must not crash on the rank-3 int32 page table (it has
+    no head axis) — the "#2" leaf is replicated; the pool payload keeps
+    the positional dense KV rules."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.specs import cache_specs
+    from typing import NamedTuple
+
+    class C(NamedTuple):
+        k: object
+        v: object
+        pos: object
+
+    pool = _mk_pool("int8")
+    cache = C(k=pool, v=pool, pos=jnp.zeros((3,), jnp.int32))
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    specs = cache_specs(cache, mesh)
+    assert specs.k.table == P()
+    assert isinstance(specs.k.data, P) and isinstance(specs.k.scale, P)
+
+
+# ---------------------------------------------------------------------------
+# engine parity (paged vs dense, greedy token-identical)
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, n=3, prompt_len=6, max_new=6, prefix=None):
+    out = []
+    for i in range(n):
+        pr = np.array(jax.random.randint(jax.random.PRNGKey(10 + i),
+                                         (prompt_len,), 0, cfg.vocab_size,
+                                         dtype=jnp.int32))
+        if prefix is not None:
+            pr[:len(prefix)] = prefix
+        out.append(Request(rid=i, prompt=pr, max_new_tokens=max_new))
+    return out
+
+
+def _assert_same(outs_a, outs_b, atol=1e-2):
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logprobs, b.logprobs, atol=atol)
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid", "encdec"])
+def test_paged_serve_matches_dense(trained, family):
+    cfg, model, params = trained[family]
+    reqs = _requests(cfg)
+    ref = ServeEngine(model, params, max_seq=24)
+    pg = ServeEngine(model, params, max_seq=24, paged=PC4)
+    outs_ref, _ = ref.serve(reqs, num_slots=2, chunk=4)
+    outs_pg, stats = pg.serve(reqs, num_slots=2, chunk=4)
+    _assert_same(outs_pg, outs_ref, atol=1e-4)
+    if family == "ssm":                        # attention-free: pool inert
+        assert pg.pool is None and stats.pool_pages_total == 0
+    else:
+        assert stats.pool_pages_total == 2 * (24 // 4)
+        assert stats.pool_pages_peak > 0
+        pg.pool.check_invariants()
+        # slots drained: anything still held belongs to the prefix cache
+        # only (retained for future sharing, evictable on demand)
+        assert (pg.pool.pages_in_use
+                == pg.pool.prefix.evictable(pg.pool._ref))
+
+
+@pytest.mark.parametrize("kv_precision", ["int8", "int4"])
+def test_paged_serve_quantized_kv_matches_dense_quantized(trained,
+                                                          kv_precision):
+    """A paged int8/int4 pool must agree with the DENSE engine at the same
+    KV precision — same quantize-on-insert math, different storage."""
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg)
+    ref = ServeEngine(model, params, max_seq=24, kv_precision=kv_precision)
+    pg = ServeEngine(model, params, max_seq=24, kv_precision=kv_precision,
+                     paged=PC4)
+    outs_ref, _ = ref.serve(reqs, num_slots=2, chunk=4)
+    outs_pg, _ = pg.serve(reqs, num_slots=2, chunk=4)
+    _assert_same(outs_pg, outs_ref, atol=1e-4)
+
+
+def test_paged_generate_matches_dense(trained):
+    cfg, model, params = trained["dense"]
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    ref = ServeEngine(model, params, max_seq=24)
+    pg = ServeEngine(model, params, max_seq=24, paged=PC4)
+    o_ref = ref.generate(prompts, 6, chunk=3)
+    o_pg = pg.generate(prompts, 6, chunk=3)
+    np.testing.assert_array_equal(np.asarray(o_ref.tokens),
+                                  np.asarray(o_pg.tokens))
+    np.testing.assert_allclose(np.asarray(o_ref.logprobs),
+                               np.asarray(o_pg.logprobs), atol=1e-4)
+
+
+def test_paged_bf16_over_segmented_stack_matches_dense(trained):
+    """bf16 KV pools over a MIXED-PRECISION weight stack: decode scans per
+    weight segment, so the pool must split at the segment cuts (a single
+    full-stack pool would mismatch the scan's leading axis)."""
+    from repro.serving.quantized import plan_for_variant
+    cfg, model, params = trained["dense"]
+    plan = plan_for_variant(model, params, "8bit-mixed")
+    qparams = model.compile_plan(params, plan).params
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    ref = ServeEngine(model, qparams, max_seq=24)
+    pg = ServeEngine(model, qparams, max_seq=24, paged=PC4)
+    from repro.quant.apply import segment_slices
+    n_seg = len(segment_slices(qparams["layers"]))
+    k = pg._paged_cache(2, 8).k
+    assert len(k if isinstance(k, tuple) else (k,)) == n_seg
+    o_ref = ref.generate(prompts, 6, chunk=3)
+    o_pg = pg.generate(prompts, 6, chunk=3)
+    np.testing.assert_array_equal(np.asarray(o_ref.tokens),
+                                  np.asarray(o_pg.tokens))
+
+
+def test_prefix_sharing_skips_prefill_and_stays_exact(trained):
+    """Requests sharing a 12-token system prefix: the paged engine maps the
+    shared pages, skips their prefill (dense seeded path), and still emits
+    the dense engine's exact greedy tokens."""
+    cfg, model, params = trained["dense"]
+    prefix = np.array(jax.random.randint(jax.random.PRNGKey(99), (12,), 0,
+                                         cfg.vocab_size, dtype=jnp.int32))
+    reqs = _requests(cfg, n=4, prompt_len=16, max_new=6, prefix=prefix)
+    ref = ServeEngine(model, params, max_seq=24)
+    pg = ServeEngine(model, params, max_seq=24, paged=PC4)
+    outs_ref, _ = ref.serve(reqs, num_slots=2, chunk=4)
+    outs_pg, st = pg.serve(reqs, num_slots=2, chunk=4)
+    _assert_same(outs_pg, outs_ref, atol=1e-4)
+    assert st.prefix_hits == 3                 # every follower hit
+    assert st.prefix_hit_tokens == 3 * 12
+    assert 0.0 < st.prefix_hit_rate < 1.0
+    pg.pool.check_invariants()
+
+
+@pytest.mark.parametrize("kv_precision", ["bf16", "int8"])
+def test_cow_boundary_page_materializes(trained, kv_precision):
+    """Identical page-aligned prompts force the demoted-donor COW path: the
+    follower maps 3 shared pages and copies the boundary page privately."""
+    cfg, model, params = trained["dense"]
+    pr = np.array(jax.random.randint(jax.random.PRNGKey(7), (16,), 0,
+                                     cfg.vocab_size, dtype=jnp.int32))
+    reqs = [Request(rid=i, prompt=pr.copy(), max_new_tokens=6)
+            for i in range(3)]
+    ref = ServeEngine(model, params, max_seq=24, kv_precision=kv_precision)
+    pg = ServeEngine(model, params, max_seq=24, kv_precision=kv_precision,
+                     paged=PC4)
+    outs_ref, _ = ref.serve(reqs, num_slots=2, chunk=4)
+    outs_pg, st = pg.serve(reqs, num_slots=2, chunk=4)
+    _assert_same(outs_pg, outs_ref, atol=1e-2)
+    assert st.cow_copies == 2 and st.prefix_hits == 2
+    assert st.prefix_hit_tokens == 2 * 15      # capped at prompt_len - 1
+    pg.pool.check_invariants()
+
+
+def test_pool_backpressure_requeues_and_completes(trained):
+    """A pool too small for 4 concurrent slots: admission stalls, requests
+    requeue, everything still finishes with the dense engine's tokens."""
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg, n=4)
+    ref = ServeEngine(model, params, max_seq=24)
+    pg = ServeEngine(model, params, max_seq=24,
+                     paged=PagedConfig(page_size=4, pool_pages=7,
+                                       prefix_sharing=False))
+    outs_ref, _ = ref.serve(reqs, num_slots=4, chunk=4)
+    outs_pg, st = pg.serve(reqs, num_slots=4, chunk=4)
+    _assert_same(outs_pg, outs_ref, atol=1e-4)
+    assert st.pool_pages_peak <= 7
+    assert pg.pool.pages_in_use == 0
+    pg.pool.check_invariants()
+
+
+def test_impossible_request_raises_out_of_pages(trained):
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg, n=1, prompt_len=6, max_new=6)   # needs 3 pages
+    pg = ServeEngine(model, params, max_seq=24,
+                     paged=PagedConfig(page_size=4, pool_pages=2,
+                                       prefix_sharing=False))
+    with pytest.raises(OutOfPages):
+        pg.serve(reqs, num_slots=2, chunk=4)
+
+
+def test_spec_decode_paged_parity(trained):
+    """Spec verify writes K+1 rows through the page table and rolls back by
+    position arithmetic; paged spec serving matches dense spec serving."""
+    from repro.serving.spec import SpecConfig
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg)
+    ref = ServeEngine(model, params, max_seq=24, spec=SpecConfig(k=2),
+                      kv_precision="int8")
+    pg = ServeEngine(model, params, max_seq=24, spec=SpecConfig(k=2),
+                     kv_precision="int8", paged=PC4)
+    outs_ref, _ = ref.serve(reqs, num_slots=2, chunk=2)
+    outs_pg, _ = pg.serve(reqs, num_slots=2, chunk=2)
+    _assert_same(outs_pg, outs_ref, atol=1e-4)
+    pg.pool.check_invariants()
+
+
+def test_kv_bytes_allocated_is_honest(trained):
+    """Dense reserves num_slots * full depth up front; the paged engine
+    charges only referenced pages (0 when drained, shared pages once)."""
+    cfg, model, params = trained["dense"]
+    ref = ServeEngine(model, params, max_seq=24)
+    pg = ServeEngine(model, params, max_seq=24,
+                     paged=PagedConfig(page_size=4, prefix_sharing=False))
+    assert ref.kv_bytes_allocated(4) == 4 * ref.kv_bytes_per_slot()
+    reqs = _requests(cfg, n=2)
+    pg.serve(reqs, num_slots=2, chunk=4)
+    assert pg.kv_bytes_allocated(2) == 0.0     # pool fully drained
+    # mid-flight accounting: admit one short request by hand
+    state = pg.init_decode_state(2)
+    pf = pg.prefill_request(reqs[0].prompt, state=state)
+    pg.insert(state, 0, pf, reqs[0].max_new_tokens)
+    used = pg.kv_bytes_allocated(2)
+    assert 0.0 < used < ref.kv_bytes_allocated(2)
+    assert used == pg.pool.pages_in_use * pg._page_bytes
+
+
+def test_disaggregated_api_matches_serve(trained):
+    """Driving prefill_request / insert / decode_chunk / release by hand
+    produces the same greedy tokens as serve() for the same request."""
+    cfg, model, params = trained["dense"]
+    req = _requests(cfg, n=1)[0]
+    nosh = PagedConfig(page_size=4, prefix_sharing=False)
+    eng = ServeEngine(model, params, max_seq=24, paged=nosh)
+    outs, _ = eng.serve([req], num_slots=2, chunk=4)
+    eng2 = ServeEngine(model, params, max_seq=24, paged=nosh)
+    state = eng2.init_decode_state(2)
+    pf = eng2.prefill_request(req.prompt, state=state)
+    state = eng2.insert(state, 0, pf, req.max_new_tokens)
+    for _ in range(req.max_new_tokens):
+        state = eng2.decode_chunk(state, 2)
+        if bool(np.asarray(state.done)[0]):
+            break
+    n = int(np.asarray(state.lengths)[0])
+    got = np.asarray(state.tokens)[0, :n]
+    state = eng2.release(state, 0)
+    assert eng2.pool.pages_in_use == 0
+    np.testing.assert_array_equal(got, outs[0].tokens)
