@@ -50,6 +50,18 @@ Two sweeps over briefly-trained smoke-scale models:
    served from a pool sized to the dense reservation of ``NUM_SLOTS``
    slots sustain >= 4x the concurrent slots.
 
+7. **SLO / open-loop sweep** (docs/DESIGN.md §14) — chunked-prefill
+   interleaving vs the monolithic prefill stall (per-chunk TPOT of
+   running slots while a 1024-token prompt prefills mid-stream), Poisson
+   open-loop arrivals with queueing delay reported separately from TTFT,
+   and a priority/cancellation/preemption run on a paged engine with
+   pool invariants asserted afterwards.
+
+8. **DP x TP replica sweep** (docs/DESIGN.md §14) — the same stream on a
+   TP-only (1, N) mesh vs (2, N/2) ``data,model`` split into two replicas
+   behind the load-aware router: tok/s, per-replica occupancy and
+   assignments, greedy token agreement (must be 1.0).
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -723,6 +735,256 @@ def _paged_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _slo_rows(max_new: int, reps: int, steps: int | None,
+              summary: dict) -> list[tuple]:
+    """SLO-aware serving under load (docs/DESIGN.md §14):
+
+    * ``serve/slo/prefill-stall`` vs ``serve/slo/prefill-chunked`` — the
+      tentpole measurement: per-chunk TPOT (decode-chunk wall / chunk
+      steps) of RUNNING slots while a 1024-token prompt prefills
+      mid-stream. Monolithic prefill dispatches the whole prompt between
+      two decode chunks and every running slot stalls behind it (a
+      multi-x spike in the max/p95 chunk TPOT vs the no-load baseline);
+      chunked prefill (Sarathi-style ``prefill_chunk`` slices interleaved
+      between decode chunks) keeps the p95 flat.
+    * ``serve/slo/poisson-qps`` — open-loop Poisson arrivals at a target
+      rate: queueing delay (submit -> admit) reported separately from
+      TTFT.
+    * ``serve/slo/priority-cancel`` — priority classes + timeout +
+      cancellation + preemption on a PAGED engine under backpressure:
+      priority-0 requests are admitted ahead of later-priority traffic,
+      cancelled/timed-out requests release their slots and pages
+      (``PoolSession.check_invariants`` asserted), preemptions requeue
+      leak-free.
+    """
+    import numpy as np
+
+    from repro.serving.pool import PagedConfig
+    from repro.serving.scheduler import Request, SLOConfig
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    rows = []
+
+    # -- chunked-prefill interleaving vs monolithic stall --------------------
+    LONG, PFCHUNK, SHORT_NEW, SCHUNK = 1024, 64, 96, 8
+    max_seq = LONG + 8
+    engine = ServeEngine(model, params, max_seq=max_seq)
+
+    def shorts():
+        return synthetic_stream(8, vocab_size=cfg.vocab_size,
+                                prompt_len=PROMPT_LEN,
+                                max_new_tokens=SHORT_NEW, seed=11)
+
+    def with_long(reqs):
+        rng = np.random.RandomState(13)
+        prompt = rng.randint(0, cfg.vocab_size,
+                             size=(LONG,)).astype(np.int32)
+        # priority 0: admitted into the first freed slot, so its prefill
+        # overlaps the remaining short requests' decode
+        reqs.append(Request(rid=len(reqs), prompt=prompt, max_new_tokens=4,
+                            arrival_step=4, priority=0))
+        return reqs
+
+    def chunk_tpots(requests, prefill_chunk):
+        sess_kw = dict(num_slots=NUM_SLOTS, chunk=SCHUNK,
+                       prefill_chunk=prefill_chunk)
+        engine.serve(requests[:2], **sess_kw)     # warm the serve path
+        best = None
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            _, stats = engine.serve(requests, **sess_kw)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[1]:
+                best = (stats, dt)
+        stats, dt = best
+        return stats, dt, (stats.decode_gap_p95_s / SCHUNK,
+                           stats.decode_gap_max_s / SCHUNK)
+
+    base_stats, base_dt, (base_p95, base_max) = chunk_tpots(shorts(), None)
+    m_stats, m_dt, (m_p95, m_max) = chunk_tpots(with_long(shorts()), None)
+    c_stats, c_dt, (c_p95, c_max) = chunk_tpots(with_long(shorts()),
+                                                PFCHUNK)
+    rows.append((
+        "serve/slo/no-load", base_p95 * 1e6,
+        f"chunk tpot p95 {base_p95*1e3:.2f}ms (no long prompt; the "
+        f"stall-row baseline)"))
+    rows.append((
+        "serve/slo/prefill-stall", m_p95 * 1e6,
+        f"monolithic {LONG}-token prefill mid-stream: chunk tpot p95 "
+        f"{m_p95*1e3:.2f}ms ({m_p95/base_p95:.2f}x no-load) max "
+        f"{m_max*1e3:.2f}ms ({m_max/base_max:.1f}x) — every running slot "
+        f"stalls behind the prefill"))
+    rows.append((
+        "serve/slo/prefill-chunked", c_p95 * 1e6,
+        f"prefill_chunk={PFCHUNK}: chunk tpot p95 {c_p95*1e3:.2f}ms "
+        f"({c_p95/base_p95:.2f}x no-load) max {c_max*1e3:.2f}ms "
+        f"({c_max/base_max:.1f}x) over {c_stats.prefill_chunks} "
+        f"interleaved prefill chunks"))
+    summary["slo"]["prefill_stall"] = {
+        "long_prompt": LONG, "prefill_chunk": PFCHUNK,
+        "chunk_tpot_p95_s": {"no_load": base_p95, "monolithic": m_p95,
+                             "chunked": c_p95},
+        "chunk_tpot_max_s": {"no_load": base_max, "monolithic": m_max,
+                             "chunked": c_max},
+        "monolithic_p95_vs_no_load": m_p95 / base_p95,
+        "chunked_p95_vs_no_load": c_p95 / base_p95,
+        "monolithic_max_vs_no_load": m_max / base_max,
+        "chunked_max_vs_no_load": c_max / base_max,
+    }
+
+    # -- open-loop Poisson sweep ---------------------------------------------
+    sweep_seq = PROMPT_LEN + int(max_new * 1.25) + 1
+    qengine = ServeEngine(model, params, max_seq=sweep_seq)
+    qengine.serve(synthetic_stream(
+        2, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new), num_slots=NUM_SLOTS, chunk=4)    # warm
+    summary["slo"]["poisson"] = {}
+    for rate in (0.25, 1.0):
+        reqs = synthetic_stream(
+            2 * NUM_REQUESTS, vocab_size=cfg.vocab_size,
+            prompt_len=PROMPT_LEN, max_new_tokens=max_new,
+            arrival_rate=rate, poisson=True, seed=5)
+        t0 = time.perf_counter()
+        _, stats = qengine.serve(reqs, num_slots=NUM_SLOTS, chunk=4)
+        dt = time.perf_counter() - t0
+        tps = stats.generated_tokens / dt
+        rows.append((
+            f"serve/slo/poisson-qps-{rate}",
+            stats.queue_delay_p95_s * 1e6,
+            f"{tps:.1f} tok/s at {rate} req/step open-loop: queue delay "
+            f"p50 {stats.queue_delay_p50_s*1e3:.0f}ms / "
+            f"p95 {stats.queue_delay_p95_s*1e3:.0f}ms "
+            f"(ttft p50 {stats.ttft_p50_s*1e3:.0f}ms, reported "
+            f"separately), occupancy {stats.occupancy:.2f}"))
+        summary["slo"]["poisson"][str(rate)] = {
+            "tok_s_stream": tps, "occupancy": stats.occupancy,
+            "queue_delay_p50_s": stats.queue_delay_p50_s,
+            "queue_delay_p95_s": stats.queue_delay_p95_s,
+            "ttft_p50_s": stats.ttft_p50_s, "ttft_p95_s": stats.ttft_p95_s,
+        }
+
+    # -- priorities, cancellation, preemption on a paged pool ----------------
+    reqs = synthetic_stream(
+        2 * NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=4 * max_new, arrival_rate=2.0, poisson=True, seed=5,
+        priorities=(1, 1, 1, 0))
+    pengine = ServeEngine(
+        model, params,
+        max_seq=max(len(r.prompt) + r.max_new_tokens for r in reqs),
+        paged=PagedConfig(page_size=8))
+    for r in reqs[::5]:
+        r.cancel_at_step = r.arrival_step + 6
+    for r in reqs[3::5]:
+        r.queue_timeout_steps = 4
+    t0 = time.perf_counter()
+    outs, stats = pengine.serve(reqs, num_slots=NUM_SLOTS, chunk=4,
+                                slo=SLOConfig(preempt=True))
+    dt = time.perf_counter() - t0
+    pengine.pool.check_invariants()    # cancellation frees pages leak-free
+    admitted = [o for o in outs if o.admitted_step >= 0]
+    arrival = {r.rid: r.arrival_step for r in reqs}
+    # priority ordering: a priority-0 request is never admitted after a
+    # lower-priority request that arrived no earlier than it did
+    ordered = all(
+        a.admitted_step <= b.admitted_step
+        for a in admitted if a.priority == 0
+        for b in admitted
+        if b.priority > 0 and arrival[b.rid] >= arrival[a.rid])
+    n_drop = sum(o.finish_reason in ("cancelled", "timeout") for o in outs)
+    rows.append((
+        "serve/slo/priority-cancel", dt / max(stats.generated_tokens, 1)
+        * 1e6,
+        f"{stats.generated_tokens/dt:.1f} tok/s with mixed priorities "
+        f"(25% priority-0): {stats.preemptions} preemptions, "
+        f"{stats.timeouts} timeouts, {stats.cancelled} cancelled "
+        f"({n_drop} dropped reqs), pool invariants OK after "
+        f"cancel/preempt, priority ordering "
+        f"{'OK' if ordered else 'VIOLATED'}"))
+    summary["slo"]["priority_cancel"] = {
+        "preemptions": stats.preemptions, "timeouts": stats.timeouts,
+        "cancelled": stats.cancelled,
+        "pool_invariants_ok": True, "priority_ordering_ok": bool(ordered),
+        "queue_delay_p95_s": stats.queue_delay_p95_s,
+    }
+    return rows
+
+
+def _dp_rows(max_new: int, reps: int, steps: int | None,
+             summary: dict) -> list[tuple]:
+    """DP x TP replica serving (docs/DESIGN.md §14): the same request
+    stream on one TP-only (1, N) engine vs a (2, N/2) ``data,model`` mesh
+    split into two TP replicas behind the load-aware router — greedy
+    token agreement must be 1.0, per-replica occupancy reported."""
+    n_dev = len(jax.devices())
+    if n_dev < 4 or n_dev % 2:
+        return [("serve/dp/skipped", 0.0,
+                 f"{n_dev} device(s) visible (set XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count=8 for DP rows)")]
+    from repro.launch.mesh import make_mesh, split_data_replicas
+    from repro.serving.replica import ReplicaServe
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    plan = plan_for_variant(model, params, FAMILY_VARIANT)
+    qparams = model.compile_plan(params, plan).params
+    requests = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    rows = []
+
+    def timed(fn):
+        fn()                                     # warm
+        best = None
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            out = fn()
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[1]:
+                best = (out, dt)
+        return best
+
+    tp = ServeEngine(model, qparams, max_seq=max_seq,
+                     mesh=make_mesh((1, n_dev), ("data", "model")))
+    (tp_out, tp_stats), tp_dt = timed(
+        lambda: tp.serve(requests, num_slots=NUM_SLOTS, chunk=CHUNK))
+    tp_tps = tp_stats.generated_tokens / tp_dt
+    rows.append((
+        f"serve/dp/1x{n_dev}/stream",
+        tp_dt / max(tp_stats.generated_tokens, 1) * 1e6,
+        f"{tp_tps:.1f} tok/s TP-only baseline, occupancy "
+        f"{tp_stats.occupancy:.2f}"))
+
+    shape = (2, n_dev // 2)
+    mesh = make_mesh(shape, ("data", "model"))
+    rep = ReplicaServe([ServeEngine(model, qparams, max_seq=max_seq,
+                                    mesh=m)
+                        for m in split_data_replicas(mesh)])
+    (dp_out, rstats), dp_dt = timed(
+        lambda: rep.serve(requests, num_slots=max(1, NUM_SLOTS // 2),
+                          chunk=CHUNK))
+    dp_stats = rstats.aggregate
+    dp_tps = dp_stats.generated_tokens / dp_dt
+    agree = float(len(dp_out) == len(tp_out) and all(
+        (a.tokens == b.tokens).all() for a, b in zip(tp_out, dp_out)))
+    occ = " ".join(f"r{i}:{o:.2f}"
+                   for i, o in enumerate(rstats.occupancy_per_replica))
+    rows.append((
+        f"serve/dp/{shape[0]}x{shape[1]}/stream",
+        dp_dt / max(dp_stats.generated_tokens, 1) * 1e6,
+        f"{dp_tps:.1f} tok/s on {rstats.replicas} replicas "
+        f"({dp_tps/tp_tps:.2f}x vs TP-only) assignments "
+        f"{rstats.assignments} per-replica occupancy [{occ}] "
+        f"greedy agree {agree:.2f}"))
+    assert agree == 1.0, "DP x TP serve diverged from TP-only engine"
+    summary["dp"] = {
+        "devices": n_dev, "shape": list(shape),
+        "tok_s_tp_only": tp_tps, "tok_s_dp": dp_tps,
+        "dp_vs_tp": dp_tps / tp_tps,
+        "assignments": rstats.assignments,
+        "occupancy_per_replica": rstats.occupancy_per_replica,
+        "greedy_agree": agree,
+    }
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     # best-of-3 even in smoke: the fused/tuned delta rows race paths that
@@ -730,7 +992,8 @@ def run(smoke: bool = False) -> list[tuple]:
     reps = 3
     steps = SMOKE_TRAIN_STEPS if smoke else None
     summary: dict = {"variants": {}, "families": {}, "mesh": {},
-                     "kv_cache": {}, "fused": {}, "spec": {}, "paged": {}}
+                     "kv_cache": {}, "fused": {}, "spec": {}, "paged": {},
+                     "slo": {}, "dp": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
@@ -741,6 +1004,8 @@ def run(smoke: bool = False) -> list[tuple]:
     rows += _fused_rows(max_new, reps, steps, summary)
     rows += _spec_rows(max_new, reps, steps, summary)
     rows += _paged_rows(max_new, reps, steps, summary)
+    rows += _slo_rows(max_new, reps, steps, summary)
+    rows += _dp_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

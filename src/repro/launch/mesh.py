@@ -54,3 +54,33 @@ def parse_mesh(axes: str, shape: str | None = None):
 
 def data_axis_names(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def split_data_replicas(mesh) -> list:
+    """One serving submesh per index along the data axes — the DP x TP
+    replica split (docs/DESIGN.md §14, serving/replica.py).
+
+    A ``(data=R, model=T)`` mesh becomes R submeshes of shape
+    ``(data=1, model=T)``: each keeps every axis NAME (so the TP-only
+    serving specs resolve unchanged — a size-1 data axis shards nothing)
+    but owns a disjoint 1/R slice of the devices. Weights placed per
+    submesh are therefore replicated across replicas and TP-sharded
+    within one. Meshes without a data axis (or with data=1) return
+    ``[mesh]`` — plain single-replica serving.
+    """
+    import itertools
+
+    import numpy as np
+
+    names = mesh.axis_names
+    axes = [names.index(a) for a in data_axis_names(mesh) if a in names]
+    sizes = [mesh.devices.shape[a] for a in axes]
+    if not axes or int(np.prod(sizes)) == 1:
+        return [mesh]
+    subs = []
+    for idx in itertools.product(*(range(s) for s in sizes)):
+        devs = mesh.devices
+        for a, i in zip(axes, idx):
+            devs = np.take(devs, [i], axis=a)
+        subs.append(jax.sharding.Mesh(devs, names))
+    return subs

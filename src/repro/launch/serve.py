@@ -127,6 +127,43 @@ def main():
     ap.add_argument("--mesh-shape", default=None,
                     help="comma-separated per-axis device counts (e.g. 1,8); "
                          "default puts every device on the last axis")
+    # chunked prefill + SLO scheduling + DP replicas (docs/DESIGN.md §14)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="interleave prompt prefill in N-token chunks "
+                         "between decode chunks (Sarathi-style) instead of "
+                         "one monolithic prefill per admission (0: off)")
+    ap.add_argument("--poisson", action="store_true",
+                    help="draw seeded exponential inter-arrival gaps with "
+                         "mean 1/--arrival-rate (open-loop load) instead "
+                         "of fixed spacing")
+    ap.add_argument("--priorities", default=None,
+                    help="comma-separated priority cycle over the stream "
+                         "(0 = most urgent), e.g. 0,1,1,1 for 25%% "
+                         "interactive traffic")
+    ap.add_argument("--ttft-target-ms", type=float, default=0.0,
+                    help="SLO: time-to-first-token target; queued requests "
+                         "past it bypass the admission gate (0: unset)")
+    ap.add_argument("--tpot-target-ms", type=float, default=0.0,
+                    help="SLO: per-output-token target; admissions are "
+                         "deferred while the rolling decode-chunk latency "
+                         "exceeds it (0: unset)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="allow a strictly-higher-priority waiter to evict "
+                         "the lowest-priority decoding slot (restart-style; "
+                         "pages release, the victim requeues)")
+    ap.add_argument("--queue-timeout-steps", type=int, default=0,
+                    help="drop requests still QUEUED after N decode steps "
+                         "(finish_reason='timeout'; 0: never)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="abort requests (queued or running) N decode steps "
+                         "after arrival (finish_reason='deadline'; 0: never)")
+    ap.add_argument("--dp", action="store_true",
+                    help="serve DP x TP: split the mesh's data axis into "
+                         "replicas, one engine each, and route the request "
+                         "stream load-aware across them")
+    ap.add_argument("--check-dp-parity", action="store_true",
+                    help="with --dp: also serve on the single full-mesh "
+                         "engine and assert token-identical greedy output")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -155,13 +192,40 @@ def main():
     elif args.check_paged_parity:
         raise SystemExit("--check-paged-parity requires --paged")
 
+    slo = None
+    if args.ttft_target_ms or args.tpot_target_ms or args.preempt:
+        from repro.serving.scheduler import SLOConfig
+        slo = SLOConfig(
+            ttft_target_s=(args.ttft_target_ms / 1e3
+                           if args.ttft_target_ms else None),
+            tpot_target_s=(args.tpot_target_ms / 1e3
+                           if args.tpot_target_ms else None),
+            preempt=args.preempt)
+    if args.poisson and not args.arrival_rate:
+        raise SystemExit("--poisson requires --arrival-rate > 0")
+    if args.dp and not args.num_requests:
+        raise SystemExit("--dp serves a request stream; set --num-requests")
+    if args.dp and not args.mesh:
+        raise SystemExit("--dp requires --mesh with a data axis >= 2 "
+                         "(e.g. --mesh data,model --mesh-shape 2,4)")
+    if args.check_dp_parity and not args.dp:
+        raise SystemExit("--check-dp-parity requires --dp")
+
     requests = None
     max_seq = args.prompt_len + args.max_new
     if args.num_requests > 0:
+        priorities = (tuple(int(p) for p in args.priorities.split(","))
+                      if args.priorities else None)
         requests = synthetic_stream(
             args.num_requests, vocab_size=cfg.vocab_size,
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
-            arrival_rate=args.arrival_rate)
+            arrival_rate=args.arrival_rate, poisson=args.poisson,
+            priorities=priorities)
+        for r in requests:
+            if args.queue_timeout_steps:
+                r.queue_timeout_steps = args.queue_timeout_steps
+            if args.deadline_steps:
+                r.deadline_steps = args.deadline_steps
         if args.shared_prefix_len > 0:
             if args.shared_prefix_len >= args.prompt_len:
                 raise SystemExit("--shared-prefix-len must be shorter than "
@@ -187,9 +251,13 @@ def main():
         # an explicit value (including bf16) overrides it
         kv_kw = ({} if args.kv_precision is None
                  else {"kv_precision": args.kv_precision})
-        engine = ServeEngine.from_artifact(model, args.plan_artifact,
-                                           max_seq=max_seq, mesh=mesh,
-                                           spec=spec, paged=paged, **kv_kw)
+
+        def make_engine(m):
+            return ServeEngine.from_artifact(model, args.plan_artifact,
+                                             max_seq=max_seq, mesh=m,
+                                             spec=spec, paged=paged, **kv_kw)
+
+        engine = make_engine(mesh)
         plan = engine.plan
         print(f"booted from artifact {args.plan_artifact} in "
               f"{time.perf_counter() - t0:.2f}s"
@@ -208,11 +276,16 @@ def main():
         if plan is not None:
             compiled = model.compile_plan(params, plan,
                                           kv_precision=kv_precision)
-            engine = ServeEngine(model, compiled.params, max_seq=max_seq,
-                                 mesh=mesh,
-                                 kv_precision=compiled.kv_plan or "bf16",
-                                 spec=spec, paged=paged)
-            engine.plan = plan
+
+            def make_engine(m):
+                e = ServeEngine(model, compiled.params, max_seq=max_seq,
+                                mesh=m,
+                                kv_precision=compiled.kv_plan or "bf16",
+                                spec=spec, paged=paged)
+                e.plan = plan
+                return e
+
+            engine = make_engine(mesh)
             if args.plan_artifact:
                 from repro.quant.compiler import save_artifact
                 if spec is not None and spec.draft_source == "model":
@@ -222,9 +295,12 @@ def main():
                 path = save_artifact(args.plan_artifact, compiled, mesh=mesh)
                 print(f"saved compiled plan artifact to {path}")
         else:
-            engine = ServeEngine(model, params, max_seq=max_seq, mesh=mesh,
-                                 kv_precision=kv_precision, spec=spec,
-                                 paged=paged)
+            def make_engine(m):
+                return ServeEngine(model, params, max_seq=max_seq, mesh=m,
+                                   kv_precision=kv_precision, spec=spec,
+                                   paged=paged)
+
+            engine = make_engine(mesh)
 
     raw_bits = 32.0 if cfg.dtype == "float32" else 16.0
     raw_bytes = cfg.param_count() * raw_bits / 8.0
@@ -255,9 +331,23 @@ def main():
                   f"re-quantized)")
 
     if requests is not None:
+        serve_kw = dict(num_slots=args.num_slots, chunk=args.chunk,
+                        prefill_chunk=args.prefill_chunk or None, slo=slo)
+        rstats = None
         t0 = time.perf_counter()
-        outputs, stats = engine.serve(requests, num_slots=args.num_slots,
-                                      chunk=args.chunk)
+        if args.dp:
+            from repro.launch.mesh import split_data_replicas
+            from repro.serving.replica import ReplicaServe
+            subs = split_data_replicas(mesh)
+            if len(subs) < 2:
+                raise SystemExit(f"--dp found {len(subs)} replica(s) in "
+                                 f"mesh {dict(mesh.shape)}; need a data "
+                                 "axis of size >= 2")
+            replica = ReplicaServe([make_engine(m) for m in subs])
+            outputs, rstats = replica.serve(requests, **serve_kw)
+            stats = rstats.aggregate
+        else:
+            outputs, stats = engine.serve(requests, **serve_kw)
         dt = time.perf_counter() - t0
         print(f"served {len(outputs)} requests in {dt:.1f}s "
               f"({stats.generated_tokens/dt:.1f} tok/s): "
@@ -267,6 +357,35 @@ def main():
               f"ttft p50 {stats.ttft_p50_s*1e3:.0f}ms / "
               f"p95 {stats.ttft_p95_s*1e3:.0f}ms, "
               f"tpot p50 {stats.tpot_p50_s*1e3:.1f}ms")
+        if args.arrival_rate or slo is not None:
+            print(f"queueing: delay p50 {stats.queue_delay_p50_s*1e3:.0f}ms "
+                  f"/ p95 {stats.queue_delay_p95_s*1e3:.0f}ms, "
+                  f"{stats.preemptions} preemptions, "
+                  f"{stats.timeouts} timeouts, {stats.cancelled} cancelled, "
+                  f"decode gap p95 {stats.decode_gap_p95_s*1e3:.1f}ms / "
+                  f"max {stats.decode_gap_max_s*1e3:.1f}ms")
+        if args.prefill_chunk:
+            print(f"chunked prefill: {stats.prefill_chunks} interleaved "
+                  f"chunks of {args.prefill_chunk} tokens")
+        if rstats is not None:
+            occ = ", ".join(f"r{i}: {n} reqs, occ {o:.1%}"
+                            for i, (n, o) in enumerate(
+                                zip(rstats.assignments,
+                                    rstats.occupancy_per_replica)))
+            print(f"dp replicas: {rstats.replicas} x "
+                  f"{dict(replica.engines[0].mesh.shape)} ({occ})")
+        if args.check_dp_parity:
+            import numpy as np
+            ref_out, _ = engine.serve(requests, **serve_kw)
+            agree = (len(ref_out) == len(outputs)
+                     and all(a.rid == b.rid
+                             and np.array_equal(a.tokens, b.tokens)
+                             for a, b in zip(ref_out, outputs)))
+            print(f"greedy-agree vs single full-mesh engine: "
+                  f"{float(agree):.1f}")
+            if not agree:
+                raise SystemExit("DP x TP greedy output DIVERGED from the "
+                                 "single full-mesh engine")
         if spec is not None:
             print(f"spec: acceptance {stats.acceptance_rate:.1%} "
                   f"({stats.draft_accepted}/{stats.draft_proposed}), "

@@ -1,0 +1,76 @@
+#!/usr/bin/env bash
+# Perf-environment launcher for the serving CLI (docs/DESIGN.md §14).
+#
+# Benchmarks should reflect a tuned runtime, not the interpreter's
+# defaults: this wrapper pins threads, preloads tcmalloc when available,
+# sets the XLA flags that matter for serving latency, and then exec's
+# `python -m repro.launch.serve` with every argument passed through.
+#
+#   ./serve_env.sh --arch llama3.2-3b --smoke --num-requests 32 \
+#       --arrival-rate 0.5 --poisson --prefill-chunk 64
+#
+# Environment knobs (all overridable by exporting before the call):
+#   REPRO_HOST_DEVICES   virtual CPU device count (DP/TP smoke on one
+#                        host; maps to --xla_force_host_platform_device_count)
+#   REPRO_THREADS        intra-op thread count (default: physical cores)
+#   REPRO_XLA_FLAGS      extra XLA flags appended after the defaults
+#   REPRO_PYTHON         interpreter (default: python3)
+set -euo pipefail
+
+PYTHON="${REPRO_PYTHON:-python3}"
+
+# -- thread pinning ----------------------------------------------------------
+# One intra-op pool sized to the physical cores (hyperthread siblings only
+# add scheduler jitter to latency percentiles), and no nested BLAS pools
+# fighting XLA for the same cores.
+if [[ -z "${REPRO_THREADS:-}" ]]; then
+  if command -v lscpu >/dev/null 2>&1; then
+    REPRO_THREADS=$(lscpu -p=Core,Socket 2>/dev/null | grep -v '^#' \
+                    | sort -u | wc -l)
+  else
+    REPRO_THREADS=$(getconf _NPROCESSORS_ONLN 2>/dev/null || echo 1)
+  fi
+fi
+export OMP_NUM_THREADS="${REPRO_THREADS}"
+export OPENBLAS_NUM_THREADS=1
+export MKL_NUM_THREADS=1
+export VECLIB_MAXIMUM_THREADS=1
+
+# -- allocator ---------------------------------------------------------------
+# tcmalloc beats glibc malloc on the host-side page-table/bookkeeping churn
+# of continuous batching; preload it when the box has it, skip silently
+# otherwise (no hard dependency).
+if [[ -z "${REPRO_NO_TCMALLOC:-}" ]]; then
+  for so in libtcmalloc_minimal.so.4 libtcmalloc.so.4 libtcmalloc.so; do
+    found=$(ldconfig -p 2>/dev/null | awk -v so="$so" \
+            '$1 == so {print $NF; exit}') || true
+    if [[ -n "${found:-}" ]]; then
+      export LD_PRELOAD="${found}${LD_PRELOAD:+:$LD_PRELOAD}"
+      break
+    fi
+  done
+fi
+
+# -- XLA flags ---------------------------------------------------------------
+# Defaults tuned for serving: multi-threaded Eigen backed by the pinned
+# pool, and (optionally) N virtual host devices so DP x TP mesh shapes
+# run on a single machine exactly like CI does.
+XLA="--xla_cpu_multi_thread_eigen=true"
+XLA+=" --xla_force_host_platform_device_count=${REPRO_HOST_DEVICES:-1}"
+export XLA_FLAGS="${XLA}${REPRO_XLA_FLAGS:+ $REPRO_XLA_FLAGS}${XLA_FLAGS:+ $XLA_FLAGS}"
+
+# Async dispatch keeps the decode stream full; donation reuses cache
+# buffers across chunks. Both are defaults today — pinned here so an
+# environment override can't silently de-tune a benchmark run.
+export JAX_ENABLE_X64=0
+
+# -- launch ------------------------------------------------------------------
+# PYTHONPATH: resolve src/ relative to this script so the wrapper works
+# from any cwd (src/repro/launch/serve_env.sh -> src).
+SRC_DIR=$(cd -- "$(dirname -- "${BASH_SOURCE[0]}")/../.." && pwd)
+export PYTHONPATH="${SRC_DIR}${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "serve_env: threads=${OMP_NUM_THREADS}" \
+     "host_devices=${REPRO_HOST_DEVICES:-1}" \
+     "tcmalloc=${LD_PRELOAD:-off}" >&2
+exec "${PYTHON}" -m repro.launch.serve "$@"

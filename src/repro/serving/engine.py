@@ -58,7 +58,6 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import jax
@@ -72,7 +71,8 @@ from repro.serving import sampling as S
 from repro.serving.pool import (OutOfPages, PagedConfig, PoolSession,
                                 PrefixMatch)
 from repro.serving.quantized import apply_plan_to_params
-from repro.serving.scheduler import Request, RequestOutput, Scheduler
+from repro.serving.scheduler import (Request, RequestOutput, Scheduler,
+                                     SLOConfig)
 from repro.serving.spec import SpecConfig
 
 DEFAULT_CHUNK = 8
@@ -97,6 +97,29 @@ class Prefill:
 
 
 @dataclasses.dataclass
+class ChunkedPrefill:
+    """An in-flight chunked prefill (docs/DESIGN.md §14): the request holds
+    a reserved slot while its prompt enters the batch=1 prefill cache one
+    ``prefill_chunk``-token slice per serve tick, interleaved between
+    decode chunks so a long prompt never monopolizes the device. Becomes a
+    plain ``Prefill`` (and is inserted) once ``pos`` covers the prompt."""
+    prompt: np.ndarray           # (P,) int32 host tokens
+    cache: object                # batch=1 family cache, filled to ``pos``
+    last_logits: Optional[jax.Array]  # (1, V_pad) after the last chunk
+    pos: int                     # prompt tokens already in the cache
+    match: Optional[PrefixMatch] = None  # pinned prefix-cache match (paged)
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.prompt)
+
+    def as_prefill(self) -> "Prefill":
+        assert self.done and self.last_logits is not None
+        return Prefill(prompt=self.prompt, cache=self.cache,
+                       last_logits=self.last_logits, match=self.match)
+
+
+@dataclasses.dataclass
 class ServeStats:
     """Continuous-batching run statistics (benchmarks/serve_throughput.py)."""
     decode_steps: int          # jitted decode steps executed (chunks * chunk)
@@ -110,6 +133,18 @@ class ServeStats:
     ttft_p95_s: float = 0.0    #   that contains a generated token
     tpot_p50_s: float = 0.0    # per-output-token latency after the first
     tpot_p95_s: float = 0.0
+    # open-loop queueing + SLO scheduling (docs/DESIGN.md §14)
+    queue_delay_p50_s: float = 0.0  # ready -> dequeue wait, SEPARATE from
+    queue_delay_p95_s: float = 0.0  #   ttft (which starts at dequeue)
+    preemptions: int = 0       # restart-style evictions for higher priority
+    timeouts: int = 0          # requests dropped by queue timeout
+    cancelled: int = 0         # requests cancelled (queued or running)
+    prefill_chunks: int = 0    # chunked-prefill advances interleaved
+    # per-decode-chunk wall-clock gaps while slots were running: monolithic
+    # prefill of a long prompt shows up as a multi-x spike in gap_max
+    decode_gap_p50_s: float = 0.0
+    decode_gap_p95_s: float = 0.0
+    decode_gap_max_s: float = 0.0
     # speculative decoding (spec=SpecConfig(...) engines only)
     spec_rounds: int = 0       # draft-propose/verify rounds executed
     draft_proposed: int = 0    # draft tokens proposed to live slots
@@ -138,7 +173,8 @@ class ServeEngine:
                  kv_group: Optional[int] = None,
                  spec: Optional[SpecConfig] = None,
                  autotune: bool = True,
-                 paged=None):
+                 paged=None,
+                 prefill_chunk: Optional[int] = None):
         self.model = model
         self.cfg = model.cfg
         self.max_seq = max_seq
@@ -147,6 +183,13 @@ class ServeEngine:
         self.pad_id = pad_id
         self.mesh = mesh
         self.spec = spec
+        # chunked prefill interleaving (docs/DESIGN.md §14): serve() splits
+        # prompts into prefill_chunk-token slices scheduled between decode
+        # chunks. None/0 keeps the monolithic whole-prompt prefill.
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1 or None, got "
+                             f"{prefill_chunk}")
+        self.prefill_chunk = prefill_chunk
         # paged KV pool (docs/DESIGN.md §13): True -> defaults, or a
         # PagedConfig. Only plain K/V participates — enc-dec cross K/V is
         # per-request (frames-dependent, nothing to share) and stays in the
@@ -190,6 +233,9 @@ class ServeEngine:
         self._release = self._traced(jax.jit(self._release_impl))
         self._kv_wrap = self._traced(jax.jit(self._wrap_cache))
         self._chunk_fns: dict = {}
+        self._pchunk_fn = None     # chunked-prefill advance (built lazily)
+        self._gather_fn = None     # pool-rows -> dense cache seed (paged)
+        self._encdec_seed_fn = None
 
     # -- quantized KV cache (docs/DESIGN.md §10) -----------------------------
     def _resolve_kv_plan(self, kv_precision, kv_group):
@@ -474,6 +520,130 @@ class ServeEngine:
         cache1, logits1 = self.prefill(jnp.asarray(prompt)[None], frames_b)
         return Prefill(prompt=prompt, cache=cache1, last_logits=logits1,
                        match=match)
+
+    # -- chunked prefill interleaving (docs/DESIGN.md §14) -------------------
+    def _prefill_chunk_fn(self):
+        """Jitted one-chunk prefill advance: extend a batch=1 cache by the
+        chunk's tokens. Transformer/enc-dec families score the whole chunk
+        in ONE multi-query decode_step (the same per-query causal-offset
+        masking the spec verify window uses), so a c-token chunk costs one
+        kernel launch, not c; SSM/hybrid scan single-token steps — bit-
+        identical to their monolithic scan prefill (their recurrent state
+        has no fused multi-token form). jit recompiles per distinct chunk
+        length, which is bounded: prefill_chunk plus per-prompt remainders.
+        """
+        if self._pchunk_fn is None:
+            model = self.model
+            if self.cfg.family in ("dense", "moe", "encdec"):
+                def run(params, cache, toks):
+                    logits, cache = model.decode_step(params, cache, toks)
+                    return cache, logits[:, -1]
+            else:
+                def run(params, cache, toks):
+                    def body(c, tok):
+                        logits, c = model.decode_step(params, c, tok[:, None])
+                        return c, logits[:, 0]
+                    cache, logits = jax.lax.scan(body, cache, toks.T)
+                    return cache, logits[-1]
+            self._pchunk_fn = self._traced(jax.jit(run))
+        return self._pchunk_fn
+
+    def _pool_gather_fn(self):
+        """Jitted prefix-hit seed: gather the matched shared rows from the
+        pool into a dense bf16 batch=1 cache positioned at ``hit`` — the
+        chunked twin of ``_seed_fn``, minus the suffix scan (the chunk loop
+        covers the suffix)."""
+        if self._gather_fn is None:
+            model, max_seq = self.model, self.max_seq
+            fields = self._paged_fields
+
+            def run(pools, row, hit):
+                from repro.quant import paged as PG
+                from repro.quant.kvcache import dequantize_kv
+                cache = model.init_cache(1, max_seq)
+                reps = {}
+                for name in fields:
+                    field = pools[name]
+                    parts = [dequantize_kv(PG.gather_rows(pg, row),
+                                           getattr(cache, name).dtype)
+                             for pg in (field if isinstance(field, tuple)
+                                        else (field,))]
+                    full = (jnp.concatenate(parts, 0) if len(parts) > 1
+                            else parts[0])
+                    reps[name] = full[:, :, :max_seq]
+                return cache._replace(pos=jnp.asarray(hit, jnp.int32),
+                                      **reps)
+
+            self._gather_fn = self._traced(jax.jit(run))
+        return self._gather_fn
+
+    def _encdec_seed(self, frames_b: jax.Array):
+        """Jitted enc-dec seed for a chunked prefill: encode the frames and
+        precompute the per-decoder-layer cross K/V once; the decoder-side
+        prompt then enters chunk by chunk."""
+        if self._encdec_seed_fn is None:
+            model, max_seq = self.model, self.max_seq
+
+            def run(params, frames):
+                from repro.models import encdec
+                cache = model.init_cache(1, max_seq)
+                enc_out = encdec.encode(params, frames, self.cfg,
+                                        remat=False)
+                ck, cv = encdec.precompute_cross_kv(params, enc_out,
+                                                    self.cfg)
+                return cache._replace(cross_k=ck, cross_v=cv)
+
+            self._encdec_seed_fn = self._traced(jax.jit(run))
+        return self._encdec_seed_fn(self.params, frames_b)
+
+    def begin_prefill(self, prompt, frames=None, state=None
+                      ) -> ChunkedPrefill:
+        """Start a chunked prefill (disaggregated API): returns the
+        ChunkedPrefill task to be advanced with ``advance_prefill`` between
+        decode chunks. Prefix-cache hits (paged dense/MoE, like
+        ``prefill_request``) seed the cache from the pool's shared rows and
+        only the suffix runs through the model — the match's pages stay
+        PINNED for the task's lifetime (``insert`` transfers the pins;
+        abandon via ``pool.unpin`` on cancellation)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        match = None
+        if self.pool is not None and self.pool.prefix is not None:
+            match = self.pool.match(prompt)
+            if (match.hit > 0 and frames is None and state is not None
+                    and self.cfg.family in ("dense", "moe")):
+                row = np.zeros(self.pool.n_log, np.int32)
+                row[:len(match.full_ids)] = match.full_ids
+                if match.donor is not None:
+                    row[len(match.full_ids)] = match.donor
+                pools = {name: getattr(state.cache, name)
+                         for name in self._paged_fields}
+                cache = self._pool_gather_fn()(pools, jnp.asarray(row),
+                                               jnp.int32(match.hit))
+                return ChunkedPrefill(prompt=prompt, cache=cache,
+                                      last_logits=None, pos=match.hit,
+                                      match=match)
+        if self.cfg.family == "encdec":
+            frames_b = (jnp.asarray(frames)[None] if frames is not None
+                        else self._default_frames(1))
+            assert frames_b.shape[1] == self.cfg.encoder_seq
+            cache = self._encdec_seed(frames_b)
+        else:
+            assert frames is None, "frames only apply to enc-dec models"
+            cache = self.model.init_cache(1, self.max_seq)
+        return ChunkedPrefill(prompt=prompt, cache=cache, last_logits=None,
+                              pos=0, match=match)
+
+    def advance_prefill(self, cp: ChunkedPrefill,
+                        budget: int) -> ChunkedPrefill:
+        """Run ONE prefill chunk of up to ``budget`` prompt tokens (called
+        between decode chunks). Mutates and returns ``cp``."""
+        assert not cp.done
+        c = min(int(budget), len(cp.prompt) - cp.pos)
+        toks = jnp.asarray(cp.prompt[cp.pos:cp.pos + c], jnp.int32)[None]
+        cache, last = self._prefill_chunk_fn()(self.params, cp.cache, toks)
+        cp.cache, cp.last_logits = cache, last
+        cp.pos += c
+        return cp
 
     def insert(self, state: B.DecodeState, slot: int, pf: Prefill,
                max_new: int, *, temperature: float = 0.0, top_k: int = 0,
@@ -816,13 +986,25 @@ class ServeEngine:
     # -- continuous batching ---------------------------------------------------
     def serve(self, requests: Sequence[Request], *, num_slots: int = 8,
               chunk: int = DEFAULT_CHUNK, temperature: float = 0.0,
-              key: Optional[jax.Array] = None
+              key: Optional[jax.Array] = None,
+              prefill_chunk: Optional[int] = None,
+              slo: Optional["SLOConfig"] = None
               ) -> tuple[list[RequestOutput], ServeStats]:
         """Drain a request stream with continuous batching.
 
         Between decode chunks, finished slots are harvested and queued
-        requests (arrival_step <= clock) are admitted into freed slots.
-        Returns outputs ordered by request id plus occupancy statistics.
+        requests (arrival_step <= clock) are admitted into freed slots —
+        highest priority first, FIFO within a class. Returns outputs
+        ordered by request id plus occupancy/latency statistics.
+
+        ``prefill_chunk`` (or the engine-level knob) turns on chunked
+        prefill interleaving: prompts enter the cache in prefill_chunk-
+        token slices scheduled between decode chunks, so a long prompt
+        never stalls the running slots for its whole prefill (greedy
+        output is token-identical to monolithic prefill). ``slo`` adds
+        TPOT-gated admission and priority preemption (docs/DESIGN.md §14);
+        request-level deadlines / timeouts / cancellation are honored
+        either way.
 
         Per-request sampling controls (``Request.temperature/top_k/top_p``)
         override the call-level ``temperature`` default; they are traced,
@@ -831,136 +1013,10 @@ class ServeEngine:
         draft-propose/verify ROUNDS (1..k+1 tokens committed per live
         round) and the stats report acceptance counters.
         """
-        if chunk < 1:
-            raise ValueError(f"chunk must be >= 1, got {chunk}")
-        if num_slots < 1:
-            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
-        spec = self.spec is not None
-        sched = Scheduler(num_slots)
-        for r in requests:
-            if spec:
-                self._spec_budget_check(len(r.prompt), r.max_new_tokens)
-            else:
-                assert len(r.prompt) + r.max_new_tokens <= self.max_seq, r.rid
-            sched.submit(r)
-        state = self.init_decode_state(
-            num_slots, key if key is not None else jax.random.PRNGKey(0))
-        if spec:
-            fn = self._spec_fn(chunk)
-            draft_params = self.draft_params
-        else:
-            fn = self._chunk_fn(chunk)
-        clock = 0
-        occupancy: list[float] = []
-        admissions = 0
-        generated = 0
-        spec_m = {"proposed": 0, "accepted": 0, "committed": 0, "rounds": 0}
-        while not sched.all_done():
-            stalled = False
-            for slot in sched.free_slots():
-                req = sched.next_ready(clock)
-                if req is None:
-                    break
-                if self.pool is not None and not self.pool.can_admit(
-                        self.pool.pages_for(self._slot_seq_budget(
-                            len(req.prompt), req.max_new_tokens))):
-                    # pool backpressure: not enough free/evictable pages
-                    # for the worst case — retry after a slot drains
-                    sched.requeue(req)
-                    stalled = True
-                    break
-                # the TTFT clock starts at dequeue so prefill time (and the
-                # prefix cache skipping it) shows up in ttft_s
-                wall = time.perf_counter()
-                # admission is baseline-identical even under spec: the spec
-                # loop recognizes pos == lengths as a fresh slot and takes
-                # the first candidate dist from these prefill logits
-                pf = self.prefill_request(req.prompt, frames=req.frames,
-                                          state=state)
-                temp = (req.temperature if req.temperature is not None
-                        else temperature)
-                state = self.insert(state, slot, pf, req.max_new_tokens,
-                                    temperature=temp, top_k=req.top_k,
-                                    top_p=req.top_p)
-                # a refill = joining a batch that is already mid-decode
-                if occupancy and sched.num_active > 0:
-                    admissions += 1
-                sched.assign(slot, req, clock, wall=wall)
-            if sched.num_active == 0:
-                if stalled:
-                    raise OutOfPages(
-                        "admission deadlock: no active slots and the pool "
-                        "cannot supply the next request's pages "
-                        f"({self.pool.num_pages} pages of "
-                        f"{self.pool.page_size} tokens) — size pool_pages "
-                        "for the longest request")
-                nxt = sched.next_arrival()
-                if nxt is None:
-                    break
-                clock = max(clock + 1, nxt)   # idle: fast-forward the clock
-                continue
-            occupancy.append(sched.num_active / num_slots)
-            if spec:
-                state, m = fn(self.params, draft_params, state)
-                for k_, v in m._asdict().items():
-                    spec_m[k_] += int(v)
-            else:
-                state = fn(self.params, state)
-            clock += chunk
-            done_np, len_np = jax.device_get((state.done, state.lengths))
-            now = time.perf_counter()
-            for slot, req in sched.active_slots():
-                if len_np[slot] > len(req.prompt):
-                    sched.mark_first_token(slot, now)
-                if not done_np[slot]:
-                    continue
-                n = int(len_np[slot])
-                row = np.asarray(jax.device_get(state.tokens[slot, :n]))
-                lps = np.asarray(jax.device_get(
-                    state.logprobs[slot, len(req.prompt):n]))
-                reason = ("eos" if self.eos_id is not None and n > 0
-                          and row[-1] == self.eos_id else "length")
-                sched.complete(slot, row, lps, reason, clock)
-                state = self.release(state, slot)
-                generated += n - len(req.prompt)
-        outputs = sorted(sched.finished, key=lambda o: o.rid)
-
-        def pct(vals, q):
-            return float(np.percentile(vals, q)) if vals else 0.0
-
-        ttfts = [o.ttft_s for o in outputs if o.ttft_s is not None]
-        tpots = [o.tpot_s for o in outputs if o.tpot_s is not None]
-        pool_kw = {}
-        if self.pool is not None:
-            pool = self.pool
-            pool_kw = dict(
-                pool_pages_total=pool.num_pages,
-                pool_pages_peak=pool.peak_pages,
-                pool_page_size=pool.page_size,
-                prefix_hits=pool.prefix_hits,
-                prefix_hit_tokens=pool.prefix_hit_tokens,
-                prefix_hit_rate=(pool.prefix_hit_tokens / pool.prompt_tokens
-                                 if pool.prompt_tokens else 0.0),
-                cow_copies=pool.cow_copies,
-                kv_bytes_peak=(pool.peak_pages * self._page_bytes
-                               + num_slots
-                               * self._nonpaged_bytes_per_slot()))
-        stats = ServeStats(
-            decode_steps=len(occupancy) * chunk,
-            generated_tokens=generated,
-            occupancy=float(np.mean(occupancy)) if occupancy else 0.0,
-            num_chunks=len(occupancy), admissions=admissions,
-            ttft_p50_s=pct(ttfts, 50), ttft_p95_s=pct(ttfts, 95),
-            tpot_p50_s=pct(tpots, 50), tpot_p95_s=pct(tpots, 95),
-            spec_rounds=spec_m["rounds"],
-            draft_proposed=spec_m["proposed"],
-            draft_accepted=spec_m["accepted"],
-            acceptance_rate=(spec_m["accepted"] / spec_m["proposed"]
-                             if spec_m["proposed"] else 0.0),
-            tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
-                              if spec_m["rounds"] else 0.0),
-            tuned=self.tuned, **pool_kw)
-        return outputs, stats
+        from repro.serving.session import ServeSession
+        return ServeSession(self, requests, num_slots=num_slots,
+                            chunk=chunk, temperature=temperature, key=key,
+                            prefill_chunk=prefill_chunk, slo=slo).run()
 
     # -- diagnostics -----------------------------------------------------------
     def kv_bytes_per_slot(self) -> float:

@@ -1,0 +1,367 @@
+"""Serve-loop state machine: continuous batching with chunked prefill
+interleaving and SLO-aware scheduling (docs/DESIGN.md §14).
+
+``ServeSession`` owns everything one ``ServeEngine.serve`` run carries
+between decode chunks — the scheduler, the slotted DecodeState, in-flight
+chunked prefills, the decode-step clock and the latency accounting. One
+serve *tick* is split into two phases:
+
+* ``dispatch()``: host-side policy + device-side launches, NO blocking
+  reads — expire/cancel/deadline sweeps, SLO preemption, admissions
+  (monolithic prefill+insert, or reserve + chunked-prefill start),
+  advancing one interleaved prefill chunk, then launching the next jitted
+  decode chunk (JAX dispatch is async, so the chunk runs while the host
+  moves on);
+* ``harvest()``: the only device_get — read done/lengths from the chunk
+  ``dispatch`` launched, mark first tokens, complete finished slots.
+
+The split exists for DP replica serving (serving/replica.py): a router
+dispatches EVERY replica's chunk before harvesting ANY of them, so the
+replicas' device work overlaps instead of serializing behind each
+other's blocking reads. Single-engine ``serve()`` just calls both phases
+back to back — byte-identical behavior to the old inline loop.
+
+Chunked prefill (Sarathi/SplitFuse-style): with ``prefill_chunk`` set,
+an admitted request first RESERVES its slot and its prompt enters the
+batch=1 prefill cache one chunk per tick, interleaved between decode
+chunks, so a 2048-token prompt no longer stalls 15 running slots for its
+whole prefill. The decode-step clock does NOT advance on prefill-only
+ticks, keeping arrival_step semantics identical to monolithic serving.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.serving.pool import OutOfPages
+from repro.serving.scheduler import Request, Scheduler, SLOConfig
+
+
+class ServeSession:
+    """One continuous-batching run over a fixed request list."""
+
+    def __init__(self, engine, requests, *, num_slots: int, chunk: int,
+                 temperature: float = 0.0, key=None,
+                 prefill_chunk: Optional[int] = None,
+                 slo: Optional[SLOConfig] = None):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if prefill_chunk is None:
+            prefill_chunk = engine.prefill_chunk
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1 or None, got "
+                             f"{prefill_chunk}")
+        self.engine = engine
+        self.chunk = chunk
+        self.num_slots = num_slots
+        self.temperature = temperature
+        self.prefill_chunk = prefill_chunk
+        self.slo = slo
+        self.spec = engine.spec is not None
+        self.sched = Scheduler(num_slots)
+        for r in requests:
+            if self.spec:
+                engine._spec_budget_check(len(r.prompt), r.max_new_tokens)
+            else:
+                assert len(r.prompt) + r.max_new_tokens <= engine.max_seq, \
+                    r.rid
+            self.sched.submit(r)
+        self.state = engine.init_decode_state(
+            num_slots, key if key is not None else jax.random.PRNGKey(0))
+        if self.spec:
+            self.fn = engine._spec_fn(chunk)
+            self.draft_params = engine.draft_params
+        else:
+            self.fn = engine._chunk_fn(chunk)
+        self.clock = 0
+        self.occupancy: list[float] = []
+        self.admissions = 0
+        self.generated = 0
+        self.prefill_chunks = 0
+        self.spec_m = {"proposed": 0, "accepted": 0, "committed": 0,
+                       "rounds": 0}
+        self.tasks: dict = {}          # slot -> ChunkedPrefill (reserved)
+        self.gaps: list[float] = []    # wall seconds per decode chunk
+        self._chunk_t0: Optional[float] = None
+        self._pending_spec = None
+        self._dispatched = False
+
+    # -- progress ------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self.sched.all_done()
+
+    # -- tick phase 1: policy + launches --------------------------------------
+    def dispatch(self) -> None:
+        """Admissions, SLO enforcement, one interleaved prefill chunk, and
+        the next decode-chunk launch. Never blocks on device results."""
+        eng, sched = self.engine, self.sched
+        self._dispatched = False
+        now = time.perf_counter()
+        sched.poll(self.clock, now)
+        sched.expire(self.clock)
+        self._enforce_running_drops()
+        self._preempt_for_priority()
+        stalled = self._admit(now)
+        self._advance_prefills()
+        if sched.num_active == 0:
+            if self.tasks:
+                return                 # prefill-only tick; clock frozen
+            if stalled:
+                raise OutOfPages(
+                    "admission deadlock: no active slots and the pool "
+                    "cannot supply the next request's pages "
+                    f"({eng.pool.num_pages} pages of "
+                    f"{eng.pool.page_size} tokens) — size pool_pages "
+                    "for the longest request")
+            nxt = sched.next_arrival()
+            if nxt is not None:
+                self.clock = max(self.clock + 1, nxt)  # idle: fast-forward
+            return
+        self.occupancy.append(sched.num_active / self.num_slots)
+        self._chunk_t0 = time.perf_counter()
+        if self.spec:
+            self.state, self._pending_spec = self.fn(
+                eng.params, self.draft_params, self.state)
+        else:
+            self.state = self.fn(eng.params, self.state)
+        self.clock += self.chunk
+        self._dispatched = True
+
+    # -- tick phase 2: the only blocking read ----------------------------------
+    def harvest(self) -> None:
+        """Read back the chunk ``dispatch`` launched and complete slots."""
+        if not self._dispatched:
+            return
+        self._dispatched = False
+        eng, sched = self.engine, self.sched
+        if self._pending_spec is not None:
+            for k_, v in self._pending_spec._asdict().items():
+                self.spec_m[k_] += int(v)
+            self._pending_spec = None
+        done_np, len_np = jax.device_get((self.state.done,
+                                          self.state.lengths))
+        now = time.perf_counter()
+        if self._chunk_t0 is not None:
+            self.gaps.append(now - self._chunk_t0)
+        for slot, req in sched.active_slots():
+            if len_np[slot] > len(req.prompt):
+                sched.mark_first_token(slot, now)
+            if not done_np[slot]:
+                continue
+            self._complete_slot(slot, req, int(len_np[slot]))
+
+    def _complete_slot(self, slot: int, req: Request, n: int,
+                       reason: Optional[str] = None) -> None:
+        eng, sched = self.engine, self.sched
+        row = np.asarray(jax.device_get(self.state.tokens[slot, :n]))
+        lps = np.asarray(jax.device_get(
+            self.state.logprobs[slot, len(req.prompt):n]))
+        if reason is None:
+            reason = ("eos" if eng.eos_id is not None and n > 0
+                      and row[-1] == eng.eos_id else "length")
+        sched.complete(slot, row, lps, reason, self.clock)
+        self.state = eng.release(self.state, slot)
+        self.generated += n - len(req.prompt)
+
+    # -- SLO enforcement -------------------------------------------------------
+    def _enforce_running_drops(self) -> None:
+        """Cancellation / deadline sweep over reserved and decoding slots:
+        the request finalizes (running aborts keep their partial tokens)
+        and the slot + pool pages free leak-free."""
+        eng, sched = self.engine, self.sched
+        for slot, req in sched.reserved_slots():
+            reason = sched.drop_reason(req, self.clock)
+            if reason is None:
+                continue
+            task = self.tasks.pop(slot, None)
+            if task is not None and task.match is not None \
+                    and eng.pool is not None:
+                eng.pool.unpin(task.match)
+            sched.drop_reserved(slot, reason, self.clock)
+        drops = [(slot, req, sched.drop_reason(req, self.clock))
+                 for slot, req in sched.active_slots()
+                 if sched.drop_reason(req, self.clock) is not None]
+        if not drops:
+            return
+        len_np = jax.device_get(self.state.lengths)
+        for slot, req, reason in drops:
+            self._complete_slot(slot, req, int(len_np[slot]), reason=reason)
+
+    def _preempt_for_priority(self) -> None:
+        """Restart-style preemption: a strictly-higher-priority waiter may
+        evict the lowest-priority decoding slot (its pages return through
+        ``PoolSession.release``; the victim requeues and prefills again).
+        Gated behind ``SLOConfig.preempt``."""
+        if self.slo is None or not self.slo.preempt:
+            return
+        sched = self.sched
+        while not sched.free_slots():
+            head = sched.peek_ready(self.clock)
+            if head is None:
+                return
+            victim = sched.preempt_victim(head.priority)
+            if victim is None:
+                return
+            self.state = self.engine.release(self.state, victim)
+            sched.preempt(victim)
+
+    def _admission_gated(self, req: Request, now: float) -> bool:
+        """TPOT-percentile admission gate: defer NEW work while running
+        slots' measured per-token latency (rolling mean over the last
+        ``admit_window`` chunks) exceeds the target. Priority-0 requests
+        and requests already past their TTFT target are never deferred."""
+        slo = self.slo
+        if slo is None or slo.tpot_target_s is None or req.priority == 0:
+            return False
+        if self.sched.num_active == 0:
+            return False    # never starve an idle engine
+        if slo.ttft_target_s is not None:
+            rw = self.sched.ready_wall(req.rid)
+            if rw is not None and now - rw >= slo.ttft_target_s:
+                return False
+        window = self.gaps[-slo.admit_window:]
+        if not window:
+            return False
+        return (sum(window) / len(window)) / self.chunk > slo.tpot_target_s
+
+    # -- admissions --------------------------------------------------------------
+    def _admit(self, now: float) -> bool:
+        """Fill free slots from the ready queue. Returns True when pool
+        backpressure stalled an admission (deadlock detection)."""
+        eng, sched = self.engine, self.sched
+        for slot in sched.free_slots():
+            head = sched.peek_ready(self.clock)
+            if head is None or self._admission_gated(head, now):
+                break
+            req = sched.next_ready(self.clock)
+            if req is None:
+                break
+            if eng.pool is not None and not eng.pool.can_admit(
+                    eng.pool.pages_for(eng._slot_seq_budget(
+                        len(req.prompt), req.max_new_tokens))):
+                # pool backpressure: not enough free/evictable pages for
+                # the worst case — retry after a slot drains
+                sched.requeue(req)
+                return True
+            # the TTFT clock starts at dequeue (reserve) so prefill time
+            # (and the prefix cache skipping it) shows up in ttft_s
+            sched.reserve(slot, req, self.clock, wall=time.perf_counter())
+            if self.prefill_chunk is not None:
+                self.tasks[slot] = eng.begin_prefill(
+                    req.prompt, frames=req.frames, state=self.state)
+                continue
+            # monolithic: admission is baseline-identical even under spec
+            # (the spec loop recognizes pos == lengths as a fresh slot and
+            # takes the first candidate dist from these prefill logits)
+            pf = eng.prefill_request(req.prompt, frames=req.frames,
+                                     state=self.state)
+            self._insert(slot, req, pf)
+        return False
+
+    def _insert(self, slot: int, req: Request, pf) -> bool:
+        """Insert a finished prefill into its reserved slot; False if the
+        pool refused (the request is back in the queue, nothing leaked)."""
+        eng, sched = self.engine, self.sched
+        temp = (req.temperature if req.temperature is not None
+                else self.temperature)
+        try:
+            state = eng.insert(self.state, slot, pf, req.max_new_tokens,
+                               temperature=temp, top_k=req.top_k,
+                               top_p=req.top_p)
+        except OutOfPages:
+            # engine.insert unpinned the match and leaked nothing; put the
+            # request back (its queue-delay clock resumes) and retry when
+            # a slot drains
+            sched.unreserve(slot)
+            return False
+        self.state = state
+        # a refill = joining a batch that is already mid-decode
+        if self.occupancy and sched.num_active > 0:
+            self.admissions += 1
+        sched.activate(slot)
+        return True
+
+    def _advance_prefills(self) -> None:
+        """Advance every in-flight chunked prefill by ONE chunk per tick
+        (the Sarathi schedule: a bounded slice of prefill work interleaved
+        between decode chunks — in the steady state one long prompt is in
+        flight, so a tick adds at most one prefill_chunk-token step);
+        insert each task as soon as its prompt is fully in. ``tasks``
+        preserves reservation order, so progress is FIFO."""
+        for slot in list(self.tasks):
+            task = self.tasks[slot]
+            self.engine.advance_prefill(task, self.prefill_chunk)
+            self.prefill_chunks += 1
+            if not task.done:
+                continue
+            del self.tasks[slot]
+            req = self.sched.reserved_request(slot)
+            self._insert(slot, req, task.as_prefill())
+
+    # -- wrap-up -------------------------------------------------------------
+    def finalize(self):
+        """Sorted outputs + ServeStats (call once, after ``done``)."""
+        from repro.serving.engine import ServeStats
+        eng, sched = self.engine, self.sched
+        outputs = sorted(sched.finished, key=lambda o: o.rid)
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) if vals else 0.0
+
+        ttfts = [o.ttft_s for o in outputs if o.ttft_s is not None]
+        tpots = [o.tpot_s for o in outputs if o.tpot_s is not None]
+        qdels = [o.queue_delay_s for o in outputs
+                 if o.queue_delay_s is not None]
+        pool_kw = {}
+        if eng.pool is not None:
+            pool = eng.pool
+            pool_kw = dict(
+                pool_pages_total=pool.num_pages,
+                pool_pages_peak=pool.peak_pages,
+                pool_page_size=pool.page_size,
+                prefix_hits=pool.prefix_hits,
+                prefix_hit_tokens=pool.prefix_hit_tokens,
+                prefix_hit_rate=(pool.prefix_hit_tokens / pool.prompt_tokens
+                                 if pool.prompt_tokens else 0.0),
+                cow_copies=pool.cow_copies,
+                kv_bytes_peak=(pool.peak_pages * eng._page_bytes
+                               + self.num_slots
+                               * eng._nonpaged_bytes_per_slot()))
+        spec_m = self.spec_m
+        return outputs, ServeStats(
+            decode_steps=len(self.occupancy) * self.chunk,
+            generated_tokens=self.generated,
+            occupancy=(float(np.mean(self.occupancy))
+                       if self.occupancy else 0.0),
+            num_chunks=len(self.occupancy), admissions=self.admissions,
+            ttft_p50_s=pct(ttfts, 50), ttft_p95_s=pct(ttfts, 95),
+            tpot_p50_s=pct(tpots, 50), tpot_p95_s=pct(tpots, 95),
+            queue_delay_p50_s=pct(qdels, 50),
+            queue_delay_p95_s=pct(qdels, 95),
+            preemptions=sched.preemptions, timeouts=sched.timeouts,
+            cancelled=sched.cancels, prefill_chunks=self.prefill_chunks,
+            decode_gap_p50_s=pct(self.gaps, 50),
+            decode_gap_p95_s=pct(self.gaps, 95),
+            decode_gap_max_s=(max(self.gaps) if self.gaps else 0.0),
+            spec_rounds=spec_m["rounds"],
+            draft_proposed=spec_m["proposed"],
+            draft_accepted=spec_m["accepted"],
+            acceptance_rate=(spec_m["accepted"] / spec_m["proposed"]
+                             if spec_m["proposed"] else 0.0),
+            tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
+                              if spec_m["rounds"] else 0.0),
+            tuned=eng.tuned, **pool_kw)
+
+    def run(self):
+        """Drain the stream to completion (single-engine serve loop)."""
+        while not self.done:
+            self.dispatch()
+            self.harvest()
+        return self.finalize()

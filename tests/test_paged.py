@@ -468,3 +468,58 @@ def test_disaggregated_api_matches_serve(trained):
     state = eng2.release(state, 0)
     assert eng2.pool.pages_in_use == 0
     np.testing.assert_array_equal(got, outs[0].tokens)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill + SLO drops over the paged pool (docs/DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_paged_parity(trained):
+    """Chunked prefill composes with the paged pool and prefix sharing:
+    the interleaved engine (non-dividing chunk) emits the dense engine's
+    exact greedy tokens, still detects the shared prefix, and the pool
+    invariants hold after the stream drains."""
+    cfg, model, params = trained["dense"]
+    prefix = np.array(jax.random.randint(jax.random.PRNGKey(99), (12,), 0,
+                                         cfg.vocab_size, dtype=jnp.int32))
+    reqs = _requests(cfg, n=4, prompt_len=16, max_new=6, prefix=prefix)
+    ref = ServeEngine(model, params, max_seq=24)
+    pg = ServeEngine(model, params, max_seq=24, paged=PC4)
+    outs_ref, _ = ref.serve(reqs, num_slots=2, chunk=4)
+    outs_pg, st = pg.serve(reqs, num_slots=2, chunk=4, prefill_chunk=5)
+    _assert_same(outs_pg, outs_ref, atol=1e-4)
+    assert st.prefill_chunks > 0
+    # rids 0 and 1 start prefilling concurrently (2 slots), before rid 0's
+    # pages register — so rid 1 can miss; later admissions must hit
+    assert st.prefix_hits >= 2
+    assert st.prefix_hit_tokens == st.prefix_hits * 12
+    pg.pool.check_invariants()
+    assert (pg.pool.pages_in_use
+            == pg.pool.prefix.evictable(pg.pool._ref))
+
+
+def test_cancellation_under_load_frees_pages(trained):
+    """Poisson load with cancellations, queue timeouts and preemption on a
+    paged engine: every drop path — queued, prefilling, or decoding —
+    returns its pages (check_invariants), and the drained engine holds
+    only evictable prefix-cache pages."""
+    from repro.serving.scheduler import SLOConfig, synthetic_stream
+    cfg, model, params = trained["dense"]
+    reqs = synthetic_stream(12, vocab_size=cfg.vocab_size, prompt_len=6,
+                            max_new_tokens=8, arrival_rate=2.0,
+                            poisson=True, seed=3, priorities=(1, 1, 1, 0))
+    for r in reqs[::4]:
+        r.cancel_at_step = r.arrival_step + 4
+    for r in reqs[2::4]:
+        r.queue_timeout_steps = 3
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+    pg = ServeEngine(model, params, max_seq=max_seq, paged=PC4)
+    outs, st = pg.serve(reqs, num_slots=2, chunk=4, prefill_chunk=4,
+                        slo=SLOConfig(preempt=True))
+    assert len(outs) == len(reqs)
+    reasons = {o.finish_reason for o in outs}
+    assert st.cancelled > 0 and "cancelled" in reasons
+    assert st.timeouts > 0 and "timeout" in reasons
+    pg.pool.check_invariants()
+    assert (pg.pool.pages_in_use
+            == pg.pool.prefix.evictable(pg.pool._ref))
