@@ -62,6 +62,12 @@ Two sweeps over briefly-trained smoke-scale models:
    behind the load-aware router: tok/s, per-replica occupancy and
    assignments, greedy token agreement (must be 1.0).
 
+9. **Fault-tolerance sweep** (docs/DESIGN.md §15) — the stack under
+   injected faults: 1-of-2 replica loss mid-stream (failover + request
+   re-drive; throughput retained, recovery p95, greedy agreement must
+   stay 1.0) and ewq graceful degradation under injected pool exhaustion
+   (degraded vs nominal tok/s, KV tier histogram, zero lost requests).
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -985,6 +991,126 @@ def _dp_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _fault_rows(max_new: int, reps: int, steps: int | None,
+                summary: dict) -> list[tuple]:
+    """Fault tolerance (docs/DESIGN.md §15): the serving stack under
+    injected faults. Two rows — (a) 1-of-2 replica loss mid-stream with
+    failover + request re-drive (throughput retained vs the fault-free
+    two-replica run, recovery p95, greedy agreement must stay 1.0) and
+    (b) ewq graceful degradation under injected pool exhaustion (degraded
+    vs nominal tok/s, tier histogram, zero lost requests). Replicas are
+    unmeshed single-device engines — the fault paths under test are
+    host-side, so the rows run at any device count."""
+    from repro.serving import chaos
+    from repro.serving.chaos import FaultConfig
+    from repro.serving.pool import PagedConfig
+    from repro.serving.replica import FailoverConfig, ReplicaServe
+    from repro.serving.session import DegradeConfig
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    plan = plan_for_variant(model, params, FAMILY_VARIANT)
+    qparams = model.compile_plan(params, plan).params
+    requests = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    # pool sized so only the INJECTED exhaustion (not real pressure)
+    # drives the degradation ladder
+    paged = PagedConfig(page_size=8,
+                        pool_pages=NUM_SLOTS * -(-max_seq // 8))
+    rows = []
+
+    def timed(fn):
+        fn()                                     # warm
+        best = None
+        for _ in range(max(reps, 1)):
+            t0 = time.perf_counter()
+            out = fn()
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[1]:
+                best = (out, dt)
+        return best
+
+    def agree_vs(ref, out):
+        return float(len(out) == len(ref) and all(
+            a.rid == b.rid and (a.tokens == b.tokens).all()
+            for a, b in zip(ref, out)))
+
+    # -- (a) replica loss: kill 1 of 2 replicas mid-stream ------------------
+    def replicas():
+        return ReplicaServe([
+            ServeEngine(model, qparams, max_seq=max_seq, paged=paged)
+            for _ in range(2)])
+
+    rep = replicas()
+    (ref_out, ref_stats), ref_dt = timed(
+        lambda: rep.serve(requests, num_slots=max(1, NUM_SLOTS // 2),
+                          chunk=CHUNK))
+    ref_tps = ref_stats.aggregate.generated_tokens / ref_dt
+
+    def lossy():
+        with chaos.chaos(FaultConfig.parse("replica_fault", seed=0)):
+            return rep.serve(requests, num_slots=max(1, NUM_SLOTS // 2),
+                             chunk=CHUNK, failover=FailoverConfig())
+
+    (loss_out, loss_rstats), loss_dt = timed(lossy)
+    loss = loss_rstats.aggregate
+    loss_tps = loss.generated_tokens / loss_dt
+    agree = agree_vs(ref_out, loss_out)
+    for eng in rep.engines:
+        eng.pool.check_invariants()
+    rows.append((
+        "serve/fault/replica-loss/stream",
+        loss_dt / max(loss.generated_tokens, 1) * 1e6,
+        f"{loss_tps:.1f} tok/s with 1-of-2 replicas killed mid-stream "
+        f"({loss_tps/ref_tps:.2f}x of fault-free), "
+        f"{loss.redriven_requests} re-driven, recovery p95 "
+        f"{loss.recovery_p95_s*1e3:.1f} ms, greedy agree {agree:.2f}"))
+    assert agree == 1.0, \
+        "failover re-drive diverged from the fault-free replica run"
+
+    # -- (b) graceful degradation under injected pool exhaustion ------------
+    nom = ServeEngine(model, qparams, max_seq=max_seq, paged=paged)
+    (nom_out, nom_stats), nom_dt = timed(
+        lambda: nom.serve(requests, num_slots=NUM_SLOTS, chunk=CHUNK))
+    nom_tps = nom_stats.generated_tokens / nom_dt
+
+    deg_eng = ServeEngine(model, qparams, max_seq=max_seq, paged=paged)
+
+    def degraded():
+        with chaos.chaos(FaultConfig.parse("oom", seed=0)):
+            return deg_eng.serve(requests, num_slots=NUM_SLOTS, chunk=CHUNK,
+                                 degrade=DegradeConfig())
+
+    (deg_out, deg_stats), deg_dt = timed(degraded)
+    deg_tps = deg_stats.generated_tokens / deg_dt
+    deg_agree = agree_vs(nom_out, deg_out)
+    deg_eng.pool.check_invariants()
+    assert len(deg_out) == len(requests), \
+        "graceful degradation lost requests under injected exhaustion"
+    tiers = "/".join(str(t) for t in deg_stats.kv_tier_steps)
+    rows.append((
+        "serve/fault/degraded/stream",
+        deg_dt / max(deg_stats.generated_tokens, 1) * 1e6,
+        f"{deg_tps:.1f} tok/s under injected pool exhaustion "
+        f"({deg_tps/nom_tps:.2f}x of nominal {nom_tps:.1f}), "
+        f"{deg_stats.degrade_transitions} tier transitions, "
+        f"tier steps [{tiers}], greedy agree {deg_agree:.2f}"))
+    summary["fault"] = {
+        "tok_s_two_replicas": ref_tps, "tok_s_replica_loss": loss_tps,
+        "throughput_retained": loss_tps / ref_tps,
+        "recovery_p95_s": loss.recovery_p95_s,
+        "replica_restarts": loss.replica_restarts,
+        "redriven_requests": loss.redriven_requests,
+        "replica_loss_greedy_agree": agree,
+        "tok_s_nominal": nom_tps, "tok_s_degraded": deg_tps,
+        "degraded_vs_nominal": deg_tps / nom_tps,
+        "degrade_transitions": deg_stats.degrade_transitions,
+        "kv_tier_steps": list(deg_stats.kv_tier_steps),
+        "degraded_greedy_agree": deg_agree,
+    }
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     # best-of-3 even in smoke: the fused/tuned delta rows race paths that
@@ -993,7 +1119,7 @@ def run(smoke: bool = False) -> list[tuple]:
     steps = SMOKE_TRAIN_STEPS if smoke else None
     summary: dict = {"variants": {}, "families": {}, "mesh": {},
                      "kv_cache": {}, "fused": {}, "spec": {}, "paged": {},
-                     "slo": {}, "dp": {}}
+                     "slo": {}, "dp": {}, "fault": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
@@ -1006,6 +1132,7 @@ def run(smoke: bool = False) -> list[tuple]:
     rows += _paged_rows(max_new, reps, steps, summary)
     rows += _slo_rows(max_new, reps, steps, summary)
     rows += _dp_rows(max_new, reps, steps, summary)
+    rows += _fault_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

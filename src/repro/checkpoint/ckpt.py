@@ -29,6 +29,7 @@ import os
 import pathlib
 import shutil
 import tempfile
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -39,6 +40,44 @@ from repro.quant.qtypes import QTensor
 
 # npz cannot store bfloat16 natively; carry it as uint16 bits + manifest dtype
 _BITCAST = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8}
+
+
+class ArtifactCorruptionError(RuntimeError):
+    """A checkpoint/artifact payload failed integrity verification. Names
+    the bad leaf so a corrupt artifact is diagnosable at load time instead
+    of surfacing as an opaque shape/dtype error (DESIGN.md §15)."""
+
+    def __init__(self, leaf: str, detail: str):
+        super().__init__(f"artifact payload corrupt at leaf {leaf!r}: "
+                         f"{detail}")
+        self.leaf = leaf
+
+
+def _crc(arr: np.ndarray) -> int:
+    """crc32 of the STORED byte payload (post-bitcast view)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _check_crc(key: str, meta: dict, stored: list) -> None:
+    """Verify per-leaf checksums stamped at save time. Pre-checksum
+    checkpoints (no ``crc32`` in the manifest leaf) pass unverified."""
+    want = meta.get("crc32")
+    if want is None:
+        return
+    got = [_crc(a) for a in stored]
+    if got != list(want):
+        raise ArtifactCorruptionError(
+            key, f"crc32 {got} != manifest {list(want)} — the payload "
+            f"was damaged after save (truncated/flipped bytes)")
+
+
+def _payload(data: dict, name: str, leaf_key: str) -> np.ndarray:
+    arr = data.get(name)
+    if arr is None:
+        raise ArtifactCorruptionError(
+            leaf_key, f"stored array {name!r} missing from the shard "
+            f"files (truncated checkpoint?)")
+    return arr
 
 
 def _to_storable(arr: np.ndarray) -> np.ndarray:
@@ -79,18 +118,22 @@ def save(directory: str, step: int, tree: Any, *, extra: Optional[dict] = None,
         for key, leaf in flat:
             if isinstance(leaf, QTensor):
                 scale = np.asarray(leaf.scale)
-                arrays[f"{key}.__qdata"] = np.asarray(leaf.data)
+                data = np.asarray(leaf.data)
+                arrays[f"{key}.__qdata"] = data
                 arrays[f"{key}.__qscale"] = _to_storable(scale)
                 manifest["leaves"][key] = {
                     "kind": "qtensor", "precision": leaf.precision,
                     "shape": list(leaf.shape), "group": leaf.group,
-                    "scale_dtype": str(scale.dtype)}
+                    "scale_dtype": str(scale.dtype),
+                    "crc32": [_crc(data),
+                              _crc(arrays[f"{key}.__qscale"])]}
             else:
                 arr = np.asarray(leaf)
                 arrays[key] = _to_storable(arr)
                 manifest["leaves"][key] = {
                     "kind": "array", "shape": list(arr.shape),
-                    "dtype": str(arr.dtype)}
+                    "dtype": str(arr.dtype),
+                    "crc32": [_crc(arrays[key])]}
         np.savez(tmp / f"shard_{process_index}.npz", **arrays)
         with open(tmp / "manifest.json", "w") as f:
             json.dump(manifest, f)
@@ -122,6 +165,36 @@ def latest_step(directory: str) -> Optional[int]:
     return int(steps[-1].name.split("_")[1])
 
 
+def _load_shards(d: pathlib.Path) -> dict:
+    """Read every shard file with bounded retry for transient I/O faults
+    (flaky network filesystems; DESIGN.md §15). The chaos sites are
+    imported lazily — serving/chaos.py is stdlib-only, no cycle — and let
+    tests/CI inject a transient read failure (``artifact.read``) and a
+    deterministic one-byte payload flip (``artifact.corrupt``) that the
+    per-leaf checksums must catch."""
+    from repro.runtime.fault import retry
+    from repro.serving import chaos
+
+    def read():
+        chaos.fire("artifact.read")
+        data = {}
+        for shard_file in sorted(d.glob("shard_*.npz")):
+            with np.load(shard_file) as z:
+                for k in z.files:
+                    data[k] = z[k]
+        return data
+
+    data = retry(read, attempts=3, base_delay=0.05,
+                 retriable=(OSError, chaos.TransientFault))
+    if data and chaos.deny("artifact.corrupt"):
+        key = sorted(data)[0]
+        arr = np.array(data[key])
+        if arr.nbytes:
+            arr.view(np.uint8).reshape(-1)[0] ^= 0xFF
+            data[key] = arr
+    return data
+
+
 def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
             mesh=None, specs=None) -> tuple[Any, dict]:
     """Restore into the structure of ``tree_like``. When ``mesh``+``specs``
@@ -138,11 +211,7 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
         raise FileNotFoundError(f"checkpoint {d} incomplete")
     with open(d / "manifest.json") as f:
         manifest = json.load(f)
-    data = {}
-    for shard_file in sorted(d.glob("shard_*.npz")):
-        with np.load(shard_file) as z:
-            for k in z.files:
-                data[k] = z[k]
+    data = _load_shards(d)
 
     flat, treedef = _flatten_with_paths(tree_like)
     leaves = []
@@ -163,10 +232,12 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
                 f"a {want_kind} — quantization group/plan mismatch between "
                 f"the artifact manifest and the target model?")
         if meta["kind"] == "qtensor":
-            leaf = QTensor(data=data[f"{key}.__qdata"],
+            qdata = _payload(data, f"{key}.__qdata", key)
+            qscale = _payload(data, f"{key}.__qscale", key)
+            _check_crc(key, meta, [qdata, qscale])
+            leaf = QTensor(data=qdata,
                            scale=_from_storable(
-                               data[f"{key}.__qscale"],
-                               meta.get("scale_dtype", "float32")),
+                               qscale, meta.get("scale_dtype", "float32")),
                            precision=meta["precision"],
                            shape=tuple(meta["shape"]), group=meta["group"])
             if isinstance(like, QTensor) and \
@@ -188,7 +259,9 @@ def restore(directory: str, tree_like: Any, *, step: Optional[int] = None,
                     precision=leaf.precision, shape=leaf.shape,
                     group=leaf.group)
         else:
-            arr = _from_storable(data[key], meta["dtype"])
+            stored = _payload(data, key, key)
+            _check_crc(key, meta, [stored])
+            arr = _from_storable(stored, meta["dtype"])
             want = getattr(like, "shape", None)
             if want is not None and arr.shape != tuple(want):
                 raise ValueError(f"{key}: checkpoint shape {arr.shape} != "

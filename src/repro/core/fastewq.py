@@ -78,6 +78,25 @@ class FastEWQ:
         with open(path, "wb") as f:
             pickle.dump(self, f)
 
+    def kv_spill_order(self, block_sizes: Sequence[int], *,
+                       start_exec_index: int = 1) -> list:
+        """Layer order for graceful KV degradation (DESIGN.md §15).
+
+        Same O(1) metadata classification as ``plan``: blocks FastEWQ
+        marks quantizable spill their KV precision down a tier FIRST
+        (their activations tolerate coarser representation — the layer-
+        level entropy signal the classifier encodes), and within each
+        class later exec indices spill before earlier ones, mirroring
+        §6.3's rule that the deepest quantized block is the first to
+        drop to 4-bit. Returns block indices, first-to-spill first.
+        """
+        n = len(block_sizes)
+        ranked = []
+        for i, size in enumerate(block_sizes):
+            q = self.predict_quantized(size, start_exec_index + i, n)
+            ranked.append((0 if q else 1, -(start_exec_index + i), i))
+        return [i for _, _, i in sorted(ranked)]
+
     @staticmethod
     def load(path: str) -> "FastEWQ":
         with open(path, "rb") as f:

@@ -164,6 +164,29 @@ def main():
     ap.add_argument("--check-dp-parity", action="store_true",
                     help="with --dp: also serve on the single full-mesh "
                          "engine and assert token-identical greedy output")
+    # fault tolerance + graceful degradation (docs/DESIGN.md §15)
+    ap.add_argument("--chaos", default=None,
+                    help="comma-separated fault-injection shorthands "
+                         "(serving/chaos.py): replica_fault, "
+                         "replica_transient, oom, stall, artifact — "
+                         "deterministic under --chaos-seed")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the chaos injector's fault schedule")
+    ap.add_argument("--degrade-policy", default="off",
+                    choices=["off", "ewq"],
+                    help="graceful degradation under pool pressure: 'ewq' "
+                         "spills KV precision down the entropy-ordered "
+                         "tier ladder (FastEWQ/plan-derived) instead of "
+                         "rejecting work, promoting back when headroom "
+                         "returns (requires --paged)")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="per-replica dispatch->harvest deadline; overruns "
+                         "surface as watchdog_trips (0: off)")
+    ap.add_argument("--check-chaos-parity", action="store_true",
+                    help="with --chaos: serve fault-free FIRST, then the "
+                         "chaos run, and assert token-identical greedy "
+                         "output (every request completes despite the "
+                         "injected faults)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -210,6 +233,24 @@ def main():
                          "(e.g. --mesh data,model --mesh-shape 2,4)")
     if args.check_dp_parity and not args.dp:
         raise SystemExit("--check-dp-parity requires --dp")
+    if args.check_chaos_parity and not args.chaos:
+        raise SystemExit("--check-chaos-parity requires --chaos")
+    if args.chaos and not args.num_requests:
+        raise SystemExit("--chaos injects into the serve loop; set "
+                         "--num-requests")
+
+    degrade = None
+    if args.degrade_policy != "off":
+        if paged is None:
+            raise SystemExit("--degrade-policy trades KV precision for pool "
+                             "pages; it requires --paged")
+        from repro.serving.session import DegradeConfig
+        degrade = DegradeConfig(policy=args.degrade_policy)
+    failover = None
+    if args.dp and (args.chaos or args.watchdog_ms):
+        from repro.serving.replica import FailoverConfig
+        failover = FailoverConfig(watchdog_s=(args.watchdog_ms / 1e3
+                                              if args.watchdog_ms else None))
 
     requests = None
     max_seq = args.prompt_len + args.max_new
@@ -332,9 +373,10 @@ def main():
 
     if requests is not None:
         serve_kw = dict(num_slots=args.num_slots, chunk=args.chunk,
-                        prefill_chunk=args.prefill_chunk or None, slo=slo)
+                        prefill_chunk=args.prefill_chunk or None, slo=slo,
+                        degrade=degrade)
         rstats = None
-        t0 = time.perf_counter()
+        replica = None
         if args.dp:
             from repro.launch.mesh import split_data_replicas
             from repro.serving.replica import ReplicaServe
@@ -344,10 +386,36 @@ def main():
                                  f"mesh {dict(mesh.shape)}; need a data "
                                  "axis of size >= 2")
             replica = ReplicaServe([make_engine(m) for m in subs])
-            outputs, rstats = replica.serve(requests, **serve_kw)
-            stats = rstats.aggregate
-        else:
-            outputs, stats = engine.serve(requests, **serve_kw)
+        chaos_ref = None
+        if args.check_chaos_parity:
+            # fault-free baseline FIRST, at nominal precision (no degrade):
+            # each serve builds fresh sessions and pool pages, so the chaos
+            # run below starts from identical state
+            base_kw = dict(serve_kw, degrade=None)
+            if replica is not None:
+                chaos_ref, _ = replica.serve(requests, **base_kw)
+            else:
+                chaos_ref, _ = engine.serve(requests, **base_kw)
+        injector = None
+        if args.chaos:
+            from repro.serving import chaos as chaos_mod
+            injector = chaos_mod.ChaosInjector(
+                chaos_mod.FaultConfig.parse(args.chaos,
+                                            seed=args.chaos_seed))
+            chaos_mod.install(injector)
+            print(f"chaos: injecting {args.chaos} (seed {args.chaos_seed})")
+        t0 = time.perf_counter()
+        try:
+            if replica is not None:
+                outputs, rstats = replica.serve(requests,
+                                                failover=failover,
+                                                **serve_kw)
+                stats = rstats.aggregate
+            else:
+                outputs, stats = engine.serve(requests, **serve_kw)
+        finally:
+            if injector is not None:
+                chaos_mod.install(None)
         dt = time.perf_counter() - t0
         print(f"served {len(outputs)} requests in {dt:.1f}s "
               f"({stats.generated_tokens/dt:.1f} tok/s): "
@@ -374,6 +442,33 @@ def main():
                                     rstats.occupancy_per_replica)))
             print(f"dp replicas: {rstats.replicas} x "
                   f"{dict(replica.engines[0].mesh.shape)} ({occ})")
+        if args.chaos or degrade is not None or args.watchdog_ms:
+            print(f"fault tolerance: {stats.replica_restarts} replica "
+                  f"restarts, {stats.redriven_requests} requests re-driven, "
+                  f"recovery p95 {stats.recovery_p95_s*1e3:.1f}ms, "
+                  f"{stats.watchdog_trips} watchdog trips")
+            tiers = ", ".join(f"tier{i}: {n} steps"
+                              for i, n in enumerate(stats.kv_tier_steps))
+            print(f"degradation: {stats.degrade_transitions} transitions, "
+                  f"{stats.degraded_steps} degraded steps "
+                  f"({tiers or 'no tier ladder'})")
+            if injector is not None and injector.log:
+                fired = ", ".join(
+                    f"{site}#{occ}" + (f"[r{tag}]" if tag is not None else "")
+                    for site, tag, occ in injector.log)
+                print(f"chaos fired: {fired}")
+        if args.check_chaos_parity:
+            import numpy as np
+            agree = (len(chaos_ref) == len(outputs)
+                     and all(a.rid == b.rid
+                             and np.array_equal(a.tokens, b.tokens)
+                             for a, b in zip(chaos_ref, outputs)))
+            print(f"greedy-agree vs fault-free run: {float(agree):.1f} "
+                  f"({len(outputs)}/{len(chaos_ref)} requests completed)")
+            if not agree:
+                raise SystemExit("chaos-run greedy output DIVERGED from "
+                                 "the fault-free run (or requests were "
+                                 "lost)")
         if args.check_dp_parity:
             import numpy as np
             ref_out, _ = engine.serve(requests, **serve_kw)

@@ -150,6 +150,72 @@ def compile_kv_plan(cfg: ModelConfig, plan: Optional[QuantPlan],
     return KVPlan(precisions=prec, group=group)
 
 
+_KV_DOWN = {"bf16": "int8", "int8": "int4", "int4": "int4"}
+
+
+def degrade_kv_ladder(cfg: ModelConfig, plan: Optional[QuantPlan],
+                      base: Optional[KVPlan],
+                      group: int = DEFAULT_KV_GROUP, *,
+                      fastewq=None, block_sizes=None,
+                      cuts: Sequence[int] = ()) -> list:
+    """Entropy-ordered KV degradation tiers (DESIGN.md §15).
+
+    Tier 0 is the serving policy (``base``; None = bf16). Deeper tiers
+    spill cache precision down bf16→int8→int4 in the order the layer-
+    level entropy signal dictates: layers whose weight blocks the plan
+    marked quantizable (or that a FastEWQ classifier predicts quantizable
+    from metadata alone, O(1) per block) spill FIRST; entropy-sensitive
+    layers follow one tier later; the final tier is all-int4. Lowering
+    precision at constant byte budget buys proportionally more pool
+    pages, which is what relieves ``OutOfPages`` pressure — see
+    ``ServeEngine.apply_kv_plan``.
+    """
+    n = kv_cache_layers(cfg)
+    if n == 0:
+        return []
+    base_prec = list(base.precisions) if base is not None else ["bf16"] * n
+    if base is not None:
+        group = base.group
+    if plan is not None:
+        if cfg.family == "hybrid":
+            spill = [plan.decisions[1 + cfg.num_layers].quantized] * n
+        elif cfg.family == "encdec":
+            ne = cfg.num_encoder_layers
+            spill = [d.quantized
+                     for d in plan.decisions[1 + ne:1 + ne + cfg.num_layers]]
+        else:
+            spill = [d.quantized for d in plan.decisions[1:1 + cfg.num_layers]]
+    elif fastewq is not None and block_sizes is not None:
+        order = fastewq.kv_spill_order(block_sizes)
+        first = set(order[:max(1, len(order) // 2)])
+        spill = [i in first for i in range(n)]
+    else:
+        # no entropy signal: deepest layers spill first (paper §6.3 —
+        # the highest exec-index quantized block is first to drop a tier)
+        spill = [i >= n // 2 for i in range(n)]
+    # decode scans the cache one pool run per parameter segment
+    # (kvcache.kv_segment), so a tier's precision must be uniform within
+    # each segment (no cuts = ONE segment spanning the stack): a segment
+    # spills when at least half of its layers' entropy decisions say spill
+    bounds = [0] + [c for c in sorted(set(cuts)) if 0 < c < n] + [n]
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        seg = sum(spill[lo:hi]) * 2 >= (hi - lo)
+        spill[lo:hi] = [seg] * (hi - lo)
+    if not any(spill):
+        spill = [True] * n
+    t1 = [_KV_DOWN[p] if s else p for p, s in zip(base_prec, spill)]
+    t2 = [_KV_DOWN[_KV_DOWN[p]] if s else _KV_DOWN[p]
+          for p, s in zip(base_prec, spill)]
+    t3 = ["int4"] * n
+    tiers = [base]
+    last = base_prec
+    for t in (t1, t2, t3):
+        if t != last:
+            tiers.append(KVPlan(precisions=tuple(t), group=group))
+            last = t
+    return tiers
+
+
 @dataclasses.dataclass
 class CompiledPlan:
     """A QuantPlan lowered onto one model's parameters.

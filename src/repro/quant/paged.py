@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.quant.kvcache import KVPage, PagedKV, quantize_kv
+from repro.quant.kvcache import KVPage, PagedKV, dequantize_kv, quantize_kv
 
 DUMP_PAGE = 0
 
@@ -232,3 +232,46 @@ def page_nbytes(field) -> float:
             total += (float(np.prod(leaf.shape))
                       * np.dtype(leaf.dtype).itemsize) / n_phys
     return total
+
+
+# ---------------------------------------------------------------------------
+# live repack (graceful degradation, docs/DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def repack_pool_field(field, runs_new: Sequence[tuple[str, int, int]], *,
+                      perm: np.ndarray, inv: np.ndarray, group: int,
+                      raw_dtype):
+    """Rebuild one paged field under new precision runs and pool size,
+    carrying every live page's payload across the transition.
+
+    Each old run is dequantized to ``raw_dtype`` (the dense cache dtype),
+    pages move through ``inv`` (new physical id -> old physical id;
+    ``inv[0] = 0`` keeps the dump page) and are requantized with the
+    exact write math admission would have applied at the new precision —
+    a demoted page holds the same values as if its request had been
+    admitted at the lower tier. Page tables remap through ``perm`` (old
+    physical id -> new; dead pages -> dump). Fully traceable: the caller
+    jits one repack per tier transition."""
+    pages = field if isinstance(field, tuple) else (field,)
+    p_sz = pages[0].page_size
+    raws = [dequantize_kv(pg, raw_dtype) for pg in pages]
+    full = jnp.concatenate(raws, 0) if len(raws) > 1 else raws[0]
+    tables = [pg.table for pg in pages]
+    table_full = (jnp.concatenate(tables, 0) if len(tables) > 1
+                  else tables[0])
+    new_raw = full[:, jnp.asarray(inv, jnp.int32)]   # (L, n_phys_new, P, ...)
+    new_table = jnp.asarray(perm, jnp.int32)[table_full]
+    hd = new_raw.shape[-1]
+    out = []
+    for precision, lo, hi in runs_new:
+        seg = new_raw[lo:hi]
+        data_dtype = (raw_dtype if precision == "bf16"
+                      else jnp.int8)
+        data, scale = _quant_rows(seg, precision, group, data_dtype)
+        if precision == "int4":
+            ll, n_phys = data.shape[:2]
+            data = data.reshape(ll, n_phys, p_sz, -1)
+        out.append(PagedKV(data=data, scale=scale,
+                           table=new_table[lo:hi], precision=precision,
+                           head_dim=hd, group=group, page_size=p_sz))
+    return tuple(out) if len(out) > 1 else out[0]

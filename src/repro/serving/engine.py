@@ -163,6 +163,14 @@ class ServeStats:
     # kernels/autotune.py provenance: the tune-cache key whose config the
     # engine's executables were traced under, or "untuned"
     tuned: str = "untuned"
+    # fault tolerance + graceful degradation (docs/DESIGN.md §15)
+    replica_restarts: int = 0      # replicas quarantined and failed over
+    redriven_requests: int = 0     # in-flight requests re-driven to survivors
+    recovery_p95_s: float = 0.0    # p95 wall s, failure -> survivors resumed
+    watchdog_trips: int = 0        # dispatch->harvest deadline overruns
+    degraded_steps: int = 0        # decode steps run below tier 0
+    degrade_transitions: int = 0   # KV tier changes (spills + promotions)
+    kv_tier_steps: tuple = ()      # decode steps per degradation tier
 
 
 class ServeEngine:
@@ -439,6 +447,98 @@ class ServeEngine:
         # quantize any NON-paged KV fields (enc-dec cross K/V); pools pass
         # through untouched (quantize_model_cache skips page fields)
         state = state._replace(cache=self._kv_wrap(state.cache))
+        return self._shard_state(state)
+
+    # -- graceful degradation (docs/DESIGN.md §15) ---------------------------
+    def degrade_ladder(self) -> list:
+        """Entropy-ordered KV degradation tiers for this engine: tier 0 is
+        the serving policy; deeper tiers spill cache precision down
+        bf16→int8→int4 in the order the weight plan's entropy decisions
+        (or FastEWQ, via the compiler) dictate. Empty for unpaged
+        engines — degradation trades precision for pool pages."""
+        if not self._paged_fields:
+            return []
+        from repro.quant.compiler import degrade_kv_ladder
+        from repro.quant.kvcache import DEFAULT_KV_GROUP
+        group = (self.kv_plan.group if self.kv_plan is not None
+                 else DEFAULT_KV_GROUP)
+        return degrade_kv_ladder(self.cfg, self.plan, self.kv_plan, group,
+                                 cuts=self._kv_cuts())
+
+    def apply_kv_plan(self, state: B.DecodeState, new_plan
+                      ) -> Optional[B.DecodeState]:
+        """Live engine-wide KV-precision transition at CONSTANT byte
+        budget. Demoting (bf16→int8→int4) shrinks the page and buys
+        proportionally more pages in the same bytes — exactly what
+        relieves ``OutOfPages`` pressure; promoting shrinks the pool and
+        is refused (returns None) while the live pages would not fit
+        (cache-only prefix pages are flushed first). Every live page's
+        payload is requantized in place — a demoted page holds the same
+        values as if its request had been admitted at the lower tier —
+        and the host allocator is rebuilt with refcounts, slot maps and
+        the prefix cache remapped. Decode fns re-trace automatically on
+        the new pool pytree structure."""
+        from repro.quant import paged as PG
+        from repro.quant.kvcache import DEFAULT_KV_GROUP
+        pool = self.pool
+        if pool is None or new_plan is self.kv_plan:
+            return None
+        num_slots = state.tokens.shape[0]
+        old_plan, old_pages = self.kv_plan, pool.num_pages
+        budget = old_pages * self._page_bytes
+        self.kv_plan = new_plan
+        try:
+            proto = jax.eval_shape(
+                lambda: self.model.slotted_cache(num_slots, self.max_seq))
+            group = (new_plan.group if new_plan is not None
+                     else DEFAULT_KV_GROUP)
+            new_runs, raw_dtypes, page_bytes_new = {}, {}, 0.0
+            for name in self._paged_fields:
+                raw = getattr(proto, name)
+                new_runs[name] = self._pool_runs(raw)
+                raw_dtypes[name] = raw.dtype
+                f = jax.eval_shape(
+                    lambda r=raw, rs=new_runs[name]: PG.init_pool_field(
+                        r, rs, num_pages=1,
+                        page_size=self.paged.page_size,
+                        num_slots=num_slots, group=group))
+                page_bytes_new += PG.page_nbytes(f)
+            new_pages = int(budget // page_bytes_new)
+
+            def alive():
+                return [pid for pid in range(1, old_pages + 1)
+                        if pool._ref[pid] > 0]
+
+            live = alive()
+            if len(live) > new_pages and pool.prefix is not None:
+                pool.flush_prefix()
+                live = alive()
+            if new_pages < 1 or len(live) > new_pages:
+                self.kv_plan = old_plan
+                return None
+            perm = np.zeros(old_pages + 1, np.int32)
+            if new_pages >= old_pages:
+                perm[live] = live                      # growth: in place
+            else:
+                perm[live] = np.arange(1, len(live) + 1)  # compaction
+            inv = np.zeros(new_pages + 1, np.int32)
+            inv[perm[live]] = live
+
+            def repack(cache):
+                reps = {
+                    name: PG.repack_pool_field(
+                        getattr(cache, name), new_runs[name], perm=perm,
+                        inv=inv, group=group, raw_dtype=raw_dtypes[name])
+                    for name in self._paged_fields}
+                return cache._replace(**reps)
+
+            state = state._replace(
+                cache=self._traced(jax.jit(repack))(state.cache))
+        except Exception:
+            self.kv_plan = old_plan
+            raise
+        self.pool = pool.rebuild(perm, new_pages)
+        self._page_bytes = page_bytes_new
         return self._shard_state(state)
 
     def _slot_seq_budget(self, prompt_len: int, max_new: int) -> int:
@@ -988,7 +1088,8 @@ class ServeEngine:
               chunk: int = DEFAULT_CHUNK, temperature: float = 0.0,
               key: Optional[jax.Array] = None,
               prefill_chunk: Optional[int] = None,
-              slo: Optional["SLOConfig"] = None
+              slo: Optional["SLOConfig"] = None,
+              degrade=None
               ) -> tuple[list[RequestOutput], ServeStats]:
         """Drain a request stream with continuous batching.
 
@@ -1016,7 +1117,8 @@ class ServeEngine:
         from repro.serving.session import ServeSession
         return ServeSession(self, requests, num_slots=num_slots,
                             chunk=chunk, temperature=temperature, key=key,
-                            prefill_chunk=prefill_chunk, slo=slo).run()
+                            prefill_chunk=prefill_chunk, slo=slo,
+                            degrade=degrade).run()
 
     # -- diagnostics -----------------------------------------------------------
     def kv_bytes_per_slot(self) -> float:

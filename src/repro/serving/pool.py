@@ -158,6 +158,17 @@ class PrefixCache:
     def evictable(self, refcounts: np.ndarray) -> int:
         return sum(1 for pid in self._lru.values() if refcounts[pid] == 1)
 
+    def remap(self, perm: np.ndarray) -> "PrefixCache":
+        """Clone onto a remapped physical page space (``perm[old] = new``),
+        preserving LRU order — live pool repack, DESIGN.md §15."""
+        pc = PrefixCache()
+        pc._children = {
+            prefix: {page: int(perm[pid]) for page, pid in entry.items()}
+            for prefix, entry in self._children.items()}
+        pc._lru = OrderedDict(
+            (key, int(perm[pid])) for key, pid in self._lru.items())
+        return pc
+
 
 class PoolSession:
     """Free-list + refcount allocator for one engine's page pool."""
@@ -305,6 +316,49 @@ class PoolSession:
         the prefix cache or other slots still hold them)."""
         for pid in self._slot_pages.pop(slot):
             self._decref(pid)
+
+    def flush_prefix(self) -> int:
+        """Evict every cache-only prefix entry (pages no live slot maps).
+        Promotion back up the degradation ladder shrinks the pool at
+        constant bytes — cached-but-unmapped pages are the first to go."""
+        n = 0
+        while self.prefix is not None:
+            pid = self.prefix.evict_lru(self._ref)
+            if pid is None:
+                break
+            self._decref(pid)
+            n += 1
+        return n
+
+    def rebuild(self, perm: np.ndarray, num_pages_new: int) -> "PoolSession":
+        """Clone this allocator onto a remapped physical page space (live
+        KV-precision repack resizes the pool at constant bytes, DESIGN.md
+        §15). ``perm[old_pid] = new_pid`` for live pages, 0 for dead ones;
+        refcounts, slot maps, the prefix cache and stats all carry over."""
+        ns = PoolSession(num_pages_new, self.page_size, self.n_log,
+                         prefix_sharing=self.prefix is not None)
+        ref = np.zeros(num_pages_new + 1, np.int64)
+        for old in range(1, self.num_pages + 1):
+            if self._ref[old] > 0:
+                new = int(perm[old])
+                assert 1 <= new <= num_pages_new, (old, new, num_pages_new)
+                ref[new] = self._ref[old]
+        ns._ref = ref
+        ns._free = [pid for pid in range(num_pages_new, 0, -1)
+                    if ref[pid] == 0]
+        ns._slot_pages = {
+            slot: [int(perm[pid]) for pid in pages]
+            for slot, pages in self._slot_pages.items()}
+        if self.prefix is not None:
+            ns.prefix = self.prefix.remap(perm)
+        ns.peak_pages = self.peak_pages
+        ns.cow_copies = self.cow_copies
+        ns.prefix_hits = self.prefix_hits
+        ns.prefix_hit_tokens = self.prefix_hit_tokens
+        ns.prompt_tokens = self.prompt_tokens
+        ns.admitted = self.admitted
+        ns.check_invariants()
+        return ns
 
     def check_invariants(self) -> None:
         """Debug/test hook: refcounts, free list and slot maps agree."""

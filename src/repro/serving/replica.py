@@ -27,14 +27,36 @@ same requests on one TP-only engine — the CI parity anchor.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.serving import chaos
 from repro.serving.engine import ServeEngine, ServeStats
+from repro.serving.pool import OutOfPages
 from repro.serving.scheduler import Request, RequestOutput, SLOConfig
 from repro.serving.session import ServeSession
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverConfig:
+    """Replica health + failover policy (docs/DESIGN.md §15).
+
+    A replica tick (dispatch or harvest) that raises a ``TransientFault``
+    retries in place up to ``retries`` times with ``backoff_s`` sleep
+    between attempts; any other failure quarantines the replica — its
+    session tears down leak-free (``ServeSession.abort``) and every
+    unfinished request re-drives onto the surviving replicas, where it
+    re-prefills from its original prompt (greedy tokens unchanged).
+    ``max_restarts`` bounds quarantines (default R - 1: the last replica
+    standing must not fail); ``watchdog_s`` arms the per-replica
+    dispatch→harvest deadline (overruns surface as ``watchdog_trips``)."""
+    retries: int = 2
+    backoff_s: float = 0.0
+    max_restarts: Optional[int] = None
+    watchdog_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -89,32 +111,105 @@ class ReplicaServe:
     def serve(self, requests: Sequence[Request], *, num_slots: int = 8,
               chunk: int = 8, temperature: float = 0.0, key=None,
               prefill_chunk: Optional[int] = None,
-              slo: Optional[SLOConfig] = None
+              slo: Optional[SLOConfig] = None,
+              failover: Optional[FailoverConfig] = None,
+              degrade=None
               ) -> tuple[list[RequestOutput], ReplicaStats]:
         """Drain the stream across all replicas; ``num_slots`` is PER
         replica (total concurrency = R * num_slots). Outputs merge back
-        in request-id order."""
+        in request-id order.
+
+        With ``failover`` set, a replica whose tick faults permanently is
+        quarantined: its session aborts leak-free and its unfinished
+        requests re-drive onto the surviving replicas (DESIGN.md §15).
+        Transient faults retry in place. Without ``failover``, failures
+        propagate as before. ``degrade`` (a ``session.DegradeConfig``)
+        arms per-replica graceful degradation under pool pressure."""
         key = key if key is not None else jax.random.PRNGKey(0)
         buckets = self.route(requests)
         sessions = [
             ServeSession(eng, bucket, num_slots=num_slots, chunk=chunk,
                          temperature=temperature,
                          key=jax.random.fold_in(key, i),
-                         prefill_chunk=prefill_chunk, slo=slo)
+                         prefill_chunk=prefill_chunk, slo=slo,
+                         replica_id=i, degrade=degrade,
+                         watchdog_s=(failover.watchdog_s
+                                     if failover is not None else None))
             for i, (eng, bucket) in enumerate(zip(self.engines, buckets))]
-        while any(not s.done for s in sessions):
-            for s in sessions:           # launch every replica's chunk...
-                if not s.done:
-                    s.dispatch()
-            for s in sessions:           # ...then block on each in turn
-                s.harvest()              # (no-op unless it dispatched)
+        alive = [True] * len(sessions)
+        restarts, redriven = 0, 0
+        recovery: list[float] = []
+
+        def tick(i: int, phase: str) -> bool:
+            """One session phase under the failover policy; False means
+            the replica must be quarantined."""
+            s = sessions[i]
+            fn = s.dispatch if phase == "dispatch" else s.harvest
+            attempts = failover.retries if failover is not None else 0
+            while True:
+                try:
+                    fn()
+                    return True
+                except chaos.TransientFault:
+                    if attempts <= 0:
+                        if failover is None:
+                            raise
+                        return False
+                    attempts -= 1   # sites fire before state mutation, so
+                    if failover.backoff_s:       # the tick retries in place
+                        time.sleep(failover.backoff_s)
+                except OutOfPages:
+                    raise   # admission deadlock is a sizing error on every
+                            # identical replica — re-driving cannot help
+                except Exception:
+                    if failover is None:
+                        raise
+                    return False
+
+        def quarantine(i: int) -> None:
+            nonlocal restarts, redriven
+            t0 = time.perf_counter()
+            orphans = sessions[i].abort()
+            alive[i] = False
+            restarts += 1
+            targets = [j for j in range(len(sessions)) if alive[j]]
+            budget = (failover.max_restarts
+                      if failover.max_restarts is not None
+                      else len(sessions) - 1)
+            if not targets or restarts > budget:
+                raise RuntimeError(
+                    f"replica failover exhausted: {restarts} replicas "
+                    f"failed (budget {budget}), {len(orphans)} requests "
+                    f"stranded")
+            load = {j: 0 for j in targets}
+            for req in orphans:          # load-aware re-drive, like route()
+                j = min(targets, key=lambda t: (load[t], t))
+                sessions[j].sched.submit(dataclasses.replace(
+                    req, arrival_step=sessions[j].clock))
+                load[j] += len(req.prompt) + req.max_new_tokens
+                redriven += 1
+            recovery.append(time.perf_counter() - t0)
+
+        while any(alive[i] and not s.done
+                  for i, s in enumerate(sessions)):
+            for i, s in enumerate(sessions):  # launch every live replica...
+                if alive[i] and not s.done and not tick(i, "dispatch"):
+                    quarantine(i)
+            for i, s in enumerate(sessions):  # ...then block on each in turn
+                if alive[i] and not tick(i, "harvest"):
+                    quarantine(i)             # (no-op unless it dispatched)
         results = [s.finalize() for s in sessions]
         outputs = sorted((o for outs, _ in results for o in outs),
                          key=lambda o: o.rid)
         per_replica = [st for _, st in results]
+        aggregate = dataclasses.replace(
+            _merge_stats(outputs, per_replica),
+            replica_restarts=restarts, redriven_requests=redriven,
+            recovery_p95_s=(float(np.percentile(recovery, 95))
+                            if recovery else 0.0))
         return outputs, ReplicaStats(
             replicas=len(self.engines),
-            aggregate=_merge_stats(outputs, per_replica),
+            aggregate=aggregate,
             per_replica=per_replica,
             assignments=[len(b) for b in buckets],
             occupancy_per_replica=[st.occupancy for st in per_replica])
@@ -170,4 +265,17 @@ def _merge_stats(outputs: list, per_replica: list[ServeStats]) -> ServeStats:
         prefix_hit_tokens=sum(st.prefix_hit_tokens for st in per_replica),
         cow_copies=sum(st.cow_copies for st in per_replica),
         kv_bytes_peak=sum(st.kv_bytes_peak for st in per_replica),
-        tuned=per_replica[0].tuned if per_replica else "untuned")
+        tuned=per_replica[0].tuned if per_replica else "untuned",
+        watchdog_trips=sum(st.watchdog_trips for st in per_replica),
+        degraded_steps=sum(st.degraded_steps for st in per_replica),
+        degrade_transitions=sum(st.degrade_transitions
+                                for st in per_replica),
+        kv_tier_steps=_sum_tiers([st.kv_tier_steps for st in per_replica]))
+
+
+def _sum_tiers(tiers: list) -> tuple:
+    """Elementwise sum of per-replica tier-step histograms (ragged: a
+    replica that never degraded reports fewer tiers)."""
+    width = max((len(t) for t in tiers), default=0)
+    return tuple(sum(t[i] for t in tiers if i < len(t))
+                 for i in range(width))

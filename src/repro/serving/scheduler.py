@@ -411,6 +411,28 @@ class Scheduler:
         return (not self._arrivals and not self._ready
                 and self.num_active == 0 and not self._reserved)
 
+    def drain_unfinished(self) -> list[Request]:
+        """Pull every unfinished request — queued, ready, prefilling or
+        decoding — out of the scheduler, clearing its bookkeeping. The
+        failover path (serving/replica.py, DESIGN.md §15) re-drives the
+        result onto a surviving replica: each request re-prefills from
+        its original prompt there, so its greedy tokens are unchanged.
+        Finished outputs stay."""
+        out = [req for _, _, req in self._arrivals]
+        out += [req for _, _, _, req in self._ready]
+        out += list(self._reserved.values())
+        out += [req for req in self._slots if req is not None]
+        self._arrivals = []
+        self._ready = []
+        self._reserved.clear()
+        self._slots = [None] * self.num_slots
+        for req in out:
+            for d in (self._ready_wall, self._admitted_step,
+                      self._admitted_wall, self._first_token_wall,
+                      self._queue_delay):
+                d.pop(req.rid, None)
+        return sorted(out, key=lambda r: r.rid)
+
 
 def synthetic_stream(num_requests: int, *, vocab_size: int, prompt_len: int,
                      max_new_tokens: int, arrival_rate: float = 0.0,

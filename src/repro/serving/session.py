@@ -31,14 +31,36 @@ ticks, keeping arrival_step semantics identical to monolithic serving.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional
 
 import jax
 import numpy as np
 
+from repro.serving import chaos
 from repro.serving.pool import OutOfPages
 from repro.serving.scheduler import Request, Scheduler, SLOConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeConfig:
+    """Graceful-degradation policy under pool pressure (DESIGN.md §15).
+
+    ``policy="ewq"`` spills the engine's KV precision down its entropy-
+    ordered tier ladder (``ServeEngine.degrade_ladder``, grounded in the
+    weight plan's / FastEWQ's layer-level decisions) when admission
+    backpressure persists for ``patience`` consecutive ticks — each tier
+    repacks the pool at constant bytes, so lower precision buys more
+    pages — and promotes one tier back after ``cooldown`` stall-free
+    ticks with at least ``headroom`` of the pool free. ``shrink_spec``
+    additionally drops speculative decoding while degraded (draft rounds
+    probe extra cache rows per slot)."""
+    policy: str = "ewq"
+    patience: int = 2
+    cooldown: int = 16
+    headroom: float = 0.5
+    shrink_spec: bool = True
 
 
 class ServeSession:
@@ -47,7 +69,9 @@ class ServeSession:
     def __init__(self, engine, requests, *, num_slots: int, chunk: int,
                  temperature: float = 0.0, key=None,
                  prefill_chunk: Optional[int] = None,
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None, replica_id: int = 0,
+                 degrade: Optional[DegradeConfig] = None,
+                 watchdog_s: Optional[float] = None):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         if num_slots < 1:
@@ -91,6 +115,19 @@ class ServeSession:
         self._chunk_t0: Optional[float] = None
         self._pending_spec = None
         self._dispatched = False
+        # fault tolerance + graceful degradation (docs/DESIGN.md §15)
+        self.replica_id = replica_id
+        self.watchdog_s = watchdog_s
+        self.watchdog_trips = 0
+        self.degrade = degrade if engine.pool is not None else None
+        self._ladder = (engine.degrade_ladder() if self.degrade is not None
+                        else [engine.kv_plan])
+        self.tier = 0
+        self.tier_steps = [0] * max(1, len(self._ladder))
+        self.degraded_steps = 0
+        self.transitions: list = []    # (clock, from_tier, to_tier)
+        self._stall_ticks = 0
+        self._calm_ticks = 0
 
     # -- progress ------------------------------------------------------------
     @property
@@ -103,17 +140,27 @@ class ServeSession:
         the next decode-chunk launch. Never blocks on device results."""
         eng, sched = self.engine, self.sched
         self._dispatched = False
+        # chaos sites fire BEFORE any state mutation, so a transient fault
+        # can retry this tick in place (serving/chaos.py)
+        chaos.fire("replica.dispatch", tag=self.replica_id)
+        chaos.fire("device.stall", tag=self.replica_id)
         now = time.perf_counter()
         sched.poll(self.clock, now)
         sched.expire(self.clock)
         self._enforce_running_drops()
         self._preempt_for_priority()
         stalled = self._admit(now)
+        if self._degrade_tick(stalled) and stalled:
+            stalled = self._admit(now)   # lower tier freed pages: retry now
         self._advance_prefills()
         if sched.num_active == 0:
             if self.tasks:
                 return                 # prefill-only tick; clock frozen
             if stalled:
+                if (self.degrade is not None
+                        and self.tier + 1 < len(self._ladder)
+                        and self._transition(self.tier + 1)):
+                    return             # spilled a tier: re-admit next tick
                 raise OutOfPages(
                     "admission deadlock: no active slots and the pool "
                     "cannot supply the next request's pages "
@@ -126,19 +173,66 @@ class ServeSession:
             return
         self.occupancy.append(sched.num_active / self.num_slots)
         self._chunk_t0 = time.perf_counter()
-        if self.spec:
+        use_spec = self.spec and not (
+            self.tier > 0 and self.degrade is not None
+            and self.degrade.shrink_spec)
+        if use_spec:
             self.state, self._pending_spec = self.fn(
                 eng.params, self.draft_params, self.state)
         else:
-            self.state = self.fn(eng.params, self.state)
+            fn = self.fn if not self.spec else eng._chunk_fn(self.chunk)
+            self.state = fn(eng.params, self.state)
         self.clock += self.chunk
+        self.tier_steps[self.tier] += self.chunk
+        if self.tier:
+            self.degraded_steps += self.chunk
         self._dispatched = True
+
+    # -- graceful degradation (docs/DESIGN.md §15) ----------------------------
+    def _degrade_tick(self, stalled: bool) -> bool:
+        """Tier policy, one decision per tick: persistent backpressure
+        spills down the ladder, sustained headroom promotes back up.
+        Returns True when a transition happened."""
+        if self.degrade is None or len(self._ladder) < 2:
+            return False
+        if stalled:
+            self._stall_ticks += 1
+            self._calm_ticks = 0
+            if (self._stall_ticks >= self.degrade.patience
+                    and self.tier + 1 < len(self._ladder)):
+                return self._transition(self.tier + 1)
+            return False
+        self._stall_ticks = 0
+        if self.tier == 0:
+            return False
+        pool = self.engine.pool
+        if pool.pages_free / pool.num_pages < self.degrade.headroom:
+            self._calm_ticks = 0
+            return False
+        self._calm_ticks += 1
+        if self._calm_ticks >= self.degrade.cooldown:
+            return self._transition(self.tier - 1)
+        return False
+
+    def _transition(self, tier: int) -> bool:
+        """Repack the engine's pool at the target tier (False when the
+        engine refuses — promotion without room for the live pages)."""
+        state = self.engine.apply_kv_plan(self.state, self._ladder[tier])
+        if state is None:
+            return False
+        self.state = state
+        self.transitions.append((self.clock, self.tier, tier))
+        self.tier = tier
+        self._stall_ticks = 0
+        self._calm_ticks = 0
+        return True
 
     # -- tick phase 2: the only blocking read ----------------------------------
     def harvest(self) -> None:
         """Read back the chunk ``dispatch`` launched and complete slots."""
         if not self._dispatched:
             return
+        chaos.fire("replica.harvest", tag=self.replica_id)
         self._dispatched = False
         eng, sched = self.engine, self.sched
         if self._pending_spec is not None:
@@ -149,7 +243,13 @@ class ServeSession:
                                           self.state.lengths))
         now = time.perf_counter()
         if self._chunk_t0 is not None:
-            self.gaps.append(now - self._chunk_t0)
+            gap = now - self._chunk_t0
+            self.gaps.append(gap)
+            if self.watchdog_s is not None and gap > self.watchdog_s:
+                # dispatch->harvest deadline overrun: an in-process stall
+                # cannot be preempted, so it is surfaced (ServeStats
+                # watchdog_trips) rather than aborted mid-read
+                self.watchdog_trips += 1
         for slot, req in sched.active_slots():
             if len_np[slot] > len(req.prompt):
                 sched.mark_first_token(slot, now)
@@ -243,9 +343,11 @@ class ServeSession:
             req = sched.next_ready(self.clock)
             if req is None:
                 break
-            if eng.pool is not None and not eng.pool.can_admit(
-                    eng.pool.pages_for(eng._slot_seq_budget(
-                        len(req.prompt), req.max_new_tokens))):
+            if eng.pool is not None and (
+                    chaos.deny("pool.oom", tag=self.replica_id)
+                    or not eng.pool.can_admit(
+                        eng.pool.pages_for(eng._slot_seq_budget(
+                            len(req.prompt), req.max_new_tokens)))):
                 # pool backpressure: not enough free/evictable pages for
                 # the worst case — retry after a slot drains
                 sched.requeue(req)
@@ -305,6 +407,29 @@ class ServeSession:
             req = self.sched.reserved_request(slot)
             self._insert(slot, req, task.as_prefill())
 
+    # -- teardown ------------------------------------------------------------
+    def abort(self) -> list:
+        """Tear down in-flight work leak-free and return the unfinished
+        requests (replica failover / exception unwind, DESIGN.md §15):
+        chunked-prefill prefix pins drop, every decoding slot's pages
+        release, and the scheduler drains — the caller re-drives the
+        survivors onto another session, where each re-prefills from its
+        original prompt (greedy tokens unchanged). Finished outputs stay
+        available through ``finalize``."""
+        eng, sched = self.engine, self.sched
+        for task in self.tasks.values():
+            if task.match is not None and eng.pool is not None:
+                eng.pool.unpin(task.match)
+        self.tasks.clear()
+        for slot, _req in sched.active_slots():
+            self.state = eng.release(self.state, slot)
+        survivors = sched.drain_unfinished()
+        self._dispatched = False
+        self._pending_spec = None
+        if eng.pool is not None:
+            eng.pool.check_invariants()
+        return survivors
+
     # -- wrap-up -------------------------------------------------------------
     def finalize(self):
         """Sorted outputs + ServeStats (call once, after ``done``)."""
@@ -322,6 +447,11 @@ class ServeSession:
         pool_kw = {}
         if eng.pool is not None:
             pool = eng.pool
+            pool.check_invariants()    # engine teardown: zero leaked pages
+            if self.tier:
+                # sequential serves on this engine restart at tier 0 (the
+                # next init_decode_state rebuilds the pool from kv_plan)
+                eng.kv_plan = self._ladder[0]
             pool_kw = dict(
                 pool_pages_total=pool.num_pages,
                 pool_pages_peak=pool.peak_pages,
@@ -357,11 +487,21 @@ class ServeSession:
                              if spec_m["proposed"] else 0.0),
             tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
                               if spec_m["rounds"] else 0.0),
-            tuned=eng.tuned, **pool_kw)
+            tuned=eng.tuned,
+            watchdog_trips=self.watchdog_trips,
+            degraded_steps=self.degraded_steps,
+            degrade_transitions=len(self.transitions),
+            kv_tier_steps=tuple(self.tier_steps), **pool_kw)
 
     def run(self):
-        """Drain the stream to completion (single-engine serve loop)."""
-        while not self.done:
-            self.dispatch()
-            self.harvest()
+        """Drain the stream to completion (single-engine serve loop). Any
+        failure first tears the session down leak-free (``abort``), then
+        propagates."""
+        try:
+            while not self.done:
+                self.dispatch()
+                self.harvest()
+        except BaseException:
+            self.abort()
+            raise
         return self.finalize()

@@ -1,0 +1,402 @@
+"""Fault-tolerant serving: chaos harness, failover, degradation
+(docs/DESIGN.md §15).
+
+Four layers:
+
+* the injector itself (serving/chaos.py): deterministic per-(site, tag)
+  occurrence schedules, shorthand parsing, scoped installation;
+* artifact integrity (checkpoint/ckpt.py): per-leaf crc32 stamped at
+  save, verified at load, bounded retry on transient reads, corruption
+  and truncation surfaced as ``ArtifactCorruptionError`` naming the leaf;
+* leak-free teardown: any failure inside the serve loop releases slots
+  and pool pages (``ServeSession.abort`` + ``check_invariants``);
+* recovery end-to-end: replica kill mid-stream re-drives onto survivors
+  with token-identical greedy output, ewq degradation spills KV tiers
+  deterministically under injected pool pressure, and a saturated
+  Poisson stream under compound faults loses zero requests and zero
+  pages.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import chaos
+from repro.serving.chaos import (ChaosInjector, FaultConfig, FaultRule,
+                                 InjectedFault, TransientFault)
+from repro.serving.engine import ServeEngine
+from repro.serving.pool import OutOfPages, PagedConfig
+from repro.serving.replica import FailoverConfig, ReplicaServe, _sum_tiers
+from repro.serving.scheduler import Request
+from repro.serving.session import DegradeConfig, ServeSession
+
+PC8 = PagedConfig(page_size=8, pool_pages=6)
+
+
+def _requests(cfg, n=6, prompt_len=8, max_new=8, arrival_every=2):
+    out = []
+    for i in range(n):
+        pr = np.array(jax.random.randint(jax.random.PRNGKey(10 + i),
+                                         (prompt_len,), 0, cfg.vocab_size,
+                                         dtype=jnp.int32))
+        out.append(Request(rid=i, prompt=pr, max_new_tokens=max_new,
+                           arrival_step=i * arrival_every))
+    return out
+
+
+def _assert_tokens_equal(outs_a, outs_b):
+    assert len(outs_a) == len(outs_b)
+    for a, b in zip(outs_a, outs_b):
+        assert a.rid == b.rid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def _assert_pool_clean(engine):
+    """Engine teardown: zero leaked pages (anything still held belongs to
+    the prefix cache, evictable on demand)."""
+    pool = engine.pool
+    if pool is None:
+        return
+    pool.check_invariants()
+    held = pool.pages_in_use
+    assert held == (pool.prefix.evictable(pool._ref)
+                    if pool.prefix is not None else 0), held
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+
+def test_occurrence_schedule_is_deterministic():
+    cfg = FaultConfig(rules=(FaultRule(site="pool.oom", at=(2, 5),
+                                       count=0),), seed=3)
+
+    def run():
+        inj = ChaosInjector(cfg)
+        return [inj.deny("pool.oom", tag=0) for _ in range(6)], inj.log
+
+    hits_a, log_a = run()
+    hits_b, log_b = run()
+    assert hits_a == hits_b == [False, True, False, False, True, False]
+    assert log_a == log_b == [("pool.oom", 0, 2), ("pool.oom", 0, 5)]
+
+
+def test_counters_are_per_site_and_tag():
+    inj = ChaosInjector(FaultConfig(rules=(
+        FaultRule(site="replica.dispatch", tag=1, at=(2,)),)))
+    # replica 0's occurrences never match a tag-1 rule
+    inj.fire("replica.dispatch", tag=0)
+    inj.fire("replica.dispatch", tag=0)
+    inj.fire("replica.dispatch", tag=1)        # occurrence 1 for tag 1
+    with pytest.raises(InjectedFault) as e:
+        inj.fire("replica.dispatch", tag=1)    # occurrence 2 -> fires
+    assert e.value.occurrence == 2 and e.value.tag == 1
+    assert not e.value.transient
+
+
+def test_count_budget_and_transient_flag():
+    inj = ChaosInjector(FaultConfig(rules=(
+        FaultRule(site="artifact.read", at=(1, 2, 3), count=2,
+                  transient=True),)))
+    for _ in range(2):
+        with pytest.raises(TransientFault):
+            inj.fire("artifact.read")
+    inj.fire("artifact.read")                  # budget spent: occ 3 passes
+
+
+def test_probabilistic_rules_draw_one_sample_per_call():
+    cfg = FaultConfig(rules=(FaultRule(site="pool.oom", prob=0.5,
+                                       count=0),), seed=7)
+
+    def seq():
+        inj = ChaosInjector(cfg)
+        return [inj.deny("pool.oom") for _ in range(32)]
+
+    assert seq() == seq()
+    assert any(seq()) and not all(seq())
+
+
+def test_parse_shorthands_and_unknown():
+    cfg = FaultConfig.parse("replica_fault,oom", seed=4)
+    assert cfg.seed == 4 and len(cfg.rules) == 2
+    assert {r.site for r in cfg.rules} == {"replica.dispatch", "pool.oom"}
+    with pytest.raises(ValueError, match="unknown chaos shorthand"):
+        FaultConfig.parse("nope")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultRule(site="replica.explode")
+    with pytest.raises(ValueError, match="unknown fault mode"):
+        FaultRule(site="pool.oom", mode="smolder")
+
+
+def test_module_level_sites_are_noops_when_inactive():
+    assert chaos.active() is None
+    chaos.fire("replica.dispatch", tag=0)      # must not raise
+    assert chaos.deny("pool.oom") is False
+    with chaos.chaos(FaultConfig(rules=(
+            FaultRule(site="pool.oom", at=(1,)),))) as inj:
+        assert chaos.active() is inj
+        assert chaos.deny("pool.oom") is True
+    assert chaos.active() is None
+
+
+# ---------------------------------------------------------------------------
+# artifact integrity
+# ---------------------------------------------------------------------------
+
+def _ckpt_tree():
+    from repro.quant.quantize import quantize_int8
+    return {"w": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+            "q": quantize_int8(jnp.ones((4, 128)) * 0.3)}
+
+
+def test_crc_detects_corrupted_leaf(tmp_path):
+    from repro.checkpoint import ckpt
+    tree = _ckpt_tree()
+    ckpt.save(tmp_path, 1, tree)
+    # the chaos corrupt site flips one byte of the first loaded payload
+    with chaos.chaos(FaultConfig(rules=(
+            FaultRule(site="artifact.corrupt", at=(1,)),))):
+        with pytest.raises(ckpt.ArtifactCorruptionError) as e:
+            ckpt.restore(tmp_path, tree)
+    assert e.value.leaf    # the error names the bad leaf
+    # without chaos the same checkpoint verifies clean
+    restored, _ = ckpt.restore(tmp_path, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_transient_read_fault_is_retried(tmp_path):
+    from repro.checkpoint import ckpt
+    tree = _ckpt_tree()
+    ckpt.save(tmp_path, 1, tree)
+    with chaos.chaos(FaultConfig.parse("artifact")) as inj:
+        restored, _ = ckpt.restore(tmp_path, tree)
+    assert inj.log and inj.log[0][0] == "artifact.read"
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_truncated_checkpoint_names_missing_leaf(tmp_path):
+    from repro.checkpoint import ckpt
+    tree = _ckpt_tree()
+    ckpt.save(tmp_path, 1, tree)
+    step_dir = next(p for p in tmp_path.iterdir() if p.is_dir())
+    for shard in sorted(step_dir.glob("shard_*.npz"))[:1]:
+        shard.unlink()
+    with pytest.raises(ckpt.ArtifactCorruptionError, match="truncated"):
+        ckpt.restore(tmp_path, tree)
+
+
+# ---------------------------------------------------------------------------
+# leak-free teardown
+# ---------------------------------------------------------------------------
+
+def test_session_abort_releases_slots_and_pages(trained):
+    cfg, model, params = trained["dense"]
+    eng = ServeEngine(model, params, max_seq=18, paged=PC8)
+    reqs = _requests(cfg, n=4, arrival_every=0)
+    sess = ServeSession(eng, reqs, num_slots=2, chunk=4)
+    sess.dispatch()
+    sess.harvest()
+    assert sess.sched.num_active > 0
+    survivors = sess.abort()
+    assert sess.sched.num_active == 0
+    # every submitted-but-unfinished request came back for re-drive
+    assert {r.rid for r in survivors} == {r.rid for r in reqs}
+    _assert_pool_clean(eng)
+
+
+def test_mid_decode_fault_leaves_pool_clean(trained):
+    """A permanent fault thrown from inside the serve loop must unwind
+    through ``abort``: no slot or page survives the wreck."""
+    cfg, model, params = trained["dense"]
+    eng = ServeEngine(model, params, max_seq=18, paged=PC8)
+    reqs = _requests(cfg, n=4, arrival_every=0)
+    with chaos.chaos(FaultConfig(rules=(
+            FaultRule(site="replica.dispatch", at=(3,)),))):
+        with pytest.raises(InjectedFault):
+            eng.serve(reqs, num_slots=2, chunk=4)
+    _assert_pool_clean(eng)
+
+
+def test_impossible_request_still_raises_out_of_pages(trained):
+    """Degradation must not mask a genuine sizing error: when the ladder
+    is exhausted the admission deadlock still raises."""
+    cfg, model, params = trained["dense"]
+    eng = ServeEngine(model, params, max_seq=64,
+                      paged=PagedConfig(page_size=8, pool_pages=1))
+    req = Request(rid=0, prompt=np.zeros(32, np.int32), max_new_tokens=32)
+    with pytest.raises(OutOfPages):
+        eng.serve([req], num_slots=1, chunk=4, degrade=DegradeConfig())
+    _assert_pool_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# replica failover + re-drive
+# ---------------------------------------------------------------------------
+
+def _two_replicas(model, params, max_seq=18):
+    return ReplicaServe([
+        ServeEngine(model, params, max_seq=max_seq, paged=PC8),
+        ServeEngine(model, params, max_seq=max_seq, paged=PC8)])
+
+
+def test_replica_kill_redrives_token_identical(trained):
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg)
+    ref_out, _ = _two_replicas(model, params).serve(reqs, num_slots=2,
+                                                    chunk=4)
+    rs = _two_replicas(model, params)
+    with chaos.chaos(FaultConfig.parse("replica_fault")):
+        out, stats = rs.serve(reqs, num_slots=2, chunk=4,
+                              failover=FailoverConfig())
+    _assert_tokens_equal(out, ref_out)
+    agg = stats.aggregate
+    assert agg.replica_restarts == 1
+    assert agg.redriven_requests > 0
+    assert agg.recovery_p95_s > 0.0
+    for eng in rs.engines:
+        _assert_pool_clean(eng)
+
+
+def test_transient_fault_retries_in_place(trained):
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg)
+    ref_out, _ = _two_replicas(model, params).serve(reqs, num_slots=2,
+                                                    chunk=4)
+    rs = _two_replicas(model, params)
+    with chaos.chaos(FaultConfig.parse("replica_transient")) as inj:
+        out, stats = rs.serve(reqs, num_slots=2, chunk=4,
+                              failover=FailoverConfig())
+    assert len(inj.log) == 2                   # both hiccups fired...
+    assert stats.aggregate.replica_restarts == 0   # ...neither quarantined
+    _assert_tokens_equal(out, ref_out)
+
+
+def test_failover_budget_exhaustion_raises(trained):
+    """The last replica standing must not quarantine silently."""
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg, n=4)
+    rs = _two_replicas(model, params)
+    rules = (FaultRule(site="replica.dispatch", tag=0, at=(1,)),
+             FaultRule(site="replica.dispatch", tag=1, at=(1,)))
+    with chaos.chaos(FaultConfig(rules=rules)):
+        with pytest.raises(RuntimeError, match="failover exhausted"):
+            rs.serve(reqs, num_slots=2, chunk=4, failover=FailoverConfig())
+    for eng in rs.engines:
+        _assert_pool_clean(eng)
+
+
+def test_without_failover_fault_propagates(trained):
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg, n=4)
+    rs = _two_replicas(model, params)
+    with chaos.chaos(FaultConfig.parse("replica_fault")):
+        with pytest.raises(InjectedFault):
+            rs.serve(reqs, num_slots=2, chunk=4)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation (ewq tier ladder)
+# ---------------------------------------------------------------------------
+
+def test_degrade_ladder_is_segment_aligned(trained):
+    cfg, model, params = trained["dense"]
+    eng = ServeEngine(model, params, max_seq=18, paged=PC8)
+    ladder = eng.degrade_ladder()
+    assert len(ladder) >= 2 and ladder[0] is eng.kv_plan
+    cuts = set(eng._kv_cuts())
+    for plan in ladder[1:]:
+        # precision constant within each parameter scan segment
+        for i in range(1, len(plan.precisions)):
+            if plan.precisions[i] != plan.precisions[i - 1]:
+                assert i in cuts, (i, plan.precisions)
+    assert all(p == "int4" for p in ladder[-1].precisions)
+
+
+def test_degradation_spills_deterministically_and_agrees(trained):
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg)
+
+    def run():
+        eng = ServeEngine(model, params, max_seq=18, paged=PC8)
+        with chaos.chaos(FaultConfig.parse("oom", seed=0)) as inj:
+            out, stats = eng.serve(reqs, num_slots=2, chunk=4,
+                                   degrade=DegradeConfig())
+        _assert_pool_clean(eng)
+        # sequential serves on this engine restart at tier 0
+        assert eng.kv_plan is eng.degrade_ladder()[0]
+        return out, stats, inj.log
+
+    ref_out, _ = ServeEngine(model, params, max_seq=18,
+                             paged=PC8).serve(reqs, num_slots=2, chunk=4)
+    out_a, stats_a, log_a = run()
+    out_b, stats_b, log_b = run()
+    assert log_a == log_b
+    assert stats_a.kv_tier_steps == stats_b.kv_tier_steps
+    assert stats_a.degrade_transitions == stats_b.degrade_transitions >= 1
+    assert stats_a.kv_tier_steps[1] > 0        # decode ran on the int8 tier
+    assert stats_a.degraded_steps > 0
+    _assert_tokens_equal(out_a, out_b)
+    # int8 cache noise on a trained smoke model cannot flip greedy tokens
+    _assert_tokens_equal(out_a, ref_out)
+
+
+def test_degradation_promotes_back_when_pressure_clears(trained):
+    cfg, model, params = trained["dense"]
+    reqs = _requests(cfg, n=6, arrival_every=4)
+    eng = ServeEngine(model, params, max_seq=18, paged=PC8)
+    degrade = DegradeConfig(cooldown=2, headroom=0.3)
+    with chaos.chaos(FaultConfig.parse("oom", seed=0)):
+        out, stats = eng.serve(reqs, num_slots=2, chunk=4, degrade=degrade)
+    assert len(out) == len(reqs)
+    assert stats.degrade_transitions >= 2      # the spill AND a promotion
+    assert stats.kv_tier_steps[0] > 0          # decode ran back at tier 0
+    _assert_pool_clean(eng)
+
+
+def test_unpaged_engine_ignores_degrade(trained):
+    cfg, model, params = trained["dense"]
+    eng = ServeEngine(model, params, max_seq=18)
+    assert eng.degrade_ladder() == []
+    out, stats = eng.serve(_requests(cfg, n=3), num_slots=2, chunk=4,
+                           degrade=DegradeConfig())
+    assert len(out) == 3 and stats.degrade_transitions == 0
+
+
+# ---------------------------------------------------------------------------
+# compound chaos under saturation
+# ---------------------------------------------------------------------------
+
+def test_saturated_poisson_with_faults_loses_nothing(trained):
+    """Kill a replica, deny admissions, and stall a tick under a Poisson
+    stream that saturates both replicas: every request completes exactly
+    once and every page is accounted for."""
+    from repro.serving.scheduler import synthetic_stream
+    cfg, model, params = trained["dense"]
+    reqs = synthetic_stream(12, vocab_size=cfg.vocab_size, prompt_len=8,
+                            max_new_tokens=8, arrival_rate=2.0,
+                            poisson=True)
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in reqs)
+    rs = ReplicaServe([
+        ServeEngine(model, params, max_seq=max_seq, paged=PC8),
+        ServeEngine(model, params, max_seq=max_seq, paged=PC8)])
+    with chaos.chaos(FaultConfig.parse("replica_fault,oom,stall", seed=0)):
+        out, stats = rs.serve(reqs, num_slots=2, chunk=4,
+                              failover=FailoverConfig(),
+                              degrade=DegradeConfig())
+    assert [o.rid for o in out] == sorted(r.rid for r in reqs)
+    agg = stats.aggregate
+    assert agg.replica_restarts == 1 and agg.redriven_requests > 0
+    assert sum(agg.kv_tier_steps[1:]) > 0      # pressure forced a spill
+    for eng in rs.engines:
+        _assert_pool_clean(eng)
+
+
+def test_sum_tiers_handles_ragged_histograms():
+    assert _sum_tiers([(4, 2), (1,), ()]) == (5, 2)
+    assert _sum_tiers([]) == ()
