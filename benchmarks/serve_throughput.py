@@ -68,6 +68,12 @@ Two sweeps over briefly-trained smoke-scale models:
    stay 1.0) and ewq graceful degradation under injected pool exhaustion
    (degraded vs nominal tok/s, KV tier histogram, zero lost requests).
 
+10. **Observability sweep** (docs/DESIGN.md §16) — the same
+    continuous-batching stream with no telemetry sinks installed vs fully
+    traced (span tracer + metrics registry): traced overhead must stay
+    under 2%, and the disabled hook (one ``None`` check per site) is
+    microbenchmarked directly to show the off path costs ~nothing.
+
 Smoke-scale (CPU) defaults; run directly, via ``benchmarks/run.py serve``,
 or at reduced size for CI: ``python -m benchmarks.serve_throughput --smoke``.
 """
@@ -1111,6 +1117,84 @@ def _fault_rows(max_new: int, reps: int, steps: int | None,
     return rows
 
 
+def _obs_rows(max_new: int, reps: int, steps: int | None,
+              summary: dict) -> list[tuple]:
+    """Observability overhead (docs/DESIGN.md §16): the same
+    continuous-batching stream untraced (no sinks installed — the
+    production default) vs fully traced (span tracer + metrics registry
+    through ``obs.install``). The rounds interleave off/on so machine
+    drift biases neither; traced overhead is asserted < 2%. A separate
+    microbenchmark times the disabled hook itself — one module-global
+    ``None`` check — to pin the off-path cost near zero."""
+    from repro import obs
+    cfg, model, params = common.get_trained(ARCH, steps=steps)
+    requests = synthetic_stream(
+        NUM_REQUESTS, vocab_size=cfg.vocab_size, prompt_len=PROMPT_LEN,
+        max_new_tokens=max_new, arrival_rate=ARRIVAL_RATE, seed=0)
+    max_seq = max(len(r.prompt) + r.max_new_tokens for r in requests)
+    engine = ServeEngine(model, params, max_seq=max_seq)
+    engine.serve(requests[:2], num_slots=NUM_SLOTS, chunk=CHUNK)   # warm
+
+    best_off = best_on = float("inf")
+    tracer = registry = stats = None
+    for _ in range(max(reps, 3)):
+        t0 = time.perf_counter()
+        _, st_off = engine.serve(requests, num_slots=NUM_SLOTS, chunk=CHUNK)
+        best_off = min(best_off, time.perf_counter() - t0)
+
+        tr, reg = obs.Tracer(), obs.MetricsRegistry()
+        prev = obs.install(tr, reg, None)
+        try:
+            t0 = time.perf_counter()
+            _, st_on = engine.serve(requests, num_slots=NUM_SLOTS,
+                                    chunk=CHUNK)
+            dt = time.perf_counter() - t0
+        finally:
+            obs.install(*prev)
+        assert tr.open_spans() == [], \
+            f"traced serve leaked open spans: {tr.open_spans()}"
+        if dt < best_on:
+            best_on, tracer, registry, stats = dt, tr, reg, st_on
+
+    gen = max(stats.generated_tokens, 1)
+    tps_off, tps_on = gen / best_off, gen / best_on
+    overhead = best_on / best_off - 1.0
+    events = sum(tracer.counts().values())
+    families = len(registry.names())
+
+    # disabled-hook microcost: with no sinks installed every obs call is
+    # a module-global read plus a None check — the per-site price the
+    # serving hot loop pays when telemetry is off
+    N = 100_000
+    t0 = time.perf_counter()
+    for _ in range(N):
+        obs.instant("bench/noop", 0)
+        obs.count("bench_noop_total", 1)
+    hook_ns = (time.perf_counter() - t0) / (2 * N) * 1e9
+
+    rows = [
+        ("serve/obs/off/stream", best_off / gen * 1e6,
+         f"{tps_off:.1f} tok/s no telemetry sinks installed "
+         f"(the production default)"),
+        ("serve/obs/on/stream", best_on / gen * 1e6,
+         f"{tps_on:.1f} tok/s traced+metered ({overhead:+.2%} vs off; "
+         f"{events} trace events, {families} metric families, "
+         f"0 open spans)"),
+        ("serve/obs/hook-disabled", hook_ns / 1e3,
+         f"{hook_ns:.0f} ns per disabled obs call (one None check; "
+         f"{2 * N} calls timed)"),
+    ]
+    assert overhead < 0.02, \
+        f"traced serve overhead {overhead:.2%} exceeds the 2% budget"
+    summary["obs"] = {
+        "tok_s_off": tps_off, "tok_s_on": tps_on,
+        "traced_overhead": overhead,
+        "trace_events": events, "metric_families": families,
+        "disabled_hook_ns": hook_ns,
+    }
+    return rows
+
+
 def run(smoke: bool = False) -> list[tuple]:
     max_new = 8 if smoke else MAX_NEW
     # best-of-3 even in smoke: the fused/tuned delta rows race paths that
@@ -1119,7 +1203,7 @@ def run(smoke: bool = False) -> list[tuple]:
     steps = SMOKE_TRAIN_STEPS if smoke else None
     summary: dict = {"variants": {}, "families": {}, "mesh": {},
                      "kv_cache": {}, "fused": {}, "spec": {}, "paged": {},
-                     "slo": {}, "dp": {}, "fault": {}}
+                     "slo": {}, "dp": {}, "fault": {}, "obs": {}}
     # smoke (CI): one quantized variant through stepwise/fused/stream so the
     # continuous-batching path is exercised, then the full family sweep
     variants = ("4bit/8bit",) if smoke else VARIANTS
@@ -1133,6 +1217,7 @@ def run(smoke: bool = False) -> list[tuple]:
     rows += _slo_rows(max_new, reps, steps, summary)
     rows += _dp_rows(max_new, reps, steps, summary)
     rows += _fault_rows(max_new, reps, steps, summary)
+    rows += _obs_rows(max_new, reps, steps, summary)
     common.save_json("serve_throughput.json", summary)
     return rows
 

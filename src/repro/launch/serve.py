@@ -187,6 +187,21 @@ def main():
                          "chaos run, and assert token-identical greedy "
                          "output (every request completes despite the "
                          "injected faults)")
+    # serving telemetry (docs/DESIGN.md §16)
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request/engine span tracing for the "
+                         "measured serve as Chrome trace_event JSON "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the serve metrics registry as Prometheus "
+                         "text exposition (plus a stable .json snapshot "
+                         "next to it)")
+    ap.add_argument("--profile-steps", default=None,
+                    help="A:B — arm a jax.profiler capture window over "
+                         "decode steps [A, B) and per-chunk device-time "
+                         "fences (device vs host-gap attribution)")
+    ap.add_argument("--profile-dir", default="/tmp/repro-profile",
+                    help="output dir for --profile-steps traces")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -238,6 +253,10 @@ def main():
     if args.chaos and not args.num_requests:
         raise SystemExit("--chaos injects into the serve loop; set "
                          "--num-requests")
+    if ((args.trace_out or args.metrics_out or args.profile_steps)
+            and not args.num_requests):
+        raise SystemExit("--trace-out/--metrics-out/--profile-steps "
+                         "instrument the serve loop; set --num-requests")
 
     degrade = None
     if args.degrade_policy != "off":
@@ -404,6 +423,22 @@ def main():
                                             seed=args.chaos_seed))
             chaos_mod.install(injector)
             print(f"chaos: injecting {args.chaos} (seed {args.chaos_seed})")
+        # serving telemetry (docs/DESIGN.md §16): sinks install AFTER any
+        # parity baseline so only the measured serve is traced, and
+        # uninstall before the parity re-serves below
+        tracer = metrics_reg = prof = None
+        obs_on = bool(args.trace_out or args.metrics_out
+                      or args.profile_steps)
+        if obs_on:
+            from repro import obs
+            if args.trace_out:
+                tracer = obs.Tracer()
+            if args.metrics_out:
+                metrics_reg = obs.MetricsRegistry()
+            if args.profile_steps:
+                prof = obs.ProfileHooks.parse(args.profile_steps,
+                                              trace_dir=args.profile_dir)
+            obs.install(tracer, metrics_reg, prof)
         t0 = time.perf_counter()
         try:
             if replica is not None:
@@ -416,47 +451,45 @@ def main():
         finally:
             if injector is not None:
                 chaos_mod.install(None)
+            if obs_on:
+                if prof is not None:
+                    prof.stop()
+                obs.install(None, None, None)
         dt = time.perf_counter() - t0
-        print(f"served {len(outputs)} requests in {dt:.1f}s "
-              f"({stats.generated_tokens/dt:.1f} tok/s): "
-              f"{stats.num_chunks} chunks x {args.chunk} steps, "
-              f"occupancy {stats.occupancy:.1%}, "
-              f"{stats.admissions} mid-run admissions, "
-              f"ttft p50 {stats.ttft_p50_s*1e3:.0f}ms / "
-              f"p95 {stats.ttft_p95_s*1e3:.0f}ms, "
-              f"tpot p50 {stats.tpot_p50_s*1e3:.1f}ms")
-        if args.arrival_rate or slo is not None:
-            print(f"queueing: delay p50 {stats.queue_delay_p50_s*1e3:.0f}ms "
-                  f"/ p95 {stats.queue_delay_p95_s*1e3:.0f}ms, "
-                  f"{stats.preemptions} preemptions, "
-                  f"{stats.timeouts} timeouts, {stats.cancelled} cancelled, "
-                  f"decode gap p95 {stats.decode_gap_p95_s*1e3:.1f}ms / "
-                  f"max {stats.decode_gap_max_s*1e3:.1f}ms")
-        if args.prefill_chunk:
-            print(f"chunked prefill: {stats.prefill_chunks} interleaved "
-                  f"chunks of {args.prefill_chunk} tokens")
-        if rstats is not None:
-            occ = ", ".join(f"r{i}: {n} reqs, occ {o:.1%}"
-                            for i, (n, o) in enumerate(
-                                zip(rstats.assignments,
-                                    rstats.occupancy_per_replica)))
-            print(f"dp replicas: {rstats.replicas} x "
-                  f"{dict(replica.engines[0].mesh.shape)} ({occ})")
-        if args.chaos or degrade is not None or args.watchdog_ms:
-            print(f"fault tolerance: {stats.replica_restarts} replica "
-                  f"restarts, {stats.redriven_requests} requests re-driven, "
-                  f"recovery p95 {stats.recovery_p95_s*1e3:.1f}ms, "
-                  f"{stats.watchdog_trips} watchdog trips")
-            tiers = ", ".join(f"tier{i}: {n} steps"
-                              for i, n in enumerate(stats.kv_tier_steps))
-            print(f"degradation: {stats.degrade_transitions} transitions, "
-                  f"{stats.degraded_steps} degraded steps "
-                  f"({tiers or 'no tier ladder'})")
-            if injector is not None and injector.log:
-                fired = ", ".join(
-                    f"{site}#{occ}" + (f"[r{tag}]" if tag is not None else "")
-                    for site, tag, occ in injector.log)
-                print(f"chaos fired: {fired}")
+        from repro.obs import render as obs_render
+        for line in obs_render.serve_report(
+                stats, wall_s=dt, num_requests=len(outputs),
+                chunk=args.chunk,
+                queueing=bool(args.arrival_rate or slo is not None),
+                prefill_chunk=args.prefill_chunk,
+                replicas=(dict(replicas=rstats.replicas,
+                               mesh_shape=dict(
+                                   replica.engines[0].mesh.shape),
+                               assignments=rstats.assignments,
+                               occupancy=rstats.occupancy_per_replica)
+                          if rstats is not None else None),
+                fault=bool(args.chaos or degrade is not None
+                           or args.watchdog_ms),
+                chaos_fired=(injector.log if injector is not None
+                             else None),
+                spec=spec is not None,
+                paged=(dict(num_slots=args.num_slots,
+                            kv_bytes_per_slot=engine.kv_bytes_per_slot(),
+                            max_seq=max_seq)
+                       if args.paged else None)):
+            print(line)
+        if tracer is not None:
+            tracer.write(args.trace_out)
+            print(f"trace: {len(tracer.events)} events -> {args.trace_out} "
+                  f"({len(tracer.open_spans())} open spans)")
+        if metrics_reg is not None:
+            metrics_reg.write_prometheus(args.metrics_out)
+            metrics_reg.write_json(args.metrics_out + ".json")
+            print(f"metrics: {len(metrics_reg.names())} families -> "
+                  f"{args.metrics_out} (+ .json snapshot)")
+        if prof is not None and prof.windows:
+            print(f"profiler: {prof.windows} capture window(s) -> "
+                  f"{prof.trace_dir}")
         if args.check_chaos_parity:
             import numpy as np
             agree = (len(chaos_ref) == len(outputs)
@@ -481,25 +514,6 @@ def main():
             if not agree:
                 raise SystemExit("DP x TP greedy output DIVERGED from the "
                                  "single full-mesh engine")
-        if spec is not None:
-            print(f"spec: acceptance {stats.acceptance_rate:.1%} "
-                  f"({stats.draft_accepted}/{stats.draft_proposed}), "
-                  f"{stats.tokens_per_round:.2f} tokens/round over "
-                  f"{stats.spec_rounds} rounds")
-        if args.paged:
-            dense_resv = args.num_slots * engine.kv_bytes_per_slot()
-            print(f"paged pool: peak {stats.pool_pages_peak}"
-                  f"/{stats.pool_pages_total} pages x "
-                  f"{stats.pool_page_size} tokens, "
-                  f"prefix hits {stats.prefix_hits} "
-                  f"({stats.prefix_hit_tokens} prompt tokens skipped, "
-                  f"{stats.prefix_hit_rate:.1%} hit rate), "
-                  f"cow copies {stats.cow_copies}")
-            print(f"kv memory: peak {stats.kv_bytes_peak/2**20:.2f} MiB "
-                  f"paged vs {dense_resv/2**20:.2f} MiB dense reservation "
-                  f"({args.num_slots} slots x "
-                  f"{engine.kv_bytes_per_slot()/2**20:.2f} MiB at "
-                  f"max_seq={max_seq})")
         if args.check_paged_parity:
             import numpy as np
             base = ServeEngine(model, engine.params, max_seq=max_seq,

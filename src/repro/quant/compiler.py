@@ -216,6 +216,21 @@ def degrade_kv_ladder(cfg: ModelConfig, plan: Optional[QuantPlan],
     return tiers
 
 
+def kv_tier_labels(ladder: Sequence[Optional[KVPlan]]) -> list[str]:
+    """Human precision label per degradation tier ("bf16" / "int8" /
+    "mixed" / ...), used as the ``precision`` metric label on
+    ``serve_kv_tier_steps_total`` so a dashboard shows which cache
+    precision the degraded steps actually ran at."""
+    labels = []
+    for kv in ladder:
+        if kv is None:
+            labels.append("bf16")
+            continue
+        uniq = sorted(set(kv.precisions))
+        labels.append(uniq[0] if len(uniq) == 1 else "mixed")
+    return labels
+
+
 @dataclasses.dataclass
 class CompiledPlan:
     """A QuantPlan lowered onto one model's parameters.

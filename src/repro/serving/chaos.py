@@ -45,6 +45,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 SITES = (
     "replica.dispatch",
     "replica.harvest",
@@ -194,6 +196,11 @@ class ChaosInjector:
                 hit = rule
         if hit is not None:
             self.log.append((site, tag, occ))
+            obs.instant("chaos/fire", tag if isinstance(tag, int) else 0,
+                        args={"site": site, "occurrence": occ})
+            obs.count("serve_chaos_faults_total", 1,
+                      "chaos-injected faults fired, by site",
+                      site=site, replica=str(tag))
         return hit
 
     def fire(self, site: str, tag=None) -> None:

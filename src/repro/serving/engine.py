@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.policy import QuantPlan
 from repro.models.model import Model
 from repro.serving import batch as B
@@ -171,6 +172,20 @@ class ServeStats:
     degraded_steps: int = 0        # decode steps run below tier 0
     degrade_transitions: int = 0   # KV tier changes (spills + promotions)
     kv_tier_steps: tuple = ()      # decode steps per degradation tier
+    # the registry this snapshot was reconstructed from (docs/DESIGN.md
+    # §16): carries the per-priority/per-tier label breakdowns the flat
+    # fields above aggregate away. Excluded from ==/repr so stats stay
+    # comparable across runs.
+    registry: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @classmethod
+    def from_registry(cls, reg) -> "ServeStats":
+        """Snapshot VIEW over a published metrics registry — the field
+        mapping lives in ``obs/serve_metrics.py`` (single source of
+        truth; the obs tests assert two-way coverage)."""
+        from repro.obs.serve_metrics import stats_fields
+        return cls(registry=reg, **stats_fields(reg))
 
 
 class ServeEngine:
@@ -334,6 +349,9 @@ class ServeEngine:
                      mesh=mesh, **kw)
         engine.plan = compiled.plan
         engine._draft_stamp = compiled.draft   # validated by _ensure_draft
+        obs.instant("engine/from_artifact",
+                    args={"directory": directory,
+                          "family": model.cfg.family})
         return engine
 
     # -- prefill -------------------------------------------------------------

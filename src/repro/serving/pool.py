@@ -35,6 +35,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 
 class OutOfPages(RuntimeError):
     """The pool cannot supply the pages a request needs (admission-time
@@ -184,6 +186,9 @@ class PoolSession:
         self._ref = np.zeros(num_pages + 1, np.int64)  # [0] = dump, unused
         self._slot_pages: dict[int, list[int]] = {}
         self.prefix = PrefixCache() if prefix_sharing else None
+        # trace pid (docs/DESIGN.md §16): the owning session stamps its
+        # replica id so prefix-hit / COW instants land on its process
+        self.pid = 0
         # stats
         self.peak_pages = 0
         self.cow_copies = 0
@@ -286,6 +291,7 @@ class PoolSession:
         if m.donor is not None:
             self._decref(m.donor)   # its rows are copied, not mapped
             self.cow_copies += 1
+            obs.instant("pool/cow-copy", self.pid, args={"slot": slot})
         row = np.zeros(self.n_log, np.int32)
         wrow = np.zeros(self.n_log, np.int32)
         row[:n_shared] = m.full_ids          # pinned refs transfer to slot
@@ -297,6 +303,8 @@ class PoolSession:
         if m.hit:
             self.prefix_hits += 1
             self.prefix_hit_tokens += m.hit
+            obs.instant("pool/prefix-hit", self.pid,
+                        args={"slot": slot, "tokens": m.hit})
         self.peak_pages = max(self.peak_pages, self.pages_in_use)
         return row, wrow
 
@@ -352,6 +360,7 @@ class PoolSession:
         if self.prefix is not None:
             ns.prefix = self.prefix.remap(perm)
         ns.peak_pages = self.peak_pages
+        ns.pid = self.pid
         ns.cow_copies = self.cow_copies
         ns.prefix_hits = self.prefix_hits
         ns.prefix_hit_tokens = self.prefix_hit_tokens

@@ -33,6 +33,7 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.serving import chaos
 from repro.serving.engine import ServeEngine, ServeStats
 from repro.serving.pool import OutOfPages
@@ -139,6 +140,7 @@ class ReplicaServe:
         alive = [True] * len(sessions)
         restarts, redriven = 0, 0
         recovery: list[float] = []
+        failovers: list[tuple] = []    # (replica, recovery_s, orphans)
 
         def tick(i: int, phase: str) -> bool:
             """One session phase under the failover policy; False means
@@ -168,6 +170,8 @@ class ReplicaServe:
 
         def quarantine(i: int) -> None:
             nonlocal restarts, redriven
+            tr = obs.tracer()
+            span_t0 = tr.now_us() if tr is not None else 0.0
             t0 = time.perf_counter()
             orphans = sessions[i].abort()
             alive[i] = False
@@ -188,7 +192,20 @@ class ReplicaServe:
                     req, arrival_step=sessions[j].clock))
                 load[j] += len(req.prompt) + req.max_new_tokens
                 redriven += 1
-            recovery.append(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            recovery.append(dt)
+            failovers.append((i, dt, len(orphans)))
+            # failover telemetry goes to the INSTALLED sinks directly —
+            # it is a router-level event no per-session publish covers
+            # (docs/DESIGN.md §16)
+            if tr is not None:
+                tr.complete("replica/failover", span_t0, i,
+                            args={"orphans": len(orphans),
+                                  "survivors": len(targets)})
+            obs.count("serve_replica_restarts_total", 1, replica=str(i))
+            obs.count("serve_redriven_requests_total", len(orphans),
+                      replica=str(i))
+            obs.observe("serve_recovery_seconds", dt, replica=str(i))
 
         while any(alive[i] and not s.done
                   for i, s in enumerate(sessions)):
@@ -206,13 +223,40 @@ class ReplicaServe:
             _merge_stats(outputs, per_replica),
             replica_restarts=restarts, redriven_requests=redriven,
             recovery_p95_s=(float(np.percentile(recovery, 95))
-                            if recovery else 0.0))
+                            if recovery else 0.0),
+            registry=_merge_registries(per_replica, failovers))
         return outputs, ReplicaStats(
             replicas=len(self.engines),
             aggregate=aggregate,
             per_replica=per_replica,
             assignments=[len(b) for b in buckets],
             occupancy_per_replica=[st.occupancy for st in per_replica])
+
+
+def _merge_registries(per_replica: list[ServeStats],
+                      failovers: list[tuple]):
+    """Roll the per-replica run registries into one, then add the
+    router-level failover events no per-session publish covers. The
+    result rides on the aggregate's ``registry`` field, so the DP
+    exposition carries per-replica labels."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.serve_metrics import SCHEMA
+    merged = MetricsRegistry()
+    for st in per_replica:
+        if st.registry is not None:
+            merged.merge(st.registry)
+    for i, dt, orphans in failovers:
+        r = str(i)
+        merged.counter("serve_replica_restarts_total",
+                       SCHEMA["serve_replica_restarts_total"][1]
+                       ).inc(1, replica=r)
+        merged.counter("serve_redriven_requests_total",
+                       SCHEMA["serve_redriven_requests_total"][1]
+                       ).inc(orphans, replica=r)
+        merged.histogram("serve_recovery_seconds",
+                         SCHEMA["serve_recovery_seconds"][1]
+                         ).observe(dt, replica=r)
+    return merged
 
 
 def _merge_stats(outputs: list, per_replica: list[ServeStats]) -> ServeStats:

@@ -33,6 +33,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass(frozen=True)
 class SLOConfig:
@@ -105,6 +107,9 @@ class Scheduler:
 
     def __init__(self, num_slots: int):
         self.num_slots = num_slots
+        # trace pid (docs/DESIGN.md §16): the owning session stamps its
+        # replica id so request-lifecycle spans land on the right process
+        self.pid = 0
         # future arrivals, by simulated arrival step
         self._arrivals: list[tuple[int, int, Request]] = []
         # arrived and admissible, by (priority, arrival, fifo seq)
@@ -146,6 +151,10 @@ class Scheduler:
         self._seq += 1
         heapq.heappush(self._ready,
                        (req.priority, req.arrival_step, self._seq, req))
+        # every path into the ready queue (arrival, requeue, preemption,
+        # failed insert) opens/reopens the request's "queued" span
+        obs.request_phase(self.pid, req.rid, "queued",
+                          args={"priority": req.priority})
 
     def drop_reason(self, req: Request, clock: int,
                     queued: bool = False) -> Optional[str]:
@@ -190,6 +199,8 @@ class Scheduler:
 
     def _finish_unadmitted(self, req: Request, reason: str,
                            clock: int) -> None:
+        obs.request_done(self.pid, req.rid, "finish",
+                         args={"reason": reason})
         self._count_drop(reason)
         self._ready_wall.pop(req.rid, None)
         self.finished.append(RequestOutput(
@@ -259,6 +270,8 @@ class Scheduler:
         assert self._slots[slot] is None and slot not in self._reserved, \
             f"slot {slot} busy"
         wall = time.perf_counter() if wall is None else wall
+        obs.request_phase(self.pid, req.rid, "prefill",
+                          args={"slot": slot})
         self._reserved[slot] = req
         self._admitted_step[req.rid] = clock
         self._admitted_wall[req.rid] = wall
@@ -273,6 +286,8 @@ class Scheduler:
         req = self._reserved.pop(slot)
         assert self._slots[slot] is None, f"slot {slot} busy"
         self._slots[slot] = req
+        obs.request_phase(self.pid, req.rid, "decode",
+                          args={"slot": slot})
 
     def assign(self, slot: int, req: Request, clock: int,
                wall: Optional[float] = None) -> None:
@@ -293,7 +308,10 @@ class Scheduler:
             # full wait, not just the tail after this failed attempt
             if delay is not None and delay[1] is not None and wall is not None:
                 self._ready_wall[req.rid] = wall - delay[1]
-            self._push_ready(req)
+            self._push_ready(req)  # reopens the queued span
+        else:
+            obs.request_done(self.pid, req.rid, "finish",
+                             args={"reason": "unreserved"})
         return req
 
     def reserved_slots(self) -> list[tuple[int, Request]]:
@@ -306,6 +324,8 @@ class Scheduler:
         """A prefilling request was cancelled / deadlined: finalize it
         with no generated tokens (the caller unpins any prefix match)."""
         req = self._reserved.pop(slot)
+        obs.request_done(self.pid, req.rid, "finish",
+                         args={"reason": reason})
         self._count_drop(reason)
         delay = self._queue_delay.pop(req.rid, (None, None))
         self.finished.append(RequestOutput(
@@ -337,7 +357,9 @@ class Scheduler:
             self._ready_wall[req.rid] = time.perf_counter()
         self._preempt_count[req.rid] = self._preempt_count.get(req.rid, 0) + 1
         self.preemptions += 1
-        self._push_ready(req)
+        obs.request_done(self.pid, req.rid, "preempt",
+                         args={"slot": slot})
+        self._push_ready(req)      # reopens the queued span
         return req
 
     def preempt_victim(self, priority: int) -> Optional[int]:
@@ -372,6 +394,8 @@ class Scheduler:
         req = self._slots[slot]
         assert req is not None
         self._slots[slot] = None
+        obs.request_done(self.pid, req.rid, "finish",
+                         args={"reason": finish_reason})
         if finish_reason in ("cancelled", "timeout", "deadline"):
             self._count_drop(finish_reason)
         admit_wall = self._admitted_wall.pop(req.rid, None)
@@ -426,6 +450,10 @@ class Scheduler:
         self._ready = []
         self._reserved.clear()
         self._slots = [None] * self.num_slots
+        for req in out:
+            # closes whatever phase span is open; re-drive opens a fresh
+            # queued span on the surviving replica's pid
+            obs.request_done(self.pid, req.rid, "redrive")
         for req in out:
             for d in (self._ready_wall, self._admitted_step,
                       self._admitted_wall, self._first_token_wall,

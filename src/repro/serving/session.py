@@ -38,6 +38,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.serving import chaos
 from repro.serving.pool import OutOfPages
 from repro.serving.scheduler import Request, Scheduler, SLOConfig
@@ -89,6 +90,19 @@ class ServeSession:
         self.slo = slo
         self.spec = engine.spec is not None
         self.sched = Scheduler(num_slots)
+        # telemetry (docs/DESIGN.md §16): stamp the replica id on every
+        # emitter BEFORE the first submit so request spans / pool instants
+        # land on this replica's trace process from the start
+        self.replica_id = replica_id
+        self.sched.pid = replica_id
+        if engine.pool is not None:
+            engine.pool.pid = replica_id
+        _tr = obs.tracer()
+        if _tr is not None:
+            _tr.set_process_name(replica_id, f"replica{replica_id}")
+        self.device_times: list[float] = []   # fenced device s per chunk
+        self.host_gaps: list[float] = []      # gap - device per chunk
+        self._device_s: Optional[float] = None
         for r in requests:
             if self.spec:
                 engine._spec_budget_check(len(r.prompt), r.max_new_tokens)
@@ -116,7 +130,6 @@ class ServeSession:
         self._pending_spec = None
         self._dispatched = False
         # fault tolerance + graceful degradation (docs/DESIGN.md §15)
-        self.replica_id = replica_id
         self.watchdog_s = watchdog_s
         self.watchdog_trips = 0
         self.degrade = degrade if engine.pool is not None else None
@@ -138,6 +151,20 @@ class ServeSession:
     def dispatch(self) -> None:
         """Admissions, SLO enforcement, one interleaved prefill chunk, and
         the next decode-chunk launch. Never blocks on device results."""
+        pf = obs.profile()
+        if pf is not None:
+            pf.tick(self.clock)
+        tr = obs.tracer()
+        if tr is None:
+            self._dispatch()
+            return
+        tr.begin("tick/dispatch", self.replica_id)
+        try:
+            self._dispatch()
+        finally:
+            tr.end("tick/dispatch", self.replica_id)
+
+    def _dispatch(self) -> None:
         eng, sched = self.engine, self.sched
         self._dispatched = False
         # chaos sites fire BEFORE any state mutation, so a transient fault
@@ -182,6 +209,14 @@ class ServeSession:
         else:
             fn = self.fn if not self.spec else eng._chunk_fn(self.chunk)
             self.state = fn(eng.params, self.state)
+        pf = obs.profile()
+        if pf is not None and pf.device_fences:
+            # fence right after the async launch: launch -> ready is the
+            # device-compute share of this chunk; harvest subtracts it
+            # from the dispatch->harvest gap to expose the host-side
+            # scheduling overhead (docs/DESIGN.md §16)
+            jax.block_until_ready(self.state.tokens)
+            self._device_s = time.perf_counter() - self._chunk_t0
         self.clock += self.chunk
         self.tier_steps[self.tier] += self.chunk
         if self.tier:
@@ -217,10 +252,18 @@ class ServeSession:
     def _transition(self, tier: int) -> bool:
         """Repack the engine's pool at the target tier (False when the
         engine refuses — promotion without room for the live pages)."""
+        tr = obs.tracer()
+        t0 = tr.now_us() if tr is not None else 0.0
         state = self.engine.apply_kv_plan(self.state, self._ladder[tier])
         if state is None:
             return False
         self.state = state
+        if tr is not None:
+            tr.complete("engine/apply_kv_plan", t0, self.replica_id,
+                        args={"from_tier": self.tier, "to_tier": tier})
+        obs.instant("degrade/transition", self.replica_id,
+                    args={"from_tier": self.tier, "to_tier": tier,
+                          "clock": self.clock})
         self.transitions.append((self.clock, self.tier, tier))
         self.tier = tier
         self._stall_ticks = 0
@@ -230,21 +273,51 @@ class ServeSession:
     # -- tick phase 2: the only blocking read ----------------------------------
     def harvest(self) -> None:
         """Read back the chunk ``dispatch`` launched and complete slots."""
+        tr = obs.tracer()
+        if tr is None:
+            self._harvest()
+            return
+        tr.begin("tick/harvest", self.replica_id)
+        try:
+            self._harvest()
+        finally:
+            tr.end("tick/harvest", self.replica_id)
+
+    def _harvest(self) -> None:
         if not self._dispatched:
             return
         chaos.fire("replica.harvest", tag=self.replica_id)
         self._dispatched = False
         eng, sched = self.engine, self.sched
         if self._pending_spec is not None:
-            for k_, v in self._pending_spec._asdict().items():
-                self.spec_m[k_] += int(v)
+            delta = {k_: int(v)
+                     for k_, v in self._pending_spec._asdict().items()}
+            for k_, v in delta.items():
+                self.spec_m[k_] += v
             self._pending_spec = None
+            obs.instant("spec/round", self.replica_id, obs.DECODE_TRACK,
+                        args=delta)
         done_np, len_np = jax.device_get((self.state.done,
                                           self.state.lengths))
         now = time.perf_counter()
         if self._chunk_t0 is not None:
             gap = now - self._chunk_t0
             self.gaps.append(gap)
+            tr = obs.tracer()
+            if tr is not None or self._device_s is not None:
+                args = {"steps": self.chunk, "tier": self.tier,
+                        "tuned": eng.tuned}
+                if self._device_s is not None:
+                    host = max(0.0, gap - self._device_s)
+                    self.device_times.append(self._device_s)
+                    self.host_gaps.append(host)
+                    args["device_ms"] = round(self._device_s * 1e3, 3)
+                    args["host_gap_ms"] = round(host * 1e3, 3)
+                    self._device_s = None
+                if tr is not None:
+                    tr.complete("decode/chunk", tr.now_us() - gap * 1e6,
+                                self.replica_id, obs.DECODE_TRACK,
+                                args=args)
             if self.watchdog_s is not None and gap > self.watchdog_s:
                 # dispatch->harvest deadline overrun: an in-process stall
                 # cannot be preempted, so it is surfaced (ServeStats
@@ -432,19 +505,23 @@ class ServeSession:
 
     # -- wrap-up -------------------------------------------------------------
     def finalize(self):
-        """Sorted outputs + ServeStats (call once, after ``done``)."""
+        """Sorted outputs + ServeStats (call once, after ``done``).
+
+        The run's numbers publish into a fresh per-run registry
+        (``obs/serve_metrics.py``) and ``ServeStats`` is reconstructed as
+        a snapshot VIEW over it — one source of truth for the CLI report,
+        the benchmark rows and the Prometheus/JSON expositions. When a
+        process-wide registry is installed (``obs.metrics()``) the run
+        merges into it, so sequential/parallel serves accumulate with
+        Prometheus counter semantics."""
+        from repro.obs.metrics import MetricsRegistry
+        from repro.obs.serve_metrics import publish_session
+        from repro.quant.compiler import kv_tier_labels
         from repro.serving.engine import ServeStats
+        from repro.serving.spec.loop import obs_labels
         eng, sched = self.engine, self.sched
         outputs = sorted(sched.finished, key=lambda o: o.rid)
-
-        def pct(vals, q):
-            return float(np.percentile(vals, q)) if vals else 0.0
-
-        ttfts = [o.ttft_s for o in outputs if o.ttft_s is not None]
-        tpots = [o.tpot_s for o in outputs if o.tpot_s is not None]
-        qdels = [o.queue_delay_s for o in outputs
-                 if o.queue_delay_s is not None]
-        pool_kw = {}
+        pool_kw = None
         if eng.pool is not None:
             pool = eng.pool
             pool.check_invariants()    # engine teardown: zero leaked pages
@@ -453,45 +530,40 @@ class ServeSession:
                 # next init_decode_state rebuilds the pool from kv_plan)
                 eng.kv_plan = self._ladder[0]
             pool_kw = dict(
-                pool_pages_total=pool.num_pages,
-                pool_pages_peak=pool.peak_pages,
-                pool_page_size=pool.page_size,
+                pages_total=pool.num_pages,
+                pages_peak=pool.peak_pages,
+                page_size=pool.page_size,
                 prefix_hits=pool.prefix_hits,
                 prefix_hit_tokens=pool.prefix_hit_tokens,
-                prefix_hit_rate=(pool.prefix_hit_tokens / pool.prompt_tokens
-                                 if pool.prompt_tokens else 0.0),
+                prompt_tokens=pool.prompt_tokens,
                 cow_copies=pool.cow_copies,
                 kv_bytes_peak=(pool.peak_pages * eng._page_bytes
                                + self.num_slots
                                * eng._nonpaged_bytes_per_slot()))
-        spec_m = self.spec_m
-        return outputs, ServeStats(
-            decode_steps=len(self.occupancy) * self.chunk,
-            generated_tokens=self.generated,
+        local = MetricsRegistry()
+        publish_session(
+            local, replica=self.replica_id, outputs=outputs,
             occupancy=(float(np.mean(self.occupancy))
                        if self.occupancy else 0.0),
-            num_chunks=len(self.occupancy), admissions=self.admissions,
-            ttft_p50_s=pct(ttfts, 50), ttft_p95_s=pct(ttfts, 95),
-            tpot_p50_s=pct(tpots, 50), tpot_p95_s=pct(tpots, 95),
-            queue_delay_p50_s=pct(qdels, 50),
-            queue_delay_p95_s=pct(qdels, 95),
-            preemptions=sched.preemptions, timeouts=sched.timeouts,
-            cancelled=sched.cancels, prefill_chunks=self.prefill_chunks,
-            decode_gap_p50_s=pct(self.gaps, 50),
-            decode_gap_p95_s=pct(self.gaps, 95),
-            decode_gap_max_s=(max(self.gaps) if self.gaps else 0.0),
-            spec_rounds=spec_m["rounds"],
-            draft_proposed=spec_m["proposed"],
-            draft_accepted=spec_m["accepted"],
-            acceptance_rate=(spec_m["accepted"] / spec_m["proposed"]
-                             if spec_m["proposed"] else 0.0),
-            tokens_per_round=(spec_m["committed"] / spec_m["rounds"]
-                              if spec_m["rounds"] else 0.0),
-            tuned=eng.tuned,
+            num_chunks=len(self.occupancy), chunk=self.chunk,
+            admissions=self.admissions, generated=self.generated,
+            prefill_chunks=self.prefill_chunks, gaps=self.gaps,
+            spec_m=self.spec_m,
+            spec_labels=(obs_labels(eng.spec) if self.spec else None),
             watchdog_trips=self.watchdog_trips,
             degraded_steps=self.degraded_steps,
-            degrade_transitions=len(self.transitions),
-            kv_tier_steps=tuple(self.tier_steps), **pool_kw)
+            transitions=len(self.transitions),
+            tier_steps=self.tier_steps,
+            tier_labels=kv_tier_labels(self._ladder),
+            tuned=eng.tuned, pool=pool_kw,
+            device_times=self.device_times, host_gaps=self.host_gaps)
+        installed = obs.metrics()
+        if installed is not None:
+            installed.merge(local)
+        pf = obs.profile()
+        if pf is not None:
+            pf.stop()
+        return outputs, ServeStats.from_registry(local)
 
     def run(self):
         """Drain the stream to completion (single-engine serve loop). Any

@@ -105,6 +105,12 @@ class SpecConfig:
                     "cache segmentation must match the full target stack")
 
 
+def obs_labels(cfg: SpecConfig) -> dict:
+    """Metric labels for the spec counters (obs/serve_metrics.py): the
+    two knobs that change the acceptance/throughput trade-off."""
+    return {"k": str(cfg.k), "source": cfg.draft_source}
+
+
 class SpecMetrics(NamedTuple):
     """Per-chunk device-side counters (summed over rounds and slots)."""
     proposed: jax.Array    # draft tokens proposed to live slots
